@@ -1,0 +1,79 @@
+"""Paper Table 1: time complexity. Measures wall-clock per call vs sequence
+length for exact O(n^2), Nystrom O(n) and Spectral-Shift O(n) attention, and
+fits the empirical scaling exponent ``t ~ n^alpha``.
+
+Expected: alpha(full) ~ 2, alpha(nystrom) ~ 1, alpha(spectral_shift) ~ 1.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.attention import (
+    SSConfig,
+    chunked_attention,
+    full_attention,
+    nystrom_attention,
+    spectral_shift_attention,
+)
+
+NS = (512, 1024, 2048, 4096)
+C = 64
+D = 64
+
+
+def _time(fn, *args, reps=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def _fit_alpha(ns, ts) -> float:
+    return float(np.polyfit(np.log(ns), np.log(ts), 1)[0])
+
+
+def run(csv_rows: list[str]) -> None:
+    key = jax.random.PRNGKey(0)
+    impls = {
+        "full": jax.jit(lambda q, k, v: full_attention(q, k, v)),
+        "nystrom": jax.jit(
+            lambda q, k, v: nystrom_attention(q, k, v, num_landmarks=C)
+        ),
+        "spectral_shift": jax.jit(
+            lambda q, k, v: spectral_shift_attention(
+                q, k, v, SSConfig(num_landmarks=C)
+            )
+        ),
+    }
+    times: dict[str, list[float]] = {k: [] for k in impls}
+    for n in NS:
+        kq, kk, kv, key = jax.random.split(key, 4)
+        q = jax.random.normal(kq, (1, n, D)) * 0.5
+        k = jax.random.normal(kk, (1, n, D)) * 0.5
+        v = jax.random.normal(kv, (1, n, D))
+        for name, fn in impls.items():
+            us = _time(fn, q, k, v)
+            times[name].append(us)
+            csv_rows.append(f"complexity,{name},n={n},{us:.1f}")
+    for name in impls:
+        alpha = _fit_alpha(NS, times[name])
+        csv_rows.append(f"complexity_exponent,{name},alpha,{alpha:.2f}")
+    # Table-1 verdict: linear methods must scale with alpha well below full's.
+    a_full = _fit_alpha(NS, times["full"])
+    a_ss = _fit_alpha(NS, times["spectral_shift"])
+    csv_rows.append(
+        f"complexity_verdict,ss_vs_full,alpha_gap,{a_full - a_ss:.2f}"
+    )
+
+
+if __name__ == "__main__":
+    rows: list[str] = []
+    run(rows)
+    print("\n".join(rows))

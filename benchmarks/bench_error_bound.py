@@ -1,0 +1,107 @@
+"""Paper §7: the error bound of eq. (12),
+
+    E <= 1 + ||A+||_inf (1 + delta ||A+||_inf)(1 - ||A+ - Z*||_inf)
+
+with Z* the iterative pseudoinverse of eq. (11). We measure the actual
+infinity-norm error E of the linear-time approximation against the exact
+attention matrix and report E alongside the bound, sweeping the iteration
+count T (which controls ||A+ - Z*||).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.attention import SSConfig, _softmax, spectral_shift_attention
+from repro.core.landmarks import segment_means
+from repro.core.pinv import iterative_pinv
+from repro.core.spectral_shift import ss_core
+
+N, C, D = 256, 32, 24
+
+
+def _inf_norm(m):
+    return float(jnp.max(jnp.sum(jnp.abs(m), axis=-1)))
+
+
+def _bound_sweep(csv_rows, tag, a, exact, f, b_mat, n):
+    """Eq.-(12) bound vs actual error across pinv iteration counts."""
+    a_pinv = jnp.linalg.pinv(a)
+    for t in (2, 4, 6, 10, 20):
+        z = iterative_pinv(a, num_iters=t)
+        core = ss_core(a, method="iterative", pinv_iters=t)
+        delta = float(core.delta[..., 0, 0])
+        approx = f @ core.u @ b_mat + delta * jnp.eye(n)
+        e_actual = _inf_norm(exact - approx)
+        na = _inf_norm(a_pinv)
+        nz = _inf_norm(a_pinv - z)
+        bound = 1 + na * (1 + delta * na) * (1 - min(nz, 1.0))
+        csv_rows.append(f"error_bound_{tag},T={t},E_actual,{e_actual:.4f}")
+        csv_rows.append(f"error_bound_{tag},T={t},bound_eq12,{bound:.4f}")
+        csv_rows.append(f"error_bound_{tag},T={t},holds,{int(e_actual <= bound)}")
+        csv_rows.append(f"error_bound_{tag},T={t},pinv_residual_inf,{nz:.4f}")
+
+
+def run(csv_rows: list[str]) -> None:
+    # Regime 1 (well-conditioned core): cluster-structured tokens give a
+    # well-conditioned A_s, so the eq.-(11) iteration actually converges and
+    # the eq.-(12) bound is non-vacuous.
+    rng = np.random.default_rng(0)
+    centers = rng.normal(size=(C, D))
+    centers = centers / np.linalg.norm(centers, axis=-1, keepdims=True) * 4.0
+    # Segment-aligned clusters (segment j's tokens all near center j) so the
+    # landmark core is sharply diagonal -> well-conditioned.
+    toks = centers[np.arange(N) // (N // C)] + rng.normal(size=(N, D)) * 0.02
+    qw = jnp.asarray(toks[None], jnp.float32)
+    scale_w = 1 / np.sqrt(D)
+    exact_w = _softmax(jnp.einsum("bnd,bmd->bnm", qw, qw) * scale_w)[0]
+    q_lw = segment_means(qw, C)
+    f_w = _softmax(jnp.einsum("bnd,bcd->bnc", qw, q_lw) * scale_w)[0]
+    a_w = _softmax(jnp.einsum("bcd,bed->bce", q_lw, q_lw) * scale_w)[0]
+    b_w = _softmax(jnp.einsum("bcd,bnd->bcn", q_lw, qw) * scale_w)[0]
+    _bound_sweep(csv_rows, "clustered", a_w, exact_w, f_w, b_w, N)
+
+    # Regime 2 (paper's raw setting): self-similar gaussian tokens — the
+    # core is ill-conditioned, the iteration under-converges and the bound
+    # degenerates to ~1 (still holds, but vacuously). Reported faithfully.
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, N, D)) * 0.6
+    k = q  # self-similar tokens: the attention-relevant regime
+    scale = 1 / np.sqrt(D)
+
+    exact = _softmax(jnp.einsum("bnd,bmd->bnm", q, k) * scale)[0]
+    q_l = segment_means(q, C)
+    k_l = segment_means(k, C)
+    f = _softmax(jnp.einsum("bnd,bcd->bnc", q, k_l) * scale)[0]
+    a = _softmax(jnp.einsum("bcd,bed->bce", q_l, k_l) * scale)[0]
+    b = _softmax(jnp.einsum("bcd,bnd->bcn", q_l, k) * scale)[0]
+
+    a_pinv = jnp.linalg.pinv(a)
+    for t in (2, 4, 6, 10):
+        z = iterative_pinv(a, num_iters=t)
+        core = ss_core(a, method="iterative", pinv_iters=t)
+        delta = float(core.delta[..., 0, 0])
+        approx = f @ core.u @ b + delta * jnp.eye(N)
+        e_actual = _inf_norm(exact - approx)
+        na = _inf_norm(a_pinv)
+        nz = _inf_norm(a_pinv - z)
+        bound = 1 + na * (1 + delta * na) * (1 - min(nz, 1.0))
+        csv_rows.append(
+            f"error_bound,T={t},E_actual,{e_actual:.4f}"
+        )
+        csv_rows.append(
+            f"error_bound,T={t},bound_eq12,{bound:.4f}"
+        )
+        csv_rows.append(
+            f"error_bound,T={t},holds,{int(e_actual <= bound)}"
+        )
+        csv_rows.append(
+            f"error_bound,T={t},pinv_residual_inf,{nz:.4f}"
+        )
+
+
+if __name__ == "__main__":
+    rows: list[str] = []
+    run(rows)
+    print("\n".join(rows))

@@ -1,0 +1,58 @@
+"""Paper Figure 2: spectrum analysis. Cumulative-eigenvalue curves of the
+exact self-attention matrix, the Nystrom (prototype) approximation and the
+Spectral-Shift approximation.
+
+The paper's claim: the SS approximation has NO long flat tail of zero
+eigenvalues (it is not low-rank), so its cumulative curve tracks the exact
+matrix, while the prototype curve saturates at rank c.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.matrix_approx import approximate_spsd, sample_columns
+
+N, C = 256, 32
+
+
+def _attention_matrix(seed=0, n=N, d=24, scale=0.8):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, d)) * scale
+    s = x @ x.T / np.sqrt(d)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    return p / p.sum(-1, keepdims=True)
+
+
+def cumulative_spectrum(m: jnp.ndarray) -> np.ndarray:
+    sv = np.asarray(jnp.linalg.svd(m, compute_uv=False))
+    return np.cumsum(sv) / sv.sum()
+
+
+def run(csv_rows: list[str]) -> None:
+    attn = _attention_matrix()
+    cols = sample_columns(N, C)
+    mats = {
+        "exact": attn,
+        "nystrom": approximate_spsd(attn, cols, "prototype"),
+        "spectral_shift": approximate_spsd(attn, cols, "modified_ss"),
+    }
+    curves = {k: cumulative_spectrum(m) for k, m in mats.items()}
+    # Numeric rank (99% of spectral mass).
+    for name, cum in curves.items():
+        r99 = int(np.searchsorted(cum, 0.99)) + 1
+        csv_rows.append(f"spectrum,{name},rank99,{r99}")
+    for idx in (8, 32, 64, 128, 255):
+        for name, cum in curves.items():
+            csv_rows.append(f"spectrum_cumulative,{name},i={idx},{cum[idx]:.4f}")
+    # Verdict: SS keeps a long spectrum (rank99 far beyond c), Nystrom can't.
+    r_ny = int(np.searchsorted(curves["nystrom"], 0.99)) + 1
+    r_ss = int(np.searchsorted(curves["spectral_shift"], 0.99)) + 1
+    csv_rows.append(f"spectrum_verdict,ss_rank_gain,x,{r_ss / max(r_ny, 1):.1f}")
+
+
+if __name__ == "__main__":
+    rows: list[str] = []
+    run(rows)
+    print("\n".join(rows))

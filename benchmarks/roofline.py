@@ -1,0 +1,196 @@
+"""Roofline analysis (§Roofline of EXPERIMENTS.md).
+
+Reads the dry-run JSONs (results/dryrun/*__single*.json) and derives, per
+(arch x shape) cell, the three roofline terms on TPU v5e:
+
+    t_compute    = HLO_FLOPs_per_device    / 197e12   [s]  (bf16 peak/chip)
+    t_memory     = HLO_bytes_per_device    / 819e9    [s]  (HBM bw/chip)
+    t_collective = moved_bytes_per_device  / 50e9     [s]  (ICI link bw)
+
+All three numerators are per-device quantities: ``cost_analysis`` runs on
+the post-SPMD partitioned module, and the dry-run's L=2/L=4 probe
+extrapolates the scan-hidden layer body to the full depth (XLA counts while
+bodies once). ``moved_bytes`` models ring collectives:
+ag/a2a: out*(g-1)/g, ar: 2*out*(g-1)/g, rs: out*(g-1), cp: out.
+
+Also reports MODEL_FLOPS (6*N_active*D train / 2*N_active*D inference) and
+the usefulness ratio MODEL_FLOPS / HLO_FLOPs (catches remat/redundancy
+waste), the dominant term, and a rule-based note on what would move it.
+
+Usage:
+    python -m benchmarks.roofline [--dir results/dryrun] [--tag TAG]
+        [--format md|csv]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs.base import SHAPE_PRESETS
+from repro.configs.registry import ARCH_IDS, get_config
+
+PEAK_FLOPS = 197e12   # TPU v5e bf16 / chip
+HBM_BW = 819e9        # bytes/s / chip
+ICI_BW = 50e9         # bytes/s / link
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def active_params(arch: str) -> float:
+    """N_active: total params minus un-routed expert weights."""
+    cfg = get_config(arch)
+    from repro.models.model import model_specs
+    from repro.models.params import count_params
+
+    total = count_params(model_specs(cfg))
+    if cfg.moe:
+        inactive = (
+            cfg.num_layers * 3 * cfg.d_model * cfg.moe_d_ff
+            * (cfg.num_experts - cfg.top_k)
+        )
+        return total - inactive
+    return total
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    shape = SHAPE_PRESETS[shape_name]
+    n_act = active_params(arch)
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_act * tokens
+    # decode: one new token per sequence.
+    return 2.0 * n_act * shape.global_batch
+
+
+def load_cell(path: str) -> dict | None:
+    with open(path) as f:
+        d = json.load(f)
+    if d.get("status") != "ok":
+        return None
+    probe = d.get("probe") or {}
+    use_probe = "flops_extrapolated" in probe
+    flops = probe["flops_extrapolated"] if use_probe else d["flops_total"]
+    bytes_ = probe["bytes_extrapolated"] if use_probe else d["hlo_bytes_accessed"]
+    moved = (
+        probe["collective_moved_extrapolated"]
+        if use_probe
+        else sum(v["moved_bytes"] for v in d.get("collectives", {}).values())
+    )
+    return {
+        "arch": d["arch"],
+        "shape": d["shape"],
+        "devices": d["devices"],
+        "attention": d.get("attention", "?"),
+        "flops": flops,
+        "bytes": bytes_,
+        "moved": moved,
+        "probe": use_probe,
+        "state_bytes": d.get("state_bytes_per_device", 0),
+    }
+
+
+_NOTES = {
+    "compute": "compute-bound: cut HLO FLOPs (less remat, fewer landmark "
+               "FLOPs, larger c-blocks feeding the MXU)",
+    "memory": "memory-bound: cut bytes (chunked/flash attention so scores "
+              "never hit HBM, bf16 activations, fusion)",
+    "collective": "collective-bound: reshard (FSDP->TP ratio), overlap "
+                  "collectives with compute, or compress gradients",
+}
+
+
+def analyze(cell: dict) -> dict:
+    t_c = cell["flops"] / PEAK_FLOPS
+    t_m = cell["bytes"] / HBM_BW
+    t_x = cell["moved"] / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cell["arch"], cell["shape"])
+    mf_dev = mf / cell["devices"]
+    bound = max(terms.values())
+    return {
+        **cell,
+        "t_compute": t_c,
+        "t_memory": t_m,
+        "t_collective": t_x,
+        "dominant": dominant,
+        "model_flops_dev": mf_dev,
+        "useful_ratio": mf_dev / cell["flops"] if cell["flops"] else 0.0,
+        # Achievable MFU if the dominant term is the step time.
+        "roofline_mfu": (mf_dev / PEAK_FLOPS) / bound if bound else 0.0,
+        "note": _NOTES[dominant],
+    }
+
+
+def collect(dirpath: str, mesh: str = "single", tag: str = "") -> list[dict]:
+    rows = []
+    suffix = f"__{tag}" if tag else ""
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            path = os.path.join(dirpath, f"{arch}__{shape}__{mesh}{suffix}.json")
+            if not os.path.exists(path):
+                continue
+            cell = load_cell(path)
+            if cell:
+                rows.append(analyze(cell))
+    return rows
+
+
+def fmt_md(rows: list[dict]) -> str:
+    out = [
+        "| arch | shape | attn | t_comp (s) | t_mem (s) | t_coll (s) | "
+        "dominant | useful | roofline-MFU |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['attention']} "
+            f"| {r['t_compute']:.3f} | {r['t_memory']:.3f} "
+            f"| {r['t_collective']:.3f} | {r['dominant']} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_mfu'] * 100:.1f}% |"
+        )
+    return "\n".join(out)
+
+
+def fmt_csv(rows: list[dict]) -> str:
+    out = ["arch,shape,attention,t_compute,t_memory,t_collective,dominant,"
+           "useful_ratio,roofline_mfu"]
+    for r in rows:
+        out.append(
+            f"{r['arch']},{r['shape']},{r['attention']},{r['t_compute']:.4f},"
+            f"{r['t_memory']:.4f},{r['t_collective']:.4f},{r['dominant']},"
+            f"{r['useful_ratio']:.3f},{r['roofline_mfu']:.3f}"
+        )
+    return "\n".join(out)
+
+
+def run(csv_rows: list[str]) -> None:
+    """benchmarks.run entry: emit the roofline table as CSV rows."""
+    dirpath = ("results/dryrun_v2" if os.path.isdir("results/dryrun_v2")
+               else "results/dryrun")
+    rows = collect(dirpath)
+    for r in rows:
+        csv_rows.append(
+            f"roofline,{r['arch']}:{r['shape']},{r['dominant']},"
+            f"{r['roofline_mfu']:.3f}"
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--format", default="md", choices=["md", "csv"])
+    args = ap.parse_args()
+    rows = collect(args.dir, args.mesh, args.tag)
+    print(fmt_md(rows) if args.format == "md" else fmt_csv(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Benchmark harness entry point: one module per paper table/figure plus the
+roofline table. Prints ``name,case,metric,value`` CSV lines.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (
+    bench_accuracy,
+    bench_complexity,
+    bench_error_bound,
+    bench_spectrum,
+    roofline,
+)
+
+SUITES = {
+    "complexity": bench_complexity.run,      # paper Table 1
+    "spectrum": bench_spectrum.run,          # paper Figure 2
+    "accuracy": bench_accuracy.run,          # paper Theorem 1
+    "error_bound": bench_error_bound.run,    # paper §7 eq. (12)
+    "roofline": roofline.run,                # EXPERIMENTS.md §Roofline
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=list(SUITES))
+    args = ap.parse_args()
+
+    rows: list[str] = []
+    failures = 0
+    for name, fn in SUITES.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        try:
+            fn(rows)
+            rows.append(f"suite,{name},elapsed_s,{time.time() - t0:.1f}")
+        except Exception as e:  # keep the harness going; report at the end
+            failures += 1
+            rows.append(f"suite,{name},ERROR,{type(e).__name__}: {e}")
+    print("name,case,metric,value")
+    print("\n".join(rows))
+    if failures:
+        print(f"# {failures} suite(s) failed", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

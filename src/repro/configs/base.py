@@ -1,0 +1,163 @@
+"""Model/run configuration dataclasses shared by every architecture."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    # identity
+    name: str = "model"
+    family: str = "dense"  # dense | moe | ssm | hybrid | audio | vlm
+
+    # trunk
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab_size: int = 32000
+    head_dim: int = 0            # 0 => d_model // num_heads
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    act: str = "swiglu"          # swiglu | gelu
+
+    # attention approximation (the paper's technique)
+    attention_impl: str = "full"             # training-time self-attention
+    decode_attention_impl: str = "spectral_shift"  # KV-cache decode path
+    encoder_attention_impl: str = "spectral_shift"  # bidirectional sites
+    num_landmarks: int = 64
+    ss_method: str = "iterative"
+    pinv_iters: int = 6
+    include_shift_identity: bool = True
+    landmark_via_matmul: bool = False  # GEMM segment-means: required for
+                                       # sharded-seq (context-parallel) runs
+    cast_params_once: bool = True      # bf16 working copy cast at step entry
+                                       # (collectives move bf16, not fp32)
+    kernels_interpret: bool = True     # Pallas interpret mode (CPU); the TPU
+                                       # launcher flips this to False
+
+    # MoE
+    moe: bool = False
+    moe_impl: str = "gspmd"      # gspmd (implicit) | ep (shard_map all-to-all)
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.001
+
+    # MLA (DeepSeek-V2 style)
+    mla: bool = False
+    kv_lora_rank: int = 0
+    rope_head_dim: int = 0
+
+    # SSM / hybrid
+    ssm_state: int = 0
+    conv_width: int = 4
+    slstm_every: int = 0         # xLSTM: every k-th block is sLSTM (0 = none)
+    ssm_chunk: int = 256         # chunk length for chunk-parallel SSM scans
+
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    cross_attention: bool = False
+    encoder_seq_ratio: float = 1.0  # encoder length relative to shape seq_len
+
+    # modality frontend stub
+    frontend: str = "none"       # none | audio_frames | image_patches
+    num_patches: int = 0         # vlm: image-patch count per example
+
+    # numerics / execution
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    scan_layers: bool = True
+    remat: str = "full"          # none | full | dots
+    unroll_scans: bool = False   # probe mode: unroll chunk scans so XLA
+                                 # cost_analysis sees every body (math-identical)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded up to a multiple of 256 so TP-16 shards evenly."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def is_decoder_only(self) -> bool:
+        return self.encoder_layers == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str                 # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str                 # train | prefill | decode
+
+
+SHAPE_PRESETS: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Optimizer / trainer knobs (used by the real training driver)."""
+
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    grad_clip: float = 1.0
+    microbatches: int = 1        # grad-accumulation steps
+    opt_state_dtype: str = "float32"
+    grad_compression: Optional[str] = None  # None | "int8"
+    checkpoint_every: int = 200
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep_checkpoints: int = 3
+    seed: int = 0
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Shrink a config to smoke-test size, preserving its family shape
+    (GQA ratios, MoE top-k, MLA ranks scale down proportionally)."""
+    kv_ratio = max(1, cfg.num_heads // max(cfg.num_kv_heads, 1))
+    heads = 4
+    small: dict = dict(
+        num_layers=2,
+        d_model=128,
+        num_heads=heads,
+        num_kv_heads=max(1, heads // kv_ratio),
+        d_ff=256,
+        vocab_size=512,
+        head_dim=32 if cfg.head_dim else 0,
+        num_landmarks=16,
+        scan_layers=cfg.scan_layers,
+        remat="none",
+        compute_dtype="float32",
+    )
+    if cfg.moe:
+        small.update(num_experts=8, num_shared_experts=min(cfg.num_shared_experts, 1),
+                     top_k=min(cfg.top_k, 2), moe_d_ff=64)
+    if cfg.mla:
+        small.update(kv_lora_rank=32, rope_head_dim=16)
+    if cfg.ssm_state:
+        small.update(ssm_state=8)
+    if cfg.encoder_layers:
+        small.update(encoder_layers=2)
+    if cfg.num_patches:
+        small.update(num_patches=16)
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

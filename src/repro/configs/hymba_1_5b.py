@@ -1,0 +1,9 @@
+"""Hymba-1.5B [arXiv:2411.13676]: parallel attention + mamba heads."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b", family="hybrid",
+    num_layers=32, d_model=1600, num_heads=25, num_kv_heads=5,
+    d_ff=5504, vocab_size=32001, ssm_state=16, conv_width=4,
+    attention_impl="chunked",
+)

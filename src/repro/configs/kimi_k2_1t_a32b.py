@@ -1,0 +1,16 @@
+"""Kimi-K2 1T-A32B [arXiv:2501.kimi2, paper-table]: trillion-param MoE.
+
+Per the assignment sheet: GQA (64H, kv=8), 384 routed experts top-8,
+expert d_ff=2048; we add 1 shared expert per the K2 report. head_dim =
+d_model // num_heads = 112 as given (the sheet's GQA spec, not MLA).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    num_layers=61, d_model=7168, num_heads=64, num_kv_heads=8,
+    d_ff=2048, vocab_size=163840,
+    moe=True, num_experts=384, num_shared_experts=1, top_k=8, moe_d_ff=2048,
+    capacity_factor=1.0, rope_theta=5e4,
+    attention_impl="chunked",
+)

@@ -1,0 +1,12 @@
+"""LLaVA-NeXT-34B [hf:llava-hf]: anyres-tiling VLM; the vision tower is a
+STUB (input_specs provides pre-extracted 1024-d patch features), projected
+by a 2-layer MM adapter into a dense GQA decoder backbone."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b", family="vlm",
+    num_layers=60, d_model=7168, num_heads=56, num_kv_heads=8,
+    d_ff=20480, vocab_size=64000, rope_theta=5e6,
+    num_patches=2880,  # anyres: 4 tiles x 576 + base 576
+    attention_impl="chunked",
+)

@@ -1,0 +1,84 @@
+"""Architecture registry + per-shape input specs (abstract or concrete)."""
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPE_PRESETS, ModelConfig, ShapeConfig
+from repro.models.params import abstract_params
+from repro.serve.kv_cache import cache_specs
+
+ARCH_IDS = [
+    "qwen2-72b",
+    "qwen2-7b",
+    "deepseek-67b",
+    "granite-20b",
+    "xlstm-350m",
+    "whisper-base",
+    "hymba-1.5b",
+    "deepseek-v2-lite-16b",
+    "kimi-k2-1t-a32b",
+    "llava-next-34b",
+]
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+_MODULES["paper-bert"] = "paper_bert"
+
+ENCODER_SEQ = 1500  # whisper stub frame count
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def list_archs() -> list[str]:
+    return list(ARCH_IDS)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> tuple[dict, dict]:
+    """(ShapeDtypeStruct tree, logical-axes tree) for one (arch, shape) cell.
+
+    train/prefill lower ``train_step``-style full-sequence inputs; decode
+    lowers ``serve_step`` inputs: one new token + the full KV cache.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        specs: dict = {}
+        axes: dict = {}
+        if cfg.family == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct((b, ENCODER_SEQ, cfg.d_model), jnp.float32)
+            axes["frames"] = ("batch", None, None)
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+            axes["tokens"] = ("batch", "seq")
+        elif cfg.family == "vlm":
+            p = min(cfg.num_patches, s // 2)
+            specs["patches"] = jax.ShapeDtypeStruct((b, p, 1024), jnp.float32)
+            axes["patches"] = ("batch", None, None)
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s - p), i32)
+            axes["tokens"] = ("batch", "seq")
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+            axes["tokens"] = ("batch", "seq")
+        return specs, axes
+
+    # decode: one new token against a seq_len cache
+    from repro.models.params import logical_axes
+
+    cspecs = cache_specs(cfg, b, s)
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+        "cache": abstract_params(cspecs, dtype=jnp.dtype(cfg.compute_dtype)),
+    }
+    axes = {
+        "tokens": ("cache_batch", None),
+        "cache": logical_axes(cspecs),
+    }
+    return specs, axes
+
+
+def shape_preset(name: str) -> ShapeConfig:
+    return SHAPE_PRESETS[name]

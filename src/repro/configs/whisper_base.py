@@ -1,0 +1,15 @@
+"""Whisper-base [arXiv:2212.04356]: encoder-decoder; conv frontend is a STUB
+(input_specs provides precomputed frame embeddings, per the assignment).
+The encoder is the paper's exact bidirectional setting, so its self-attention
+uses spectral shifting by default."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base", family="audio",
+    num_layers=6, encoder_layers=6, cross_attention=True,
+    d_model=512, num_heads=8, num_kv_heads=8,
+    d_ff=2048, vocab_size=51865, act="gelu", rope_theta=0.0,
+    scan_layers=False,
+    attention_impl="chunked", encoder_attention_impl="spectral_shift",
+    num_landmarks=32,
+)

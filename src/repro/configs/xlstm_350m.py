@@ -1,0 +1,15 @@
+"""xLSTM-350M [arXiv:2405.04517]: attention-free sLSTM + mLSTM blocks.
+
+The paper's spectral-shifting technique is inapplicable (no softmax
+attention) — see DESIGN.md §6. Sub-quadratic natively; long_500k runs as a
+recurrent decode.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m", family="ssm",
+    num_layers=24, d_model=1024, num_heads=4, num_kv_heads=4,
+    d_ff=0, vocab_size=50304, slstm_every=6, conv_width=4,
+    scan_layers=False, attention_impl="none", decode_attention_impl="none",
+    tie_embeddings=True,
+)

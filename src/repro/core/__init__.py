@@ -1,0 +1,30 @@
+"""The paper's primary contribution: linear-time self-attention approximation
+by Modified Spectral Shifting (Verma, 2021), plus the Nystromformer baseline
+it improves on. See DESIGN.md for the math and the faithfulness notes."""
+
+from repro.core.attention import (
+    SSConfig,
+    attention,
+    full_attention,
+    nystrom_attention,
+    spectral_shift_attention,
+)
+from repro.core.landmarks import segment_means
+from repro.core.matrix_approx import approximate_spsd, flat_tail_spsd
+from repro.core.pinv import iterative_pinv, svd_pinv
+from repro.core.spectral_shift import SSCore, ss_core
+
+__all__ = [
+    "SSConfig",
+    "SSCore",
+    "attention",
+    "approximate_spsd",
+    "flat_tail_spsd",
+    "full_attention",
+    "iterative_pinv",
+    "nystrom_attention",
+    "segment_means",
+    "spectral_shift_attention",
+    "ss_core",
+    "svd_pinv",
+]

@@ -1,0 +1,68 @@
+"""Segment-means landmark selection (paper §2.3, eq. (1)).
+
+``n`` tokens are split into ``m`` contiguous segments and each segment is
+mean-pooled. The paper assumes ``n % m == 0`` ("we can pad inputs"); we
+implement the general case by zero-padding to the next multiple and dividing
+by true per-segment counts, so landmarks are exact means of what is present.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_means(
+    x: jnp.ndarray, num_landmarks: int, via_matmul: bool = False
+) -> jnp.ndarray:
+    """Mean-pool ``x`` (..., n, d) into (..., m, d) contiguous segment means.
+
+    Two implementations of the same math:
+
+    * reshape path (default): fp32 reshape + mean — cheapest on a single
+      device, but the fp32 upcast + axis-split reshape of a *sharded* seq
+      axis makes GSPMD all-gather the full (..., n, d) tensor (measured:
+      4 x 939MB/layer on the 32k prefill cell, EXPERIMENTS.md §Perf it4).
+    * ``via_matmul=True``: means = onehot(seg)ᵀ x / counts as one GEMM with
+      fp32 accumulation. The contraction over the sharded n axis partitions
+      cleanly (tiny (m, d) psum instead of a full gather) and feeds the MXU.
+    """
+    n, d = x.shape[-2], x.shape[-1]
+    m = int(num_landmarks)
+    if m <= 0:
+        raise ValueError(f"num_landmarks must be positive, got {m}")
+    if n <= m:
+        # Degenerate: every token is its own landmark (exact attention).
+        return x
+    seg = -(-n // m)  # ceil(n / m) tokens per segment
+    pad = seg * m - n
+    counts = (
+        jnp.clip(n - jnp.arange(m) * seg, 1, seg).astype(jnp.float32)
+        if pad
+        else float(seg)
+    )
+    if via_matmul:
+        # (m, n) one-hot segment map, in x's dtype so the GEMM stays on the
+        # bf16 MXU path; accumulation forced to fp32.
+        onehot = (jnp.arange(n) // seg == jnp.arange(m)[:, None]).astype(x.dtype)
+        sums = jax.lax.dot_general(
+            onehot, x,
+            dimension_numbers=(((1,), (x.ndim - 2,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (m, ..., d)
+        sums = jnp.moveaxis(sums, 0, -2)
+        means = sums / (counts[..., :, None] if pad else counts)
+        return means.astype(x.dtype)
+    xf = x.astype(jnp.float32)
+    if pad:
+        widths = [(0, 0)] * (x.ndim - 2) + [(0, pad), (0, 0)]
+        xf = jnp.pad(xf, widths)
+    xf = xf.reshape(*x.shape[:-2], m, seg, d)
+    sums = xf.sum(axis=-2)
+    means = sums / (counts[..., :, None] if pad else counts)
+    return means.astype(x.dtype)
+
+
+def segment_of(position: jnp.ndarray, n: int, num_landmarks: int) -> jnp.ndarray:
+    """Map token positions (0..n-1) to their landmark segment index."""
+    seg = -(-n // num_landmarks)
+    return position // seg

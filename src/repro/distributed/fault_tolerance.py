@@ -1,0 +1,98 @@
+"""Fault tolerance & elasticity primitives for 1000+-node operation.
+
+This container is one CPU, so hardware failures are *simulated*; the logic
+here is the production control plane a real deployment wires to its
+heartbeat transport:
+
+* ``HeartbeatMonitor`` — per-host liveness + step-time EWMA straggler
+  detection (flags hosts slower than ``straggler_factor`` x the fleet median).
+* ``ElasticPlan`` — given the surviving host count, choose the largest
+  runnable mesh (keeping the TP axis intact, shrinking DP), and map a saved
+  checkpoint onto it (checkpoints are mesh-agnostic, see checkpointer.py).
+* ``FailureInjector`` — deterministic chaos hooks used by the tests.
+
+The trainer consumes these through ``repro.train.trainer.Trainer``: on a
+detected failure it checkpoints (if possible), re-plans the mesh, restores,
+and continues — the integration test exercises exactly that path on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+
+@dataclasses.dataclass
+class HostState:
+    last_beat: float
+    step_time_ewma: float = 0.0
+
+
+class HeartbeatMonitor:
+    def __init__(self, hosts: list[str], timeout_s: float = 60.0,
+                 straggler_factor: float = 2.0, ewma: float = 0.9):
+        self.timeout_s = timeout_s
+        self.straggler_factor = straggler_factor
+        self.ewma = ewma
+        now = time.monotonic()
+        self.hosts = {h: HostState(last_beat=now) for h in hosts}
+
+    def beat(self, host: str, step_time_s: float, now: Optional[float] = None):
+        st = self.hosts[host]
+        st.last_beat = time.monotonic() if now is None else now
+        st.step_time_ewma = (
+            step_time_s
+            if st.step_time_ewma == 0.0
+            else self.ewma * st.step_time_ewma + (1 - self.ewma) * step_time_s
+        )
+
+    def dead_hosts(self, now: Optional[float] = None) -> list[str]:
+        now = time.monotonic() if now is None else now
+        return [h for h, st in self.hosts.items()
+                if now - st.last_beat > self.timeout_s]
+
+    def stragglers(self) -> list[str]:
+        times = sorted(st.step_time_ewma for st in self.hosts.values()
+                       if st.step_time_ewma > 0)
+        if not times:
+            return []
+        median = times[len(times) // 2]
+        return [
+            h for h, st in self.hosts.items()
+            if st.step_time_ewma > self.straggler_factor * median
+        ]
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    """Largest runnable (data, model) mesh for a surviving chip count."""
+
+    data: int
+    model: int
+    dropped_chips: int
+
+    @staticmethod
+    def plan(alive_chips: int, model_parallel: int, max_data: int) -> "ElasticPlan":
+        if alive_chips < model_parallel:
+            raise RuntimeError(
+                f"cannot keep TP={model_parallel} with {alive_chips} chips"
+            )
+        data = min(alive_chips // model_parallel, max_data)
+        # Data-parallel degree must divide the global batch cleanly; keep the
+        # largest power-of-two not exceeding it for stable microbatching.
+        p = 1
+        while p * 2 <= data:
+            p *= 2
+        used = p * model_parallel
+        return ElasticPlan(data=p, model=model_parallel,
+                           dropped_chips=alive_chips - used)
+
+
+class FailureInjector:
+    """Deterministic failure schedule for chaos tests: {step: [hosts]}."""
+
+    def __init__(self, schedule: dict[int, list[str]]):
+        self.schedule = schedule
+
+    def failures_at(self, step: int) -> list[str]:
+        return self.schedule.get(step, [])

@@ -1,0 +1,159 @@
+"""Logical-axis sharding: MaxText-style rules mapping logical tensor axes to
+mesh axes, applied to parameters (via ``ParamSpec.axes``) and activations
+(via ``logical_constraint`` calls inside model code).
+
+Mesh axes: ("pod",) "data", "model" — see launch/mesh.py. The rules encode
+DP (batch over pod+data), FSDP/ZeRO (weight embed dim over data), TP (heads /
+ff / vocab over model), EP (experts over data) and SP (long-context sequence
+over data). Activations only use constraints at layer boundaries; XLA GSPMD
+propagates the rest.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axes (tuple => sharded over multiple mesh axes).
+# Entries may be overridden per-run (e.g. SP for long_500k).
+DEFAULT_RULES: dict[str, object] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_sp": "data",          # sequence-parallel sites (long-context decode)
+    "embed_act": None,
+    "heads_act": "model",
+    "ff_act": "model",
+    "vocab_act": "model",
+    "experts_act": "data",
+    # parameters
+    "vocab": "model",
+    "embed": "data",           # FSDP shard of weight matrices
+    "embed_unsharded": None,   # MoE expert weights keep d unsharded (E->data)
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "moe_ff": "model",
+    "experts": ("pod", "data"),  # EP spans pods: expert weights + moments
+                                 # must NOT replicate across pods (1T-scale)
+    "kv_lora": None,
+    "layers": None,
+    "cache_seq": None,         # KV-cache sequence dim ("data" under SP)
+    "cache_batch": ("pod", "data"),
+}
+
+_state = threading.local()
+
+
+def _rules() -> Optional[dict]:
+    return getattr(_state, "rules", None)
+
+
+def _mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def sharding_rules(mesh: Mesh, overrides: Optional[dict] = None):
+    """Activate logical-axis sharding for model code within this context."""
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+    # Drop mesh axes that don't exist (single-pod mesh has no "pod").
+    def fix(v):
+        if v is None:
+            return None
+        axes = (v,) if isinstance(v, str) else tuple(v)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        if not axes:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+    _state.rules = {k: fix(v) for k, v in rules.items()}
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.rules = None
+        _state.mesh = None
+
+
+def spec_for(axes: tuple) -> P:
+    """Logical axes tuple -> PartitionSpec under the active rules."""
+    rules = _rules() or {}
+    used: set = set()
+    parts = []
+    for ax in axes:
+        target = rules.get(ax) if ax is not None else None
+        # A mesh axis may appear only once in a PartitionSpec.
+        if target is not None:
+            flat = (target,) if isinstance(target, str) else tuple(target)
+            flat = tuple(a for a in flat if a not in used)
+            used.update(flat)
+            target = None if not flat else (flat if len(flat) > 1 else flat[0])
+        parts.append(target)
+    return P(*parts)
+
+
+def logical_constraint(x: jax.Array, axes: tuple) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op outside a mesh ctx."""
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec_for(axes))
+    )
+
+
+def named_sharding(mesh: Mesh, axes: tuple) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(axes))
+
+
+def _axis_size(mesh: Mesh, target) -> int:
+    if target is None:
+        return 1
+    names = (target,) if isinstance(target, str) else target
+    n = 1
+    for name in names:
+        n *= mesh.shape[name]
+    return n
+
+
+def divisible_spec(mesh: Mesh, axes: tuple, shape: tuple) -> P:
+    """PartitionSpec under the rules, dropping any dim whose size is not
+    divisible by its mesh-axis product (jit in_shardings require exact
+    divisibility; e.g. 28 heads cannot shard over a 16-way model axis)."""
+    base = spec_for(axes)
+    parts = []
+    for dim, target in zip(shape, tuple(base) + (None,) * (len(shape) - len(base))):
+        if target is not None and dim % _axis_size(mesh, target) != 0:
+            target = None
+        parts.append(target)
+    return P(*parts)
+
+
+def shardings_for(mesh: Mesh, axes_tree, abstract_tree):
+    """NamedShardings for an abstract pytree, divisibility-validated."""
+    return jax.tree.map(
+        lambda axes, leaf: NamedSharding(
+            mesh, divisible_spec(mesh, axes, leaf.shape)
+        ),
+        axes_tree,
+        abstract_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        ),
+    )
+
+
+def param_shardings(mesh: Mesh, axes_tree):
+    """Map a pytree of logical-axes tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda axes: named_sharding(mesh, axes),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the paper's O(n) attention hot spots.
+
+``ss_attention.py`` holds the two pl.pallas_call kernels (BlockSpec VMEM
+tiling), ``ops.py`` the jitted wrappers, ``ref.py`` the pure-jnp oracles.
+Validated in interpret mode on CPU; TPU v5e is the compile target.
+"""
+
+from repro.kernels.ops import nystrom_attention_fused, ss_attention_fused
+from repro.kernels.ss_attention import landmark_summary, query_side
+
+__all__ = [
+    "landmark_summary",
+    "nystrom_attention_fused",
+    "query_side",
+    "ss_attention_fused",
+]

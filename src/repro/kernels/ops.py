@@ -1,0 +1,113 @@
+"""Jitted wrapper: full spectral-shifting attention backed by Pallas kernels.
+
+``ss_attention_fused(q, k, v, ...)`` computes the same function as
+``repro.core.attention.spectral_shift_attention`` (non-causal path) but with
+the two O(n) GEMMs executed by the Pallas kernels in ``ss_attention.py``:
+
+    1. landmarks            (jnp: reshape+mean, trivial)
+    2. A_s, U_ss, delta     (jnp: c x c, O(c^3))
+    3. BV                   (Pallas: landmark_summary, streamed over n)
+    4. M = U_ss @ BV        (jnp: c x c @ c x dv)
+    5. out = F @ M + d * V  (Pallas: query_side, streamed over n)
+
+Accepts (..., n, d) with arbitrary leading dims; leading dims are flattened
+into the kernel batch dim.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import SSConfig, _softmax
+from repro.core.landmarks import segment_means
+from repro.core.spectral_shift import ss_core
+from repro.kernels.ss_attention import landmark_summary, query_side
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "scale", "block_n", "interpret"),
+)
+def ss_attention_fused(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    cfg: SSConfig = SSConfig(),
+    *,
+    scale: Optional[float] = None,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Pallas-backed spectral-shifting attention. Shapes (..., n, d)."""
+    if cfg.causal:
+        raise NotImplementedError(
+            "fused kernel is bidirectional/decode-only; use the jnp path for "
+            "the segment-causal variant"
+        )
+    *lead, n, d = q.shape
+    dv = v.shape[-1]
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    b = 1
+    for s_ in lead:
+        b *= s_
+    qf = q.reshape(b, n, d)
+    kf = k.reshape(b, k.shape[-2], d)
+    vf = v.reshape(b, v.shape[-2], dv)
+
+    q_l = segment_means(qf, cfg.num_landmarks)  # (b, c, d)
+    k_l = segment_means(kf, cfg.num_landmarks)
+
+    # c x c core in jnp (fp32 softmax).
+    a = _softmax(
+        jnp.einsum("bcd,bed->bce", q_l.astype(jnp.float32), k_l.astype(jnp.float32))
+        * scale
+    )
+    core = ss_core(
+        a,
+        method=cfg.method,
+        pinv_iters=cfg.pinv_iters,
+        rank_tol=cfg.rank_tol,
+        use_shift=cfg.use_shift,
+    )
+
+    bv = landmark_summary(
+        q_l, kf, vf, scale=scale, block_n=block_n, interpret=interpret
+    )  # (b, c, dv)
+    m_mat = jnp.matmul(core.u.astype(jnp.float32), bv.astype(jnp.float32)).astype(
+        v.dtype
+    )
+    delta = (
+        core.delta
+        if (cfg.include_shift_identity and qf.shape[1] == kf.shape[1])
+        else jnp.zeros_like(core.delta)
+    )
+    out = query_side(
+        qf, k_l, m_mat, vf, delta, scale=scale, block_n=block_n,
+        interpret=interpret,
+    )
+    return out.reshape(*lead, n, dv)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "scale", "block_n", "interpret")
+)
+def nystrom_attention_fused(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    cfg: SSConfig = SSConfig(use_shift=False, include_shift_identity=False),
+    *,
+    scale: Optional[float] = None,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Pallas-backed Nystromformer baseline (delta = 0)."""
+    import dataclasses
+
+    cfg = dataclasses.replace(cfg, use_shift=False, include_shift_identity=False)
+    return ss_attention_fused(
+        q, k, v, cfg, scale=scale, block_n=block_n, interpret=interpret
+    )

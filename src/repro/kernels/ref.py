@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the spectral-shifting Pallas kernels.
+
+Each function mirrors one kernel's contract exactly (same shapes, same fp32
+accumulation, same output dtype) so tests can ``assert_allclose`` against
+them across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_landmark_summary(
+    q_l: jnp.ndarray,  # (b, c, d)   landmark queries Q~
+    k: jnp.ndarray,    # (b, n, d)
+    v: jnp.ndarray,    # (b, n, dv)
+    scale: float,
+) -> jnp.ndarray:
+    """B-side oracle: softmax(Q~ K^T * scale) @ V -> (b, c, dv)."""
+    s = jnp.einsum(
+        "bcd,bnd->bcn", q_l.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bcn,bnd->bcd", p, v.astype(jnp.float32))
+    return out.astype(v.dtype)
+
+
+def ref_query_side(
+    q: jnp.ndarray,      # (b, n, d)
+    k_l: jnp.ndarray,    # (b, c, d)   landmark keys K~
+    m_mat: jnp.ndarray,  # (b, c, dv)  M = U_ss @ (B @ V)
+    v: jnp.ndarray,      # (b, n, dv)
+    delta: jnp.ndarray,  # (b, 1, 1)
+    scale: float,
+) -> jnp.ndarray:
+    """F-side oracle: softmax(Q K~^T * scale) @ M + delta * V -> (b, n, dv)."""
+    s = jnp.einsum(
+        "bnd,bcd->bnc", q.astype(jnp.float32), k_l.astype(jnp.float32)
+    ) * scale
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bnc,bcd->bnd", p, m_mat.astype(jnp.float32))
+    out = out + delta.astype(jnp.float32) * v.astype(jnp.float32)
+    return out.astype(q.dtype)

@@ -1,0 +1,193 @@
+"""Pallas TPU kernels for spectral-shifting attention (DESIGN.md §3).
+
+Two kernels cover the only O(n) GEMMs in the method; everything else is
+O(c^2)-small and stays in jnp:
+
+* ``landmark_summary``  (B-side): ``BV = softmax(Q~ K^T) @ V``. The c landmark
+  queries are VMEM-resident; K/V stream HBM->VMEM in ``block_n`` chunks with
+  the online-softmax (flash) recurrence, so no (c, n) intermediate ever
+  exists. Grid = (batch, n_blocks), n innermost so the fp32 accumulators in
+  VMEM scratch persist across the stream.
+
+* ``query_side`` (F-side): ``out = softmax(Q K~^T) @ M + delta * V`` with
+  ``M = U_ss (BV)`` (c x dv, VMEM-resident). Softmax axis is c (fully
+  resident) so each Q/V block needs exactly one HBM read and one write —
+  the (n, c) matrix F is never materialized.
+
+Block shapes default to MXU/VPU-aligned sizes (lane dim = head_dim, ideally
+a multiple of 128; sublane blocks multiples of 8). Kernels are validated on
+CPU in interpret mode against ``ref.py``; TPU is the compile target.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# B-side: landmark summary with online softmax over the streamed n axis.
+# --------------------------------------------------------------------------
+def _landmark_summary_kernel(
+    q_ref,  # (1, c, d)    VMEM
+    k_ref,  # (1, bn, d)   VMEM (streamed)
+    v_ref,  # (1, bn, dv)  VMEM (streamed)
+    o_ref,  # (1, c, dv)   VMEM
+    m_scr,  # (c, 1)       fp32 scratch: running max
+    l_scr,  # (c, 1)       fp32 scratch: running denominator
+    acc_scr,  # (c, dv)    fp32 scratch: running numerator
+    *,
+    scale: float,
+    n_valid: int,
+    block_n: int,
+):
+    i = pl.program_id(1)
+    n_blocks = pl.num_programs(1)
+
+    @pl.when(i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                      # (c, d)
+    k = k_ref[0].astype(jnp.float32)                      # (bn, d)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                             # (c, bn)
+
+    # Mask keys past the true sequence end (zero-padded tail block).
+    if n_valid % block_n:
+        kv_pos = i * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kv_pos < n_valid, s, _NEG_INF)
+
+    m_prev = m_scr[...]                                   # (c, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                                # (c, bn)
+    corr = jnp.exp(m_prev - m_new)                        # (c, 1)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                     # (c, dv)
+    acc_scr[...] = acc_scr[...] * corr + pv
+    m_scr[...] = m_new
+
+    @pl.when(i == n_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def landmark_summary(
+    q_l: jnp.ndarray,  # (b, c, d)
+    k: jnp.ndarray,    # (b, n, d)
+    v: jnp.ndarray,    # (b, n, dv)
+    *,
+    scale: float,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """BV = softmax(Q~ K^T * scale) @ V via a flash-style streamed kernel."""
+    b, c, d = q_l.shape
+    n, dv = k.shape[1], v.shape[2]
+    block_n = min(block_n, n)
+    n_pad = -n % block_n
+    if n_pad:
+        k = jnp.pad(k, ((0, 0), (0, n_pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, n_pad), (0, 0)))
+    n_blocks = (n + n_pad) // block_n
+
+    kernel = functools.partial(
+        _landmark_summary_kernel, scale=scale, n_valid=n, block_n=block_n
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, c, d), lambda bi, i: (bi, 0, 0)),
+            pl.BlockSpec((1, block_n, d), lambda bi, i: (bi, i, 0)),
+            pl.BlockSpec((1, block_n, dv), lambda bi, i: (bi, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, dv), lambda bi, i: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c, dv), v.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((c, 1), jnp.float32),
+            pltpu.VMEM((c, 1), jnp.float32),
+            pltpu.VMEM((c, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_l, k, v)
+
+
+# --------------------------------------------------------------------------
+# F-side: fused softmax(Q K~^T) @ M + delta * V over streamed Q/V blocks.
+# --------------------------------------------------------------------------
+def _query_side_kernel(
+    q_ref,      # (1, bn, d)   VMEM (streamed)
+    kl_ref,     # (1, c, d)    VMEM
+    m_ref,      # (1, c, dv)   VMEM
+    v_ref,      # (1, bn, dv)  VMEM (streamed)
+    delta_ref,  # (1, 1, 1)    SMEM-ish scalar block
+    o_ref,      # (1, bn, dv)  VMEM
+    *,
+    scale: float,
+):
+    q = q_ref[0].astype(jnp.float32)                      # (bn, d)
+    kl = kl_ref[0].astype(jnp.float32)                    # (c, d)
+    s = jax.lax.dot_general(
+        q, kl, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                             # (bn, c)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jax.lax.dot_general(
+        p, m_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                     # (bn, dv)
+    out = out + delta_ref[0, 0, 0] * v_ref[0].astype(jnp.float32)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def query_side(
+    q: jnp.ndarray,      # (b, n, d)
+    k_l: jnp.ndarray,    # (b, c, d)
+    m_mat: jnp.ndarray,  # (b, c, dv)
+    v: jnp.ndarray,      # (b, n, dv)
+    delta: jnp.ndarray,  # (b, 1, 1)
+    *,
+    scale: float,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """out = softmax(Q K~^T * scale) @ M + delta * V, one HBM pass over Q/V."""
+    b, n, d = q.shape
+    c, dv = k_l.shape[1], v.shape[2]
+    block_n = min(block_n, n)
+    n_pad = -n % block_n
+    if n_pad:
+        q = jnp.pad(q, ((0, 0), (0, n_pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, n_pad), (0, 0)))
+    n_blocks = (n + n_pad) // block_n
+
+    kernel = functools.partial(_query_side_kernel, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block_n, d), lambda bi, i: (bi, i, 0)),
+            pl.BlockSpec((1, c, d), lambda bi, i: (bi, 0, 0)),
+            pl.BlockSpec((1, c, dv), lambda bi, i: (bi, 0, 0)),
+            pl.BlockSpec((1, block_n, dv), lambda bi, i: (bi, i, 0)),
+            pl.BlockSpec((1, 1, 1), lambda bi, i: (bi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n, dv), lambda bi, i: (bi, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n + n_pad, dv), q.dtype),
+        interpret=interpret,
+    )(q, k_l, m_mat, v, delta.astype(jnp.float32))
+    return out[:, :n] if n_pad else out

@@ -1,0 +1,453 @@
+"""Model zoo assembly: specs + forward for every assigned architecture family.
+
+Families
+--------
+dense   — llama/qwen-style decoder (GQA, rotary, SwiGLU, optional QKV bias)
+moe     — dense trunk with MoE FFN (shared + routed experts) and GQA or MLA
+ssm     — xLSTM: mLSTM blocks with periodic sLSTM blocks (attention-free)
+hybrid  — hymba: parallel attention + mamba heads per layer, then MLP
+audio   — whisper: bidirectional encoder (stub frame embeddings) + decoder
+            with cross attention
+vlm     — llava: image-patch stub projected into a dense decoder
+
+Parameters are ParamSpec trees (models/params.py); the uniform trunk is
+scanned over stacked layer weights, heterogeneous stacks (xlstm, whisper)
+are unrolled. Forward signatures:
+
+    model_specs(cfg)                      -> ParamSpec tree
+    model_forward(params, cfg, batch)     -> (logits, aux)   [train/prefill]
+    loss_fn(params, cfg, batch)           -> (loss, metrics)
+
+The KV-cache decode path lives in repro/serve/decode.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import logical_constraint as Lc
+from repro.models.attention import (
+    cross_attention_forward,
+    cross_attention_specs,
+    gqa_forward,
+    gqa_specs,
+    mla_forward,
+    mla_specs,
+)
+from repro.models.layers import (
+    layer_norm,
+    mlp_forward,
+    mlp_specs,
+    rms_norm,
+    sinusoidal_positions,
+)
+from repro.models.moe import moe_forward, moe_specs
+from repro.models.params import ParamSpec, stack_layer_specs
+from repro.models.ssm import (
+    _causal_conv,
+    mamba_forward,
+    mamba_specs,
+    mlstm_chunked,
+    slstm_scan,
+)
+
+Params = Any
+
+
+# ==========================================================================
+# Layer specs / forwards per family
+# ==========================================================================
+def _norm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), ("embed",), init="ones")
+
+
+def dense_layer_specs(cfg: ModelConfig) -> dict:
+    attn = mla_specs(cfg) if cfg.mla else gqa_specs(cfg)
+    specs = {"norm_attn": _norm_spec(cfg.d_model), "attn": attn,
+             "norm_mlp": _norm_spec(cfg.d_model)}
+    if cfg.moe:
+        specs["moe"] = moe_specs(cfg)
+    else:
+        specs["mlp"] = mlp_specs(cfg.d_model, cfg.d_ff, cfg.act)
+    return specs
+
+
+def dense_layer_forward(p, cfg: ModelConfig, x, positions, impl, mode):
+    h = rms_norm(x, p["norm_attn"], cfg.norm_eps)
+    if cfg.mla:
+        attn_out = mla_forward(p["attn"], cfg, h, positions, impl=impl, mode=mode)
+    else:
+        attn_out, _ = gqa_forward(p["attn"], cfg, h, positions, impl=impl, mode=mode)
+    x = x + attn_out
+    h = rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe:
+        if cfg.moe_impl == "ep":
+            from repro.models.moe import moe_forward_ep
+
+            ff, aux = moe_forward_ep(p["moe"], cfg, h)
+        else:
+            ff, aux = moe_forward(p["moe"], cfg, h)
+    else:
+        ff = mlp_forward(p["mlp"], h, cfg.act)
+    x = x + ff
+    x = Lc(x, ("batch", "seq", "embed_act"))
+    return x, aux
+
+
+def hymba_layer_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "norm_mix": _norm_spec(d),
+        "attn": gqa_specs(cfg),
+        "mamba": mamba_specs(d, d, cfg.ssm_state, cfg.conv_width, max(d // 16, 8)),
+        "gate_attn": ParamSpec((d,), ("embed",), init="ones"),
+        "gate_ssm": ParamSpec((d,), ("embed",), init="ones"),
+        "norm_mlp": _norm_spec(d),
+        "mlp": mlp_specs(d, cfg.d_ff, cfg.act),
+    }
+
+
+def hymba_layer_forward(p, cfg: ModelConfig, x, positions, impl, mode):
+    """Hymba: attention heads and mamba heads in parallel on the same input,
+    fused by learned per-channel gates, followed by a dense MLP."""
+    h = rms_norm(x, p["norm_mix"], cfg.norm_eps)
+    attn_out, _ = gqa_forward(p["attn"], cfg, h, positions, impl=impl, mode=mode)
+    ssm_out, _ = mamba_forward(
+        p["mamba"], h, cfg.ssm_state, chunk=cfg.ssm_chunk,
+        unroll=cfg.unroll_scans,
+    )
+    mixed = (
+        p["gate_attn"].astype(x.dtype) * attn_out
+        + p["gate_ssm"].astype(x.dtype) * ssm_out
+    )
+    x = x + mixed
+    h = rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+    x = x + mlp_forward(p["mlp"], h, cfg.act)
+    x = Lc(x, ("batch", "seq", "embed_act"))
+    return x, jnp.zeros((), jnp.float32)
+
+
+# -- xLSTM blocks ----------------------------------------------------------
+def mlstm_block_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = 2 * d  # projection factor 2
+    h = cfg.num_heads
+    return {
+        "norm": _norm_spec(d),
+        "w_up": ParamSpec((d, 2 * di), ("embed", "ff")),
+        "conv_w": ParamSpec((cfg.conv_width, di), (None, "ff"), scale=0.3),
+        "conv_b": ParamSpec((di,), ("ff",), init="zeros"),
+        "w_q": ParamSpec((di, di), ("ff", "ff_out")),
+        "w_k": ParamSpec((di, di), ("ff", "ff_out")),
+        "w_v": ParamSpec((di, di), ("ff", "ff_out")),
+        "w_if": ParamSpec((di, 2 * h), ("ff", None), scale=0.05),
+        "b_if": ParamSpec((2 * h,), (None,), init="zeros"),
+        "ln_inner": ParamSpec((di,), ("ff",), init="ones"),
+        "w_down": ParamSpec((di, d), ("ff", "embed")),
+    }
+
+
+def mlstm_block_forward(p, cfg: ModelConfig, x):
+    b, s, d = x.shape
+    h = cfg.num_heads
+    dt = x.dtype
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    up = xn @ p["w_up"].astype(dt)
+    di = up.shape[-1] // 2
+    xm, z = up[..., :di], up[..., di:]
+    xc = jax.nn.silu(_causal_conv(xm, p["conv_w"], p["conv_b"]))
+    to_heads = lambda a: a.reshape(b, s, h, di // h).swapaxes(1, 2)
+    q = to_heads(xc @ p["w_q"].astype(dt))
+    k = to_heads(xc @ p["w_k"].astype(dt))
+    v = to_heads(xm @ p["w_v"].astype(dt))
+    gates = xc @ p["w_if"].astype(dt) + p["b_if"].astype(dt)  # (B,S,2H)
+    ilog = gates[..., :h].swapaxes(1, 2)                      # (B,H,S)
+    flog = jax.nn.log_sigmoid(gates[..., h:].astype(jnp.float32)).swapaxes(1, 2)
+    core, _ = mlstm_chunked(
+        q, k, v, ilog, flog, chunk=cfg.ssm_chunk, unroll=cfg.unroll_scans
+    )
+    core = core.swapaxes(1, 2).reshape(b, s, di)
+    core = rms_norm(core, p["ln_inner"], cfg.norm_eps)
+    out = (core * jax.nn.silu(z)) @ p["w_down"].astype(dt)
+    return x + out
+
+
+def slstm_block_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    return {
+        "norm": _norm_spec(d),
+        "w_g": ParamSpec((d, h, 4, dh), ("embed", "heads", None, "head_dim")),
+        "b_g": ParamSpec((h, 4, dh), ("heads", None, "head_dim"), init="zeros"),
+        "r_w": ParamSpec((h, 4, dh, dh), ("heads", None, "head_dim", None), scale=0.05),
+        "ln_inner": ParamSpec((d,), ("embed",), init="ones"),
+        "w_out": ParamSpec((d, d), ("embed", "ff")),
+        "w_down": ParamSpec((d, d), ("ff", "embed")),
+    }
+
+
+def slstm_block_forward(p, cfg: ModelConfig, x):
+    b, s, d = x.shape
+    dt = x.dtype
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    xg = jnp.einsum("bsd,dhge->bshge", xn, p["w_g"].astype(dt)) + p["b_g"].astype(dt)
+    hs, _ = slstm_scan(xg, p["r_w"])
+    hs = hs.reshape(b, s, d)
+    hs = rms_norm(hs, p["ln_inner"], cfg.norm_eps)
+    out = jax.nn.gelu(hs @ p["w_out"].astype(dt)) @ p["w_down"].astype(dt)
+    return x + out
+
+
+# -- whisper layers (LayerNorm + GELU, pre-LN) ------------------------------
+def _ln_specs(d: int) -> dict:
+    return {
+        "scale": ParamSpec((d,), ("embed",), init="ones"),
+        "bias": ParamSpec((d,), ("embed",), init="zeros"),
+    }
+
+
+def whisper_enc_layer_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln_attn": _ln_specs(cfg.d_model),
+        "attn": gqa_specs(cfg),
+        "ln_mlp": _ln_specs(cfg.d_model),
+        "mlp": mlp_specs(cfg.d_model, cfg.d_ff, "gelu"),
+    }
+
+
+def whisper_enc_layer_forward(p, cfg: ModelConfig, x, positions, impl):
+    h = layer_norm(x, p["ln_attn"]["scale"], p["ln_attn"]["bias"], cfg.norm_eps)
+    attn, _ = gqa_forward(p["attn"], cfg, h, positions, impl=impl, mode="bidir")
+    x = x + attn
+    h = layer_norm(x, p["ln_mlp"]["scale"], p["ln_mlp"]["bias"], cfg.norm_eps)
+    return x + mlp_forward(p["mlp"], h, "gelu")
+
+
+def whisper_dec_layer_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln_self": _ln_specs(cfg.d_model),
+        "self_attn": gqa_specs(cfg),
+        "ln_cross": _ln_specs(cfg.d_model),
+        "cross_attn": cross_attention_specs(cfg),
+        "ln_mlp": _ln_specs(cfg.d_model),
+        "mlp": mlp_specs(cfg.d_model, cfg.d_ff, "gelu"),
+    }
+
+
+def whisper_dec_layer_forward(p, cfg, x, enc_out, positions, impl, cross_impl):
+    h = layer_norm(x, p["ln_self"]["scale"], p["ln_self"]["bias"], cfg.norm_eps)
+    attn, _ = gqa_forward(p["self_attn"], cfg, h, positions, impl=impl, mode="causal")
+    x = x + attn
+    h = layer_norm(x, p["ln_cross"]["scale"], p["ln_cross"]["bias"], cfg.norm_eps)
+    x = x + cross_attention_forward(p["cross_attn"], cfg, h, enc_out, impl=cross_impl)
+    h = layer_norm(x, p["ln_mlp"]["scale"], p["ln_mlp"]["bias"], cfg.norm_eps)
+    return x + mlp_forward(p["mlp"], h, "gelu")
+
+
+# ==========================================================================
+# Whole-model specs
+# ==========================================================================
+def _layer_specs_for(cfg: ModelConfig) -> dict:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return dense_layer_specs(cfg)
+    if cfg.family == "hybrid":
+        return hymba_layer_specs(cfg)
+    raise ValueError(cfg.family)
+
+
+def model_specs(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab_padded
+    specs: dict = {
+        "embed": ParamSpec((v, d), ("vocab", "embed"), scale=0.02),
+        "final_norm": _norm_spec(d),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((d, v), ("embed", "vocab"))
+
+    if cfg.family == "ssm":
+        layers = []
+        for i in range(cfg.num_layers):
+            if cfg.slstm_every and (i + 1) % cfg.slstm_every == 0:
+                layers.append({"kind_slstm": slstm_block_specs(cfg)})
+            else:
+                layers.append({"kind_mlstm": mlstm_block_specs(cfg)})
+        specs["layers"] = layers
+    elif cfg.family == "audio":
+        specs["enc_proj"] = ParamSpec((d, d), ("embed", "ff"))
+        specs["enc_layers"] = [
+            whisper_enc_layer_specs(cfg) for _ in range(cfg.encoder_layers)
+        ]
+        specs["enc_ln"] = _ln_specs(d)
+        specs["dec_pos"] = ParamSpec((4096, d), (None, "embed"), scale=0.02)
+        specs["layers"] = [
+            whisper_dec_layer_specs(cfg) for _ in range(cfg.num_layers)
+        ]
+        specs["dec_ln"] = _ln_specs(d)
+    else:
+        layer = _layer_specs_for(cfg)
+        if cfg.scan_layers:
+            specs["layers"] = stack_layer_specs(layer, cfg.num_layers)
+        else:
+            specs["layers"] = [layer for _ in range(cfg.num_layers)]
+        if cfg.family == "vlm":
+            # Stub anyres frontend: pre-extracted patch features (1024) ->
+            # two-layer MM projector into the LM embedding space.
+            specs["mm_proj"] = {
+                "w1": ParamSpec((1024, d), (None, "embed")),
+                "w2": ParamSpec((d, d), ("embed", "ff")),
+            }
+    return specs
+
+
+# ==========================================================================
+# Forward
+# ==========================================================================
+def _embed_tokens(params, cfg: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    emb = params["embed"]
+    return jnp.take(emb, tokens, axis=0).astype(cfg.compute_dtype)
+
+
+def _unembed(params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(x.dtype).T
+    else:
+        w = params["lm_head"].astype(x.dtype)
+    logits = x @ w
+    return Lc(logits, ("batch", "seq", "vocab_act"))
+
+
+def _run_trunk(params, cfg: ModelConfig, x, positions, impl, mode):
+    """Scan (or unrolled loop) over the decoder trunk. Returns (x, aux)."""
+    aux0 = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":
+        for lp in params["layers"]:
+            if "kind_slstm" in lp:
+                x = slstm_block_forward(lp["kind_slstm"], cfg, x)
+            else:
+                x = mlstm_block_forward(lp["kind_mlstm"], cfg, x)
+        return x, aux0
+
+    fwd = {
+        "dense": dense_layer_forward,
+        "moe": dense_layer_forward,
+        "vlm": dense_layer_forward,
+        "hybrid": hymba_layer_forward,
+    }[cfg.family]
+    layer_fn = functools.partial(fwd, cfg=cfg, positions=positions, impl=impl, mode=mode)
+    if cfg.remat == "full":
+        layer_fn = jax.checkpoint(layer_fn)
+    elif cfg.remat == "dots":
+        layer_fn = jax.checkpoint(
+            layer_fn,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+        )
+
+    if cfg.scan_layers and not isinstance(params["layers"], list):
+        def body(carry, lp):
+            y, aux = carry
+            y, a = layer_fn(lp, x=y)
+            return (y, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, aux0), params["layers"])
+        return x, aux
+    aux = aux0
+    for lp in params["layers"]:
+        x, a = layer_fn(lp, x=x)
+        aux = aux + a
+    return x, aux
+
+
+def working_params(params, cfg: ModelConfig):
+    """Cast fp32 master params to the compute dtype ONCE at step entry.
+
+    Under FSDP/ZeRO the per-layer weight all-gathers then move bf16 instead
+    of fp32 (2x less collective traffic); backward converts grads back to
+    fp32 at the same boundary (standard mixed precision). No-op when the
+    dtypes already match (reduced/CPU test configs). Integer leaves and
+    non-float leaves pass through untouched.
+    """
+    dt = jnp.dtype(cfg.compute_dtype)
+    if not cfg.cast_params_once or dt == jnp.dtype(cfg.param_dtype):
+        return params
+    return jax.tree.map(
+        lambda p: p.astype(dt) if p.dtype == jnp.float32 else p, params
+    )
+
+
+def model_forward(params, cfg: ModelConfig, batch: dict, mode: str = "train"):
+    """Full-sequence forward. Returns (logits (B,S,V), aux)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    params = working_params(params, cfg)
+
+    if cfg.family == "audio":
+        return _whisper_forward(params, cfg, batch)
+
+    tokens = batch["tokens"]
+    x = _embed_tokens(params, cfg, tokens)
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(dt)  # (B, P, 1024)
+        mp = params["mm_proj"]
+        pe = jax.nn.gelu(patches @ mp["w1"].astype(dt)) @ mp["w2"].astype(dt)
+        x = jnp.concatenate([pe, x], axis=1)
+    x = x.astype(dt)
+    x = Lc(x, ("batch", "seq", "embed_act"))
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    impl = cfg.attention_impl if mode == "train" else cfg.attention_impl
+    x, aux = _run_trunk(params, cfg, x, positions, impl, "causal")
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, cfg, x), aux
+
+
+def _whisper_forward(params, cfg: ModelConfig, batch: dict):
+    dt = jnp.dtype(cfg.compute_dtype)
+    frames = batch["frames"].astype(dt)  # (B, S_enc, d) stub embeddings
+    b, s_enc, _ = frames.shape
+    enc = frames @ params["enc_proj"].astype(dt)
+    enc = enc + sinusoidal_positions(s_enc, cfg.d_model).astype(dt)
+    pos_enc = jnp.broadcast_to(jnp.arange(s_enc), (b, s_enc))
+    for lp in params["enc_layers"]:
+        enc = whisper_enc_layer_forward(
+            lp, cfg, enc, pos_enc, cfg.encoder_attention_impl
+        )
+    enc = layer_norm(enc, params["enc_ln"]["scale"], params["enc_ln"]["bias"], cfg.norm_eps)
+
+    tokens = batch["tokens"]
+    s = tokens.shape[1]
+    x = _embed_tokens(params, cfg, tokens)
+    pos_emb = params["dec_pos"]
+    if s <= pos_emb.shape[0]:
+        x = x + pos_emb[:s].astype(dt)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    for lp in params["layers"]:
+        x = whisper_dec_layer_forward(
+            lp, cfg, x, enc, positions, cfg.attention_impl,
+            cfg.encoder_attention_impl,
+        )
+    x = layer_norm(x, params["dec_ln"]["scale"], params["dec_ln"]["bias"], cfg.norm_eps)
+    return _unembed(params, cfg, x), jnp.zeros((), jnp.float32)
+
+
+# ==========================================================================
+# Loss
+# ==========================================================================
+def loss_fn(params, cfg: ModelConfig, batch: dict):
+    """Next-token cross entropy (+ MoE aux). Returns (loss, metrics)."""
+    from repro.train.losses import next_token_loss
+
+    logits, aux = model_forward(params, cfg, batch)
+    tokens = batch["tokens"]
+    if cfg.family == "vlm":
+        # Only text positions carry labels; patch prefix is unsupervised.
+        n_patches = logits.shape[1] - tokens.shape[1]
+        logits = logits[:, n_patches:]
+    ce_loss, metrics = next_token_loss(logits, tokens)
+    loss = ce_loss + cfg.router_aux_coef * aux
+    metrics["aux"] = aux
+    return loss, metrics

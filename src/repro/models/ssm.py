@@ -1,0 +1,283 @@
+"""Recurrent/state-space blocks: xLSTM (mLSTM + sLSTM) and Mamba (S6).
+
+All cores are written in a chunk-parallel form (lax.scan over chunks,
+parallel math inside a chunk) so training lowers to big MXU-friendly GEMMs
+while decode is a single-step recurrence on a small carried state — the
+sub-quadratic property that lets the ssm/hybrid archs run ``long_500k``
+natively (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+
+_CHUNK = 64
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. x (B,S,C), w (W,C), b (C)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+# ==========================================================================
+# mLSTM (xLSTM matrix-memory cell), chunkwise-parallel
+# ==========================================================================
+def mlstm_chunked(
+    q: jnp.ndarray,  # (B,H,S,Dh)
+    k: jnp.ndarray,  # (B,H,S,Dh)
+    v: jnp.ndarray,  # (B,H,S,Dh)
+    ilog: jnp.ndarray,  # (B,H,S) input-gate pre-activation (log-space)
+    flog: jnp.ndarray,  # (B,H,S) forget-gate log (log-sigmoid applied)
+    state: tuple | None = None,
+    chunk: int = _CHUNK,
+    unroll: bool = False,
+):
+    """Stabilized chunk-parallel mLSTM. Returns (h (B,H,S,Dh), final_state).
+
+    ``unroll=True`` fully unrolls the chunk scan (probe mode: XLA's
+    cost_analysis counts while-loop bodies once, so the dry-run probe
+    unrolls to see every chunk — identical math, identical per-step cost).
+    """
+    b, h, s, dh = q.shape
+    k = k / (dh**0.5)
+    pad = -s % chunk
+    if pad:
+        z = lambda a: jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, pad)])
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        ilog, flog = z(ilog), z(flog)
+    nc = (s + pad) // chunk
+    # (B,H,S,...) -> (nc, B, H, chunk, ...): nc leads for lax.scan.
+    rs = lambda a: jnp.moveaxis(
+        a.reshape(b, h, nc, chunk, *a.shape[3:]), 2, 0
+    )
+    qc, kc, vc = rs(q), rs(k), rs(v)
+    ic = jnp.moveaxis(ilog.reshape(b, h, nc, chunk), 2, 0)
+    fc = jnp.moveaxis(flog.reshape(b, h, nc, chunk), 2, 0)
+
+    if state is None:
+        c0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    def chunk_step(carry, xs):
+        c_prev, n_prev, m_prev = carry
+        qb, kb, vb, ib, fb = xs  # each (B,H,chunk,...)
+        fb32 = fb.astype(jnp.float32)
+        ib32 = ib.astype(jnp.float32)
+        csf = jnp.cumsum(fb32, axis=-1)  # (B,H,L) inclusive cumulative log-decay
+        # Stabilizers.
+        g = jax.lax.cummax(ib32 - csf, axis=ib32.ndim - 1)  # (B,H,L)
+        m_new = jnp.maximum(m_prev[..., None] + csf, csf + g)  # (B,H,L)
+        # Intra-chunk decay matrix D[s,r] = exp(csf_s - csf_r + i_r - m_s), r<=s.
+        lw = (
+            csf[..., :, None]
+            - csf[..., None, :]
+            + ib32[..., None, :]
+            - m_new[..., :, None]
+        )
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dmat = jnp.where(mask, jnp.exp(lw), 0.0)  # (B,H,L,L)
+        qk = jnp.einsum(
+            "bhsd,bhrd->bhsr",
+            qb.astype(jnp.float32),
+            kb.astype(jnp.float32),
+        )
+        w = qk * dmat
+        h_intra = jnp.einsum("bhsr,bhrd->bhsd", w, vb.astype(jnp.float32))
+        inter = jnp.exp(m_prev[..., None] + csf - m_new)  # (B,H,L)
+        h_inter = jnp.einsum(
+            "bhde,bhse->bhsd", c_prev, qb.astype(jnp.float32)
+        ) * inter[..., None]
+        n_eff = (
+            inter[..., None] * n_prev[..., None, :]
+            + jnp.einsum("bhsr,bhrd->bhsd", dmat, kb.astype(jnp.float32))
+        )
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bhsd,bhsd->bhs", qb.astype(jnp.float32), n_eff)),
+            jnp.exp(-m_new),
+        )
+        h_out = (h_intra + h_inter) / denom[..., None]
+        # Chunk-final state.
+        m_last = m_new[..., -1]
+        tail = csf[..., -1:] - csf + ib32  # log weight of each r into final state
+        wstate = jnp.exp(tail - m_last[..., None])  # (B,H,L)
+        c_new = (
+            jnp.exp(m_prev + csf[..., -1] - m_last)[..., None, None] * c_prev
+            + jnp.einsum(
+                "bhr,bhrd,bhre->bhde",
+                wstate,
+                vb.astype(jnp.float32),
+                kb.astype(jnp.float32),
+            )
+        )
+        n_new = (
+            jnp.exp(m_prev + csf[..., -1] - m_last)[..., None] * n_prev
+            + jnp.einsum("bhr,bhrd->bhd", wstate, kb.astype(jnp.float32))
+        )
+        return (c_new, n_new, m_last), h_out.astype(q.dtype)
+
+    (c_f, n_f, m_f), hs = jax.lax.scan(
+        chunk_step, (c0, n0, m0), (qc, kc, vc, ic, fc),
+        unroll=nc if unroll else 1,
+    )
+    # hs: (nc, B, H, chunk, Dh) -> (B, H, S, Dh)
+    hs = jnp.moveaxis(hs, 0, 2).reshape(b, h, nc * chunk, dh)[:, :, :s]
+    return hs, (c_f, n_f, m_f)
+
+
+def mlstm_step(q, k, v, ilog, flog, state):
+    """Single-token mLSTM decode. q/k/v (B,H,Dh); ilog/flog (B,H)."""
+    c_prev, n_prev, m_prev = state
+    dh = q.shape[-1]
+    k = k.astype(jnp.float32) / (dh**0.5)
+    q, v = q.astype(jnp.float32), v.astype(jnp.float32)
+    f32, i32 = flog.astype(jnp.float32), ilog.astype(jnp.float32)
+    m_new = jnp.maximum(f32 + m_prev, i32)
+    fprime = jnp.exp(f32 + m_prev - m_new)[..., None]
+    iprime = jnp.exp(i32 - m_new)[..., None]
+    c_new = fprime[..., None] * c_prev + iprime[..., None] * (
+        v[..., :, None] * k[..., None, :]
+    )
+    n_new = fprime * n_prev + iprime * k
+    num = jnp.einsum("bhde,bhe->bhd", c_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, q)), jnp.exp(-m_new))
+    return (num / den[..., None]), (c_new, n_new, m_new)
+
+
+# ==========================================================================
+# sLSTM (scalar-memory cell with exponential gating), recurrent
+# ==========================================================================
+def slstm_scan(
+    x_gates: jnp.ndarray,  # (B,S,H,4,Dh) pre-activations for i,f,z,o from x
+    r_w: jnp.ndarray,      # (H,4,Dh,Dh) block-diagonal recurrent weights
+    state: tuple | None = None,
+):
+    """Recurrent sLSTM over time. Returns (h (B,S,H,Dh), final_state)."""
+    b, s, h, _, dh = x_gates.shape
+    if state is None:
+        zeros = jnp.zeros((b, h, dh), jnp.float32)
+        state = (zeros, zeros, jnp.full((b, h, dh), -1e30, jnp.float32), zeros)
+
+    r_w32 = r_w.astype(jnp.float32)
+
+    def step(carry, xg):
+        c, n, m, hprev = carry  # each (B,H,Dh)
+        rec = jnp.einsum("bhd,hgde->bhge", hprev, r_w32)  # (B,H,4,Dh)
+        pre = xg.astype(jnp.float32) + rec
+        il, fl, zl, ol = pre[:, :, 0], pre[:, :, 1], pre[:, :, 2], pre[:, :, 3]
+        m_new = jnp.maximum(fl + m, il)
+        i_p = jnp.exp(il - m_new)
+        f_p = jnp.exp(fl + m - m_new)
+        c_new = f_p * c + i_p * jnp.tanh(zl)
+        n_new = f_p * n + i_p
+        h_new = jax.nn.sigmoid(ol) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    xs = x_gates.swapaxes(0, 1)  # (S,B,H,4,Dh)
+    final, hs = jax.lax.scan(step, state, xs)
+    return hs.swapaxes(0, 1).astype(x_gates.dtype), final
+
+
+# ==========================================================================
+# Mamba / S6 selective SSM, chunk-parallel
+# ==========================================================================
+def mamba_specs(d_model: int, d_inner: int, state: int, conv_width: int, dt_rank: int):
+    return {
+        "w_in": ParamSpec((d_model, 2 * d_inner), ("embed", "ff")),
+        "conv_w": ParamSpec((conv_width, d_inner), (None, "ff"), scale=0.3),
+        "conv_b": ParamSpec((d_inner,), ("ff",), init="zeros"),
+        "w_bc": ParamSpec((d_inner, 2 * state), ("ff", None)),
+        "w_dt": ParamSpec((d_inner, dt_rank), ("ff", None)),
+        "w_dt_out": ParamSpec((dt_rank, d_inner), (None, "ff")),
+        "b_dt": ParamSpec((d_inner,), ("ff",), init="zeros"),
+        "a_log": ParamSpec((d_inner, state), ("ff", None), init="zeros"),
+        "d_skip": ParamSpec((d_inner,), ("ff",), init="ones"),
+        "w_out": ParamSpec((d_inner, d_model), ("ff", "embed")),
+    }
+
+
+def mamba_forward(p: dict, x: jnp.ndarray, state_dim: int, chunk: int = 256,
+                  state: tuple | None = None, unroll: bool = False):
+    """Selective SSM. x (B,S,D) -> (out (B,S,D), final_state)."""
+    b, s, d = x.shape
+    dt = x.dtype
+    ui = x @ p["w_in"].astype(dt)  # (B,S,2*di)
+    di = ui.shape[-1] // 2
+    u, z = ui[..., :di], ui[..., di:]
+    conv_state_in = None if state is None else state[1]
+    if conv_state_in is not None:
+        width = p["conv_w"].shape[0]
+        ctx = jnp.concatenate([conv_state_in.astype(dt), u], axis=1)
+        u_conv = _causal_conv(ctx, p["conv_w"], p["conv_b"])[:, width - 1 :]
+        conv_state = ctx[:, -(width - 1) :]
+    else:
+        u_conv = _causal_conv(u, p["conv_w"], p["conv_b"])
+        width = p["conv_w"].shape[0]
+        conv_state = jnp.pad(u, ((0, 0), (width - 1, 0), (0, 0)))[:, -(width - 1):]
+    u_conv = jax.nn.silu(u_conv)
+
+    bc = u_conv @ p["w_bc"].astype(dt)  # (B,S,2*state)
+    b_mat, c_mat = bc[..., :state_dim], bc[..., state_dim:]
+    dt_pre = (u_conv @ p["w_dt"].astype(dt)) @ p["w_dt_out"].astype(dt)
+    delta = jax.nn.softplus(dt_pre.astype(jnp.float32) + p["b_dt"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (di, state), negative
+
+    # Per-step transition a_t = exp(delta_t * A) and input b_t = delta_t*B_t*u_t.
+    da = delta[..., None] * a  # (B,S,di,state)
+    # abar/bbar are the memory giants of the selective scan ((B,S,di,N) —
+    # ~30 ops x 0.84 GB/device on hymba train_4k, §Perf cell C). They are
+    # computed in fp32 but STORED in the compute dtype; the chunk recurrence
+    # upcasts again, so only the HBM-resident copies shrink (exact no-op
+    # when compute dtype is fp32, as in the CPU tests).
+    abar = jnp.exp(da).astype(dt)
+    bbar = (
+        delta[..., None]
+        * b_mat.astype(jnp.float32)[..., None, :]
+        * u_conv.astype(jnp.float32)[..., None]
+    ).astype(dt)  # (B,S,di,state)
+
+    h0 = (
+        jnp.zeros((b, di, state_dim), jnp.float32)
+        if state is None
+        else state[0]
+    )
+    pad = -s % chunk
+    if pad:
+        abar = jnp.pad(abar, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+        bbar = jnp.pad(bbar, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (s + pad) // chunk
+    abar = abar.reshape(b, nc, chunk, di, state_dim).swapaxes(0, 1)
+    bbar = bbar.reshape(b, nc, chunk, di, state_dim).swapaxes(0, 1)
+
+    def assoc(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    def chunk_step(h_prev, xs):
+        ac, bc_ = xs  # (B,L,di,state), stored dtype
+        ac = ac.astype(jnp.float32)
+        bc_ = bc_.astype(jnp.float32)
+        acum, bcum = jax.lax.associative_scan(assoc, (ac, bc_), axis=1)
+        hs = acum * h_prev[:, None] + bcum  # (B,L,di,state) fp32
+        return hs[:, -1], hs
+
+    h_final, hs = jax.lax.scan(
+        chunk_step, h0, (abar, bbar), unroll=nc if unroll else 1
+    )
+    hs = hs.swapaxes(0, 1).reshape(b, nc * chunk, di, state_dim)[:, :s]
+    y = jnp.einsum("bsdn,bsn->bsd", hs, c_mat.astype(jnp.float32))
+    y = y + p["d_skip"].astype(jnp.float32) * u_conv.astype(jnp.float32)
+    out = (y.astype(dt) * jax.nn.silu(z)) @ p["w_out"].astype(dt)
+    return out, (h_final, conv_state)

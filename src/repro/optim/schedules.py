@@ -1,0 +1,25 @@
+"""LR schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.1):
+    """Linear warmup then cosine decay to ``floor * peak_lr``."""
+
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip(
+            (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+            0.0, 1.0,
+        )
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak_lr * jnp.where(step < warmup_steps, warm, cos)
+
+    return fn
+
+
+def constant(lr: float):
+    return lambda step: jnp.full((), lr, jnp.float32)

@@ -1,0 +1,162 @@
+"""Continuous-batching serving engine over the spectral-shift decode path.
+
+vLLM-style lane scheduling on top of ``decode_step``:
+
+* a fixed pool of ``max_lanes`` decode lanes, each with its own KV cache +
+  landmark state and its own position counter (``decode_step`` is vmapped
+  over lanes, so per-lane ``pos`` comes for free);
+* requests queue up, are admitted into free lanes, prefill runs *inline*
+  (prompt tokens are fed through the decode path one per engine tick —
+  chunked prefill; a production deployment would batch-prefill with the
+  Pallas kernels, see kernels/ops.py) and generation continues in the same
+  lane until EOS / max_new_tokens;
+* every engine tick advances ALL active lanes with one jitted batched step —
+  admission/retirement never stalls other lanes (continuous batching).
+
+The engine is deliberately synchronous and single-host; the multi-pod
+serving story (TP-sharded lanes) reuses the same ``decode_step`` under pjit
+— see launch/dryrun.py's decode cells, which lower exactly that.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.params import init_params
+from repro.serve.decode import decode_step
+from repro.serve.kv_cache import cache_specs
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0  # 0 => greedy
+
+
+@dataclasses.dataclass
+class _Lane:
+    req: Optional[Request] = None
+    prompt_left: deque = dataclasses.field(default_factory=deque)
+    generated: list[int] = dataclasses.field(default_factory=list)
+    next_token: int = 0
+    steps: int = 0
+
+    @property
+    def free(self) -> bool:
+        return self.req is None
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        max_lanes: int = 4,
+        max_seq: int = 512,
+        eos_id: int = 2,
+        seed: int = 0,
+    ):
+        self.cfg, self.params = cfg, params
+        self.max_lanes, self.max_seq, self.eos_id = max_lanes, max_seq, eos_id
+        self.queue: deque[Request] = deque()
+        self.lanes = [_Lane() for _ in range(max_lanes)]
+        self.finished: dict[int, list[int]] = {}
+        self._key = jax.random.PRNGKey(seed)
+
+        # Per-lane cache: cache_specs with B=1, stacked on a leading lane
+        # axis; decode_step vmapped over that axis gives per-lane positions.
+        specs = cache_specs(cfg, 1, max_seq)
+        one = init_params(specs, jax.random.PRNGKey(0))  # zeros (init="zeros")
+        self.cache = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (max_lanes, *x.shape)).copy(), one
+        )
+        step = functools.partial(decode_step, self.params, cfg)
+        self._step = jax.jit(jax.vmap(step))
+
+    # -- public API ----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self, max_ticks: int = 10_000) -> dict[int, list[int]]:
+        """Drive until queue + lanes drain (or tick budget). Returns outputs."""
+        for _ in range(max_ticks):
+            if not self.queue and all(l.free for l in self.lanes):
+                break
+            self.tick()
+        return self.finished
+
+    # -- scheduling ------------------------------------------------------------
+    def _admit(self) -> None:
+        for i, lane in enumerate(self.lanes):
+            if lane.free and self.queue:
+                req = self.queue.popleft()
+                lane.req = req
+                lane.prompt_left = deque(req.prompt)
+                lane.generated = []
+                lane.steps = 0
+                lane.next_token = lane.prompt_left.popleft()
+                # Zero this lane's cache (fresh request).
+                self.cache = jax.tree.map(
+                    lambda c: c.at[i].set(jnp.zeros_like(c[i])), self.cache
+                )
+
+    def _retire(self, i: int) -> None:
+        lane = self.lanes[i]
+        self.finished[lane.req.uid] = list(lane.generated)
+        self.lanes[i] = _Lane()
+
+    # -- one engine tick -------------------------------------------------------
+    def tick(self) -> None:
+        self._admit()
+        active = [i for i, l in enumerate(self.lanes) if not l.free]
+        if not active:
+            return
+        tokens = np.zeros((self.max_lanes, 1, 1), np.int32)
+        for i in active:
+            tokens[i, 0, 0] = self.lanes[i].next_token
+        logits, self.cache = self._step(self.cache, jnp.asarray(tokens))
+        logits = np.asarray(logits[:, 0, 0])  # (lanes, V)
+
+        self._key, sub = jax.random.split(self._key)
+        gumbel = np.asarray(
+            jax.random.gumbel(sub, (self.max_lanes, logits.shape[-1]))
+        )
+        for i in active:
+            lane = self.lanes[i]
+            lane.steps += 1
+            if lane.prompt_left:  # still prefilling: ignore the sample
+                lane.next_token = lane.prompt_left.popleft()
+                continue
+            lg = logits[i, : self.cfg.vocab_size]
+            if lane.req.temperature > 0:
+                tok = int(np.argmax(lg / lane.req.temperature + gumbel[i, : lg.shape[0]]))
+            else:
+                tok = int(np.argmax(lg))
+            lane.generated.append(tok)
+            done = (
+                tok == self.eos_id
+                or len(lane.generated) >= lane.req.max_new_tokens
+                or lane.steps >= self.max_seq - 1
+            )
+            if done:
+                self._retire(i)
+            else:
+                lane.next_token = tok
+
+    # -- introspection ---------------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "queued": len(self.queue),
+            "active": sum(not l.free for l in self.lanes),
+            "finished": len(self.finished),
+        }

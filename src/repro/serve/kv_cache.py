@@ -1,0 +1,134 @@
+"""KV-cache (and recurrent-state) layout for batched serving.
+
+Caches are ParamSpec trees (reusing models/params.py) so the dry-run can
+lower them abstractly and the sharding rules apply uniformly:
+
+* attention caches: (L, B, H_kv, S, Dh) — batch over ("pod","data"), heads
+  over "model"; for ``long_500k`` the rules override ``cache_seq`` -> data
+  (sequence-parallel cache, batch unsharded).
+* landmark state: the paper-technique addition — running segment SUMS of the
+  query/key projections, (L, B, H, c, Dh). Counts are derived from ``pos``
+  (segment j holds clip(pos+1 - j*l, 0, l) tokens), so means never go stale.
+* ssm/hybrid states: mLSTM (C, n, m), mamba (h, conv tail) per layer.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamSpec
+
+BATCH = "cache_batch"
+SEQ = "cache_seq"
+
+
+def _gqa_cache(cfg: ModelConfig, b: int, s: int) -> dict:
+    h, hkv, dh, c = (
+        cfg.num_heads,
+        cfg.num_kv_heads,
+        cfg.resolved_head_dim,
+        cfg.num_landmarks,
+    )
+    return {
+        "k": ParamSpec((b, hkv, s, dh), (BATCH, "kv_heads", SEQ, None), init="zeros"),
+        "v": ParamSpec((b, hkv, s, dh), (BATCH, "kv_heads", SEQ, None), init="zeros"),
+        "q_lmk": ParamSpec((b, h, c, dh), (BATCH, "heads", None, None), init="zeros"),
+        "k_lmk": ParamSpec((b, hkv, c, dh), (BATCH, "kv_heads", None, None), init="zeros"),
+    }
+
+
+def _mla_cache(cfg: ModelConfig, b: int, s: int) -> dict:
+    r, dr, c, h = cfg.kv_lora_rank, cfg.rope_head_dim, cfg.num_landmarks, cfg.num_heads
+    de = r + dr  # effective (absorbed) key dim
+    return {
+        "latent": ParamSpec((b, s, r), (BATCH, SEQ, None), init="zeros"),
+        "rope": ParamSpec((b, s, dr), (BATCH, SEQ, None), init="zeros"),
+        "q_lmk": ParamSpec((b, h, c, de), (BATCH, "heads", None, None), init="zeros"),
+        "k_lmk": ParamSpec((b, c, de), (BATCH, None, None), init="zeros"),
+    }
+
+
+def _mamba_state(cfg: ModelConfig, b: int, d_inner: int) -> dict:
+    return {
+        "ssm_h": ParamSpec(
+            (b, d_inner, cfg.ssm_state), (BATCH, "ff_act", None),
+            init="zeros", dtype=jnp.float32,
+        ),
+        "conv": ParamSpec(
+            (b, cfg.conv_width - 1, d_inner), (BATCH, None, "ff_act"), init="zeros"
+        ),
+    }
+
+
+def _mlstm_state(cfg: ModelConfig, b: int) -> dict:
+    di = 2 * cfg.d_model
+    h = cfg.num_heads
+    dh = di // h
+    f32 = jnp.float32
+    return {
+        "c": ParamSpec((b, h, dh, dh), (BATCH, "heads", None, None), init="zeros", dtype=f32),
+        "n": ParamSpec((b, h, dh), (BATCH, "heads", None), init="zeros", dtype=f32),
+        "m": ParamSpec((b, h), (BATCH, "heads"), init="zeros", dtype=f32),
+        "conv": ParamSpec((b, cfg.conv_width - 1, di), (BATCH, None, "ff_act"), init="zeros"),
+    }
+
+
+def _slstm_state(cfg: ModelConfig, b: int) -> dict:
+    h = cfg.num_heads
+    dh = cfg.d_model // h
+    f32 = jnp.float32
+    return {
+        k: ParamSpec((b, h, dh), (BATCH, "heads", None), init="zeros", dtype=f32)
+        for k in ("c", "n", "m", "h")
+    }
+
+
+def _stack(layer: dict, n: int) -> dict:
+    from repro.models.params import stack_layer_specs
+
+    return stack_layer_specs(layer, n)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    """Full decode-state ParamSpec tree for one model."""
+    specs: dict = {"pos": ParamSpec((), (), init="zeros", dtype=jnp.int32)}
+    maybe_stack = (
+        (lambda layer: _stack(layer, cfg.num_layers))
+        if cfg.scan_layers
+        else (lambda layer: [layer for _ in range(cfg.num_layers)])
+    )
+    if cfg.family in ("dense", "vlm"):
+        specs["layers"] = maybe_stack(_gqa_cache(cfg, batch, seq_len))
+    elif cfg.family == "moe":
+        layer = _mla_cache(cfg, batch, seq_len) if cfg.mla else _gqa_cache(cfg, batch, seq_len)
+        specs["layers"] = maybe_stack(layer)
+    elif cfg.family == "hybrid":
+        layer = {"attn": _gqa_cache(cfg, batch, seq_len),
+                 "mamba": _mamba_state(cfg, batch, cfg.d_model)}
+        specs["layers"] = maybe_stack(layer)
+    elif cfg.family == "ssm":
+        layers = []
+        for i in range(cfg.num_layers):
+            if cfg.slstm_every and (i + 1) % cfg.slstm_every == 0:
+                layers.append({"kind_slstm": _slstm_state(cfg, batch)})
+            else:
+                layers.append({"kind_mlstm": _mlstm_state(cfg, batch)})
+        specs["layers"] = layers
+    elif cfg.family == "audio":
+        enc_len = 1500
+        h, dh = cfg.num_heads, cfg.resolved_head_dim
+        # Whisper's decoder stack is unrolled -> per-layer cache list.
+        specs["layers"] = [
+            _gqa_cache(cfg, batch, seq_len) for _ in range(cfg.num_layers)
+        ]
+        specs["cross_k"] = ParamSpec(
+            (cfg.num_layers, batch, h, enc_len, dh),
+            ("layers", BATCH, "heads", None, None), init="zeros",
+        )
+        specs["cross_v"] = ParamSpec(
+            (cfg.num_layers, batch, h, enc_len, dh),
+            ("layers", BATCH, "heads", None, None), init="zeros",
+        )
+    else:
+        raise ValueError(cfg.family)
+    return specs

@@ -1,0 +1,41 @@
+"""Loss functions shared by the model zoo and the trainer.
+
+``next_token_loss`` is the canonical LM objective: masked next-token cross
+entropy in fp32, with optional z-loss (logit-norm regularizer, stabilizes
+bf16 training at scale) and label smoothing. ``model.loss_fn`` delegates
+here so every family uses identical numerics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def next_token_loss(
+    logits: jnp.ndarray,   # (B, S, V) — positions 0..S-1 predict 1..S
+    tokens: jnp.ndarray,   # (B, S) int32; 0 = pad
+    *,
+    z_loss: float = 0.0,
+    label_smoothing: float = 0.0,
+) -> tuple[jnp.ndarray, dict]:
+    """Masked next-token CE. Returns (loss, metrics)."""
+    targets = tokens[:, 1:]
+    lg = logits[:, :-1].astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    ce_tok = logz - gold
+    if label_smoothing:
+        # Uniform smoothing: (1-eps)*gold + eps*mean over vocab.
+        mean_lp = jnp.mean(lg, axis=-1) - logz
+        ce_tok = (1 - label_smoothing) * ce_tok - label_smoothing * mean_lp
+    mask = (targets != 0).astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = jnp.sum(ce_tok * mask) / denom
+    metrics = {"ce": ce, "tokens": denom}
+    loss = ce
+    if z_loss:
+        zl = jnp.sum(jnp.square(logz) * mask) / denom
+        loss = loss + z_loss * zl
+        metrics["z_loss"] = zl
+    metrics["ppl_proxy"] = jnp.exp(jnp.minimum(ce, 20.0))
+    return loss, metrics

@@ -1,0 +1,91 @@
+"""Jittable train / prefill / serve step builders.
+
+``make_train_step`` returns a pure function
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+with optional microbatch gradient accumulation (scan) — the thing the
+launcher jits with in/out shardings and donation.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models.model import loss_fn, model_forward
+from repro.optim.adamw import adamw_update
+from repro.serve.decode import decode_step
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, lr_fn: Callable):
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, cfg, batch
+        )
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if tcfg.microbatches > 1:
+            # Grad accumulation: split the batch dim into microbatches and
+            # scan, accumulating fp32 grads.
+            def split(x):
+                b = x.shape[0]
+                mb = tcfg.microbatches
+                return x.reshape(mb, b // mb, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+
+            def body(acc, mb_batch):
+                loss, metrics, grads = grads_of(params, mb_batch)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), acc, grads
+                )
+                return acc, loss
+
+            grads, losses = jax.lax.scan(body, zeros, micro)
+            grads = jax.tree.map(lambda g: g / tcfg.microbatches, grads)
+            loss = jnp.mean(losses)
+            metrics = {}
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        params, opt_state, opt_metrics = adamw_update(
+            grads, opt_state, params, tcfg, lr_fn
+        )
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, cfg, batch)
+        return loss, metrics
+
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """Full-sequence forward returning logits — the inference-prefill cell."""
+
+    def prefill_step(params, batch):
+        logits, _ = model_forward(params, cfg, batch, mode="prefill")
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One batched decode step against the KV cache."""
+
+    def serve_step(params, cache, tokens):
+        return decode_step(params, cfg, cache, tokens)
+
+    return serve_step

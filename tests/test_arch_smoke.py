@@ -1,0 +1,176 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward + one train step on CPU, asserting output shapes and no NaNs.
+The FULL configs are exercised only by the dry-run (abstract lowering)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeConfig, TrainConfig, reduced
+from repro.configs.registry import ARCH_IDS, batch_specs, get_config
+from repro.models.model import loss_fn, model_forward, model_specs
+from repro.models.params import count_params, init_params
+from repro.optim.adamw import adamw_init
+from repro.optim.schedules import constant
+from repro.train.train_step import make_train_step
+
+B, S = 2, 64
+
+
+def _concrete_batch(cfg, b=B, s=S, seed=0):
+    """Concrete small inputs matching batch_specs' structure."""
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(1, cfg.vocab_size, size=(b, s)), jnp.int32
+    )}
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(b, 32, cfg.d_model)), jnp.float32
+        )
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(b, cfg.num_patches, 1024)), jnp.float32
+        )
+    return batch
+
+
+@pytest.fixture(scope="module")
+def arch_state():
+    """Cache (cfg, params) per arch across tests in this module."""
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = reduced(get_config(arch))
+            params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+            cache[arch] = (cfg, params)
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_no_nans(arch, arch_state):
+    cfg, params = arch_state(arch)
+    batch = _concrete_batch(cfg)
+    logits, aux = model_forward(params, cfg, batch)
+    extra = cfg.num_patches if cfg.family == "vlm" else 0
+    assert logits.shape == (B, S + extra, cfg.vocab_padded)
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+    assert not bool(jnp.isnan(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step(arch, arch_state):
+    cfg, params = arch_state(arch)
+    tcfg = TrainConfig()
+    step = make_train_step(cfg, tcfg, constant(1e-3))
+    opt = adamw_init(params)
+    batch = _concrete_batch(cfg)
+    new_params, new_opt, metrics = jax.jit(step)(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert int(new_opt.step) == 1
+    # Parameters actually moved.
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))),
+        new_params, params,
+    )
+    assert max(jax.tree.leaves(moved)) > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_spectral_shift_attention_impl(arch, arch_state):
+    """Every attention-bearing arch must also run with the paper's impl."""
+    import dataclasses
+
+    cfg, params = arch_state(arch)
+    if cfg.family == "ssm":
+        pytest.skip("attention-free (DESIGN.md §Arch-applicability)")
+    cfg_ss = dataclasses.replace(
+        cfg, attention_impl="spectral_shift",
+        encoder_attention_impl="spectral_shift", num_landmarks=8,
+    )
+    batch = _concrete_batch(cfg_ss)
+    logits, _ = model_forward(params, cfg_ss, batch)
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+
+
+def test_full_configs_match_assignment():
+    """The full (non-reduced) configs carry the assigned hyper-parameters."""
+    expected = {
+        "qwen2-72b": dict(num_layers=80, d_model=8192, num_heads=64,
+                          num_kv_heads=8, d_ff=29568, vocab_size=152064,
+                          qkv_bias=True),
+        "qwen2-7b": dict(num_layers=28, d_model=3584, num_heads=28,
+                         num_kv_heads=4, d_ff=18944, vocab_size=152064,
+                         qkv_bias=True),
+        "deepseek-67b": dict(num_layers=95, d_model=8192, num_heads=64,
+                             num_kv_heads=8, d_ff=22016, vocab_size=102400),
+        "granite-20b": dict(num_layers=52, d_model=6144, num_heads=48,
+                            num_kv_heads=1, d_ff=24576, vocab_size=49152),
+        "xlstm-350m": dict(num_layers=24, d_model=1024, vocab_size=50304,
+                           family="ssm"),
+        "whisper-base": dict(num_layers=6, d_model=512, num_heads=8,
+                             d_ff=2048, vocab_size=51865, encoder_layers=6),
+        "hymba-1.5b": dict(num_layers=32, d_model=1600, num_heads=25,
+                           num_kv_heads=5, d_ff=5504, vocab_size=32001,
+                           ssm_state=16, family="hybrid"),
+        "deepseek-v2-lite-16b": dict(num_layers=27, d_model=2048,
+                                     num_heads=16, d_ff=1408,
+                                     vocab_size=102400, moe=True, top_k=6,
+                                     mla=True, kv_lora_rank=512),
+        "kimi-k2-1t-a32b": dict(num_layers=61, d_model=7168, num_heads=64,
+                                num_kv_heads=8, vocab_size=163840, moe=True,
+                                num_experts=384, top_k=8),
+        "llava-next-34b": dict(num_layers=60, d_model=7168, num_heads=56,
+                               num_kv_heads=8, d_ff=20480, vocab_size=64000,
+                               family="vlm"),
+    }
+    for arch, fields in expected.items():
+        cfg = get_config(arch)
+        for f, want in fields.items():
+            got = getattr(cfg, f)
+            assert got == want, f"{arch}.{f}: {got} != {want}"
+
+
+def test_param_counts_plausible():
+    """Full-config parameter counts are in the advertised ballpark."""
+    targets = {  # (arch, nominal params, tolerance factor)
+        "qwen2-72b": 72e9,
+        "qwen2-7b": 7.6e9,
+        "deepseek-67b": 67e9,
+        "kimi-k2-1t-a32b": 1.0e12,
+    }
+    for arch, nominal in targets.items():
+        n = count_params(model_specs(get_config(arch)))
+        assert 0.8 * nominal < n < 1.35 * nominal, (arch, n, nominal)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_abstract_specs_all_cells(arch):
+    """batch_specs builds abstract inputs for every assigned shape cell."""
+    from repro.configs.base import SHAPE_PRESETS
+
+    cfg = get_config(arch)
+    for shape in SHAPE_PRESETS.values():
+        specs, axes = batch_specs(cfg, shape)
+        assert jax.tree.structure(specs) == jax.tree.structure(
+            axes, is_leaf=lambda x: isinstance(x, tuple)
+        ) or specs.keys() == axes.keys()
+
+
+def test_paper_bert_config_smoke():
+    """The paper's own evaluation setting (BERT-small + SS attention)."""
+    import dataclasses
+
+    cfg = reduced(get_config("paper-bert"))
+    cfg = dataclasses.replace(cfg, attention_impl="spectral_shift",
+                              num_landmarks=8)
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+    batch = _concrete_batch(cfg)
+    logits, _ = model_forward(params, cfg, batch)
+    assert logits.shape == (B, S, cfg.vocab_padded)
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))

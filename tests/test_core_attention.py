@@ -1,0 +1,183 @@
+"""Unit tests for the attention implementations (core/attention.py)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attention import (
+    SSConfig,
+    attention,
+    chunked_attention,
+    full_attention,
+    nystrom_attention,
+    spectral_shift_attention,
+)
+
+
+def _qkv(b=2, n=256, d=32, nk=None, seed=0, scale=0.5):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    nk = nk or n
+    q = jax.random.normal(kq, (b, n, d)) * scale
+    k = jax.random.normal(kk, (b, nk, d)) * scale
+    v = jax.random.normal(kv, (b, nk, d))
+    return q, k, v
+
+
+def _softmax_ref(q, k, v, causal=False):
+    d = q.shape[-1]
+    s = np.einsum("...qd,...kd->...qk", np.asarray(q, np.float64),
+                  np.asarray(k, np.float64)) / np.sqrt(d)
+    if causal:
+        nq, nk = q.shape[-2], k.shape[-2]
+        mask = np.arange(nk)[None, :] <= (np.arange(nq)[:, None] + nk - nq)
+        s = np.where(mask, s, -np.inf)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return np.einsum("...qk,...kd->...qd", p, np.asarray(v, np.float64))
+
+
+class TestFullAttention:
+    def test_matches_softmax_reference(self):
+        q, k, v = _qkv()
+        out = full_attention(q, k, v)
+        np.testing.assert_allclose(out, _softmax_ref(q, k, v), atol=1e-5)
+
+    def test_causal_matches_reference(self):
+        q, k, v = _qkv(n=64)
+        out = full_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(
+            out, _softmax_ref(q, k, v, causal=True), atol=1e-5
+        )
+
+    def test_decode_convention(self):
+        # n_q < n_k: queries are the LAST n_q positions of the context.
+        q, k, v = _qkv(n=8, nk=64)
+        out = full_attention(q, k, v, causal=True)
+        qf, kf, vf = _qkv(n=64)
+        full = full_attention(qf, k, v, causal=True)
+        # Row i of out must equal row (64-8+i) computed with the same keys
+        # and a matching query — check the mask logic via the reference.
+        np.testing.assert_allclose(
+            out, _softmax_ref(q, k, v, causal=True), atol=1e-5
+        )
+
+
+class TestChunkedAttention:
+    @pytest.mark.parametrize("n,block", [(256, 64), (250, 64), (100, 256)])
+    @pytest.mark.parametrize("causal", [False, True])
+    def test_matches_full(self, n, block, causal):
+        q, k, v = _qkv(n=n)
+        out = chunked_attention(q, k, v, causal=causal, block=block)
+        ref = full_attention(q, k, v, causal=causal)
+        np.testing.assert_allclose(out, ref, atol=1e-4)
+
+    def test_cross_length(self):
+        q, k, v = _qkv(n=32, nk=256)
+        np.testing.assert_allclose(
+            chunked_attention(q, k, v, causal=True, block=64),
+            full_attention(q, k, v, causal=True),
+            atol=1e-4,
+        )
+
+
+class TestSpectralShiftAttention:
+    def test_exact_when_short(self):
+        # n <= num_landmarks: falls back to exact attention.
+        q, k, v = _qkv(n=16)
+        cfg = SSConfig(num_landmarks=32)
+        np.testing.assert_allclose(
+            spectral_shift_attention(q, k, v, cfg), full_attention(q, k, v),
+            atol=1e-6,
+        )
+
+    def test_use_shift_false_is_nystrom(self):
+        q, k, v = _qkv()
+        cfg = SSConfig(num_landmarks=64, use_shift=False,
+                       include_shift_identity=False)
+        np.testing.assert_allclose(
+            spectral_shift_attention(q, k, v, cfg),
+            nystrom_attention(q, k, v, num_landmarks=64),
+            atol=1e-6,
+        )
+
+    def test_approximates_softmax(self):
+        # With c close to n the approximation should be tight.
+        q, k, v = _qkv(n=256, scale=0.3)
+        cfg = SSConfig(num_landmarks=128, method="svd")
+        out = spectral_shift_attention(q, k, v, cfg)
+        exact = full_attention(q, k, v)
+        rel = float(
+            jnp.linalg.norm(out - exact) / jnp.linalg.norm(exact)
+        )
+        assert rel < 0.35, rel
+
+    def test_more_landmarks_more_accurate(self):
+        q, k, v = _qkv(n=512, scale=0.3)
+        exact = full_attention(q, k, v)
+        errs = []
+        for c in (16, 64, 192):
+            cfg = SSConfig(num_landmarks=c, method="svd",
+                           include_shift_identity=False)
+            out = spectral_shift_attention(q, k, v, cfg)
+            errs.append(float(jnp.linalg.norm(out - exact)))
+        assert errs[0] > errs[1] > errs[2], errs
+
+    def test_eq10_literal_variant_runs(self):
+        q, k, v = _qkv(n=128)
+        cfg = SSConfig(num_landmarks=32, variant="eq10_literal")
+        out = spectral_shift_attention(q, k, v, cfg)
+        assert out.shape == q.shape
+        assert not bool(jnp.any(jnp.isnan(out)))
+
+    def test_segment_causal_variant(self):
+        # Beyond-paper causal variant: a query must receive zero weight from
+        # strictly-future landmark segments (checked via value sensitivity).
+        q, k, v = _qkv(n=128, seed=3)
+        cfg = SSConfig(num_landmarks=16, causal=True)
+        out1 = spectral_shift_attention(q, k, v, cfg)
+        # Perturb the FINAL segment of V; early queries must not change.
+        v2 = v.at[:, -8:, :].add(100.0)
+        out2 = spectral_shift_attention(q, k, v2, cfg)
+        seg = 128 // 16
+        np.testing.assert_allclose(
+            out1[:, : 128 - seg], out2[:, : 128 - seg], atol=1e-4
+        )
+
+    def test_dtype_preserved(self):
+        q, k, v = _qkv(n=128)
+        q, k, v = q.astype(jnp.bfloat16), k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+        out = spectral_shift_attention(q, k, v, SSConfig(num_landmarks=32))
+        assert out.dtype == jnp.bfloat16
+
+    def test_explicit_landmarks_decode(self):
+        # Passing explicit landmarks must give a well-formed (c x c) core
+        # even for a single decode query.
+        q, k, v = _qkv(n=1, nk=256)
+        from repro.core.landmarks import segment_means
+
+        k_l = segment_means(k, 32)
+        q_l = segment_means(k, 32)  # decode proxy: reuse key landmarks
+        out = spectral_shift_attention(
+            q, k, v, SSConfig(num_landmarks=32),
+            q_landmarks=q_l, k_landmarks=k_l,
+        )
+        assert out.shape == (2, 1, 32)
+        assert not bool(jnp.any(jnp.isnan(out)))
+
+
+class TestDispatch:
+    @pytest.mark.parametrize("impl", ["full", "chunked", "nystrom", "spectral_shift"])
+    def test_dispatch(self, impl):
+        q, k, v = _qkv(n=128)
+        out = attention(q, k, v, impl, causal=True)
+        assert out.shape == q.shape
+
+    def test_unknown_impl_raises(self):
+        q, k, v = _qkv(n=16)
+        with pytest.raises(ValueError):
+            attention(q, k, v, "does-not-exist")

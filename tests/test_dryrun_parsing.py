@@ -1,0 +1,74 @@
+"""Unit tests for the dry-run's HLO collective parser (pure string work —
+safe to run alongside anything). The roofline numbers hang off this parser,
+so it gets its own coverage."""
+from __future__ import annotations
+
+import os
+
+# conftest initializes the jax backend (1 device) before this import, so the
+# XLA_FLAGS side effect in repro.launch.dryrun cannot re-device this process.
+_saved_flags = os.environ.get("XLA_FLAGS")
+from repro.launch.dryrun import _shape_bytes, parse_collectives  # noqa: E402
+
+if _saved_flags is None:
+    os.environ.pop("XLA_FLAGS", None)  # don't leak 512 devices to children
+else:
+    os.environ["XLA_FLAGS"] = _saved_flags
+
+
+class TestShapeBytes:
+    def test_simple(self):
+        assert _shape_bytes("f32[128,256]") == 128 * 256 * 4
+
+    def test_bf16(self):
+        assert _shape_bytes("bf16[2,4096,3584]") == 2 * 4096 * 3584 * 2
+
+    def test_tuple_shapes(self):
+        s = "(f32[8,8], bf16[16])"
+        assert _shape_bytes(s) == 8 * 8 * 4 + 16 * 2
+
+    def test_scalar(self):
+        assert _shape_bytes("f32[]") == 4
+
+    def test_pred(self):
+        assert _shape_bytes("pred[64]") == 64
+
+
+class TestParseCollectives:
+    HLO = """
+  %all-gather.1 = f32[256,1024]{1,0} all-gather(%p0), channel_id=1, replica_groups=[16,16]<=[256], dimensions={0}
+  %all-reduce.2 = bf16[128,128]{1,0} all-reduce(%p1), channel_id=2, replica_groups=[16,16]<=[256], to_apply=%add
+  %reduce-scatter.3 = f32[64]{0} reduce-scatter(%p2), channel_id=3, replica_groups=[1,256]<=[256], dimensions={0}
+  %cp = f32[8,8]{1,0} collective-permute(%p3), channel_id=4, source_target_pairs={{0,1}}
+  %notacollective = f32[4]{0} add(%a, %b)
+"""
+
+    def test_counts_and_bytes(self):
+        stats = parse_collectives(self.HLO)
+        assert stats["all-gather"]["count"] == 1
+        assert stats["all-gather"]["result_bytes"] == 256 * 1024 * 4
+        assert stats["all-reduce"]["count"] == 1
+        assert stats["reduce-scatter"]["count"] == 1
+        assert stats["collective-permute"]["count"] == 1
+        assert "add" not in stats
+
+    def test_ring_factors(self):
+        stats = parse_collectives(self.HLO)
+        g = 16
+        ag = stats["all-gather"]
+        assert abs(ag["moved_bytes"] - ag["result_bytes"] * (g - 1) / g) < 1
+        ar = stats["all-reduce"]
+        assert abs(ar["moved_bytes"] - ar["result_bytes"] * 2 * (g - 1) / g) < 1
+        rs = stats["reduce-scatter"]
+        assert rs["moved_bytes"] == rs["result_bytes"] * (256 - 1)
+        cp = stats["collective-permute"]
+        assert cp["moved_bytes"] == cp["result_bytes"]
+
+    def test_start_variants_counted(self):
+        hlo = ("%ag = f32[64]{0} all-gather-start(%x), channel_id=9, "
+               "replica_groups=[2,4]<=[8]")
+        stats = parse_collectives(hlo)
+        assert stats["all-gather"]["count"] == 1
+
+    def test_empty(self):
+        assert parse_collectives("") == {}

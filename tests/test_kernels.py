@@ -1,0 +1,125 @@
+"""Pallas kernel sweeps: shapes x dtypes, assert_allclose vs ref.py oracles.
+
+Kernels execute in interpret mode (CPU); TPU is the compile target. The
+sweep covers padded tails (n % block != 0), non-square head dims, and both
+fp32/bf16 in/out dtypes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attention import SSConfig, spectral_shift_attention
+from repro.core.landmarks import segment_means
+from repro.kernels.ops import nystrom_attention_fused, ss_attention_fused
+from repro.kernels.ref import ref_landmark_summary, ref_query_side
+from repro.kernels.ss_attention import landmark_summary, query_side
+
+
+def _inputs(b, n, d, dv, c, dtype, seed=0):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    q = (jax.random.normal(ks[0], (b, n, d)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (b, n, d)) * 0.5).astype(dtype)
+    v = jax.random.normal(ks[2], (b, n, dv)).astype(dtype)
+    q_l = segment_means(q, c)
+    k_l = segment_means(k, c)
+    return q, k, v, q_l, k_l
+
+
+_TOL = {jnp.float32: dict(atol=2e-5, rtol=2e-5),
+        jnp.bfloat16: dict(atol=3e-2, rtol=3e-2)}
+
+
+class TestLandmarkSummaryKernel:
+    @pytest.mark.parametrize("n", [128, 384, 500])     # 500: padded tail
+    @pytest.mark.parametrize("c", [16, 64])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_vs_oracle(self, n, c, dtype):
+        q, k, v, q_l, k_l = _inputs(2, n, 32, 32, c, dtype)
+        scale = 1 / 32**0.5
+        out = landmark_summary(q_l, k, v, scale=scale, block_n=128, interpret=True)
+        ref = ref_landmark_summary(q_l, k, v, scale)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            **_TOL[dtype],
+        )
+
+    @pytest.mark.parametrize("d,dv", [(32, 64), (64, 32), (128, 128)])
+    def test_rect_head_dims(self, d, dv):
+        q, k, v, q_l, _ = _inputs(1, 256, d, dv, 32, jnp.float32)
+        scale = 1 / d**0.5
+        out = landmark_summary(q_l, k, v, scale=scale, block_n=64, interpret=True)
+        ref = ref_landmark_summary(q_l, k, v, scale)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    def test_single_block(self):
+        # n < block_n: one grid step, still correct.
+        q, k, v, q_l, _ = _inputs(2, 100, 32, 32, 16, jnp.float32)
+        out = landmark_summary(q_l, k, v, scale=0.17, block_n=512, interpret=True)
+        ref = ref_landmark_summary(q_l, k, v, 0.17)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+class TestQuerySideKernel:
+    @pytest.mark.parametrize("n", [128, 384, 500])
+    @pytest.mark.parametrize("c", [16, 64])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_vs_oracle(self, n, c, dtype):
+        q, k, v, q_l, k_l = _inputs(2, n, 32, 32, c, dtype, seed=1)
+        m_mat = jax.random.normal(jax.random.PRNGKey(7), (2, c, 32)).astype(dtype)
+        delta = jnp.full((2, 1, 1), 0.3, jnp.float32)
+        scale = 1 / 32**0.5
+        out = query_side(q, k_l, m_mat, v, delta, scale=scale, block_n=128,
+                         interpret=True)
+        ref = ref_query_side(q, k_l, m_mat, v, delta, scale)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            **_TOL[dtype],
+        )
+
+    def test_zero_delta(self):
+        q, k, v, q_l, k_l = _inputs(1, 256, 32, 32, 32, jnp.float32)
+        m_mat = jax.random.normal(jax.random.PRNGKey(3), (1, 32, 32))
+        delta = jnp.zeros((1, 1, 1))
+        out = query_side(q, k_l, m_mat, v, delta, scale=0.2, interpret=True)
+        ref = ref_query_side(q, k_l, m_mat, v, delta, 0.2)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+class TestFusedOp:
+    @pytest.mark.parametrize("n,c", [(256, 32), (512, 64), (384, 48)])
+    def test_fused_matches_jnp_path(self, n, c):
+        q, k, v, *_ = _inputs(2, n, 32, 32, c, jnp.float32, seed=2)
+        cfg = SSConfig(num_landmarks=c, method="iterative", pinv_iters=6)
+        fused = ss_attention_fused(q, k, v, cfg, interpret=True)
+        ref = spectral_shift_attention(q, k, v, cfg)
+        np.testing.assert_allclose(fused, ref, atol=1e-4, rtol=1e-4)
+
+    def test_fused_multihead_lead_dims(self):
+        # (B, H, n, d) leading dims flatten into the kernel batch.
+        key = jax.random.PRNGKey(5)
+        q = jax.random.normal(key, (2, 4, 256, 16)) * 0.5
+        k = jax.random.normal(key, (2, 4, 256, 16)) * 0.5
+        v = jax.random.normal(key, (2, 4, 256, 16))
+        cfg = SSConfig(num_landmarks=32)
+        fused = ss_attention_fused(q, k, v, cfg, interpret=True)
+        ref = spectral_shift_attention(q, k, v, cfg)
+        np.testing.assert_allclose(fused, ref, atol=1e-4, rtol=1e-4)
+
+    def test_nystrom_fused(self):
+        q, k, v, *_ = _inputs(2, 256, 32, 32, 32, jnp.float32)
+        fused = nystrom_attention_fused(q, k, v, interpret=True)
+        from repro.core.attention import nystrom_attention
+
+        ref = nystrom_attention(q, k, v, num_landmarks=64)
+        np.testing.assert_allclose(fused, ref, atol=1e-4, rtol=1e-4)
+
+    def test_bf16_end_to_end(self):
+        q, k, v, *_ = _inputs(1, 512, 64, 64, 64, jnp.bfloat16, seed=4)
+        cfg = SSConfig(num_landmarks=64)
+        out = ss_attention_fused(q, k, v, cfg, interpret=True)
+        assert out.dtype == jnp.bfloat16
+        assert not bool(jnp.any(jnp.isnan(out.astype(jnp.float32))))

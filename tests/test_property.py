@@ -1,0 +1,212 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:  # pragma: no cover
+    HAVE_HYP = False
+
+from repro.core.landmarks import segment_means, segment_of
+from repro.core.pinv import iterative_pinv
+from repro.core.spectral_shift import ss_core
+
+pytestmark = pytest.mark.skipif(not HAVE_HYP, reason="hypothesis not installed")
+
+_settings = settings(max_examples=25, deadline=None)
+
+
+def _np_x(n, d, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+
+
+class TestSegmentMeans:
+    @_settings
+    @given(
+        n=st.integers(4, 200),
+        m=st.integers(1, 32),
+        d=st.sampled_from([4, 8, 16]),
+        seed=st.integers(0, 100),
+    )
+    def test_global_mean_preserved(self, n, m, d, seed):
+        """Count-weighted mean of landmarks == mean of all tokens."""
+        x = _np_x(n, d, seed)
+        lm = segment_means(x, m)
+        if n <= m:  # degenerate: identity
+            np.testing.assert_allclose(lm, x, atol=1e-6)
+            return
+        seg = -(-n // m)
+        counts = np.clip(n - np.arange(m) * seg, 1, seg).astype(np.float32)
+        # Zero-token segments contribute nothing (mean is 0/num irrelevant):
+        valid = (n - np.arange(m) * seg) > 0
+        w_mean = (np.asarray(lm[valid]) * counts[valid, None]).sum(0) / n
+        np.testing.assert_allclose(w_mean, np.asarray(x).mean(0), atol=1e-4)
+
+    @_settings
+    @given(
+        n=st.integers(8, 128),
+        m=st.integers(2, 16),
+        seed=st.integers(0, 50),
+    )
+    def test_linearity(self, n, m, seed):
+        """segment_means(a*x + y) == a*segment_means(x) + segment_means(y)."""
+        x = _np_x(n, 8, seed)
+        y = _np_x(n, 8, seed + 1)
+        lhs = segment_means(2.5 * x + y, m)
+        rhs = 2.5 * segment_means(x, m) + segment_means(y, m)
+        np.testing.assert_allclose(lhs, rhs, atol=1e-4)
+
+    @_settings
+    @given(n=st.integers(4, 256), m=st.integers(1, 64))
+    def test_segment_of_bounds(self, n, m):
+        pos = jnp.arange(n)
+        segs = segment_of(pos, n, m)
+        assert int(segs.min()) >= 0
+        assert int(segs.max()) < m
+        # Non-decreasing in position.
+        assert bool(jnp.all(jnp.diff(segs) >= 0))
+
+
+class TestPinvProperties:
+    @_settings
+    @given(c=st.integers(4, 24), seed=st.integers(0, 100))
+    def test_penrose_on_spd(self, c, seed):
+        rng = np.random.default_rng(seed)
+        b = rng.normal(size=(c, c)).astype(np.float32)
+        a = jnp.asarray(b @ b.T + 0.5 * np.eye(c))
+        z = iterative_pinv(a, num_iters=18)
+        resid = float(jnp.max(jnp.abs(a @ z @ a - a))) / float(jnp.max(jnp.abs(a)))
+        assert resid < 1e-2, resid
+
+    @_settings
+    @given(c=st.integers(4, 24), seed=st.integers(0, 100))
+    def test_symmetric_input_symmetric_output(self, c, seed):
+        rng = np.random.default_rng(seed)
+        b = rng.normal(size=(c, c)).astype(np.float32)
+        a = jnp.asarray(b @ b.T + 0.1 * np.eye(c))
+        z = iterative_pinv(a, num_iters=10)
+        asym = float(jnp.max(jnp.abs(z - z.T))) / float(jnp.max(jnp.abs(z)))
+        assert asym < 1e-3, asym
+
+
+class TestSSCoreProperties:
+    @_settings
+    @given(c=st.integers(4, 32), seed=st.integers(0, 100),
+           scale=st.floats(0.1, 2.0))
+    def test_delta_nonneg_and_finite(self, c, seed, scale):
+        """For any softmax core: delta >= 0 and all outputs finite."""
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=(c, 8)).astype(np.float32) * scale
+        s = jnp.asarray(x @ x.T) / np.sqrt(8)
+        p = jnp.exp(s - s.max(-1, keepdims=True))
+        a = p / p.sum(-1, keepdims=True)
+        core = ss_core(a, method="iterative", pinv_iters=6)
+        assert float(core.delta[..., 0, 0]) >= 0.0
+        for leaf in (core.u, core.z, core.delta):
+            assert bool(jnp.all(jnp.isfinite(leaf)))
+
+    @_settings
+    @given(c=st.integers(4, 24), seed=st.integers(0, 50))
+    def test_shift_off_means_u_equals_z(self, c, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=(c, 8)).astype(np.float32)
+        s = jnp.asarray(x @ x.T)
+        p = jnp.exp(s - s.max(-1, keepdims=True))
+        a = p / p.sum(-1, keepdims=True)
+        core = ss_core(a, method="iterative", use_shift=False)
+        np.testing.assert_allclose(core.u, core.z, atol=1e-6)
+
+
+class TestAttentionProperties:
+    @_settings
+    @given(
+        n=st.sampled_from([64, 128, 200]),
+        c=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 50),
+    )
+    def test_ss_attention_finite_any_shape(self, n, c, seed):
+        from repro.core.attention import SSConfig, spectral_shift_attention
+
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.normal(size=(1, n, 16)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, n, 16)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(1, n, 16)), jnp.float32)
+        out = spectral_shift_attention(q, k, v, SSConfig(num_landmarks=c))
+        assert out.shape == q.shape
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+    @_settings
+    @given(seed=st.integers(0, 50))
+    def test_full_attention_convexity(self, seed):
+        """Exact softmax attention output lies in the convex hull of V
+        (per-coordinate bounds)."""
+        from repro.core.attention import full_attention
+
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.normal(size=(1, 32, 8)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, 32, 8)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(1, 32, 8)), jnp.float32)
+        out = full_attention(q, k, v)
+        assert bool(jnp.all(out <= v.max(axis=-2, keepdims=True) + 1e-5))
+        assert bool(jnp.all(out >= v.min(axis=-2, keepdims=True) - 1e-5))
+
+
+class TestLossProperties:
+    @_settings
+    @given(seed=st.integers(0, 50), b=st.integers(1, 4), s=st.integers(4, 32))
+    def test_ce_nonnegative_and_uniform_bound(self, seed, b, s):
+        from repro.train.losses import next_token_loss
+
+        rng = np.random.default_rng(seed)
+        V = 64
+        logits = jnp.asarray(rng.normal(size=(b, s, V)), jnp.float32)
+        tokens = jnp.asarray(rng.integers(1, V, (b, s)), jnp.int32)
+        loss, m = next_token_loss(logits, tokens)
+        assert float(loss) >= 0.0
+        # Random logits: CE close to log V, certainly below 2 log V.
+        assert float(loss) < 2 * np.log(V)
+
+    @_settings
+    @given(seed=st.integers(0, 20))
+    def test_perfect_prediction_zero_loss(self, seed):
+        from repro.train.losses import next_token_loss
+
+        rng = np.random.default_rng(seed)
+        V, b, s = 32, 2, 16
+        tokens = jnp.asarray(rng.integers(1, V, (b, s)), jnp.int32)
+        logits = jax.nn.one_hot(
+            jnp.pad(tokens[:, 1:], ((0, 0), (0, 1))), V
+        ) * 1e4
+        loss, _ = next_token_loss(logits, tokens)
+        assert float(loss) < 1e-3
+
+
+class TestCheckpointProperty:
+    @_settings
+    @given(seed=st.integers(0, 30))
+    def test_roundtrip_arbitrary_tree(self, seed):
+        import tempfile
+
+        from repro.checkpoint.checkpointer import Checkpointer
+
+        rng = np.random.default_rng(seed)
+        tree = {
+            "a": jnp.asarray(rng.normal(size=(3, 5)), jnp.float32),
+            "nested": {
+                "b": jnp.asarray(rng.integers(0, 10, (4,)), jnp.int32),
+                "c": [jnp.asarray(rng.normal(size=(2, 2)), jnp.float32)
+                      for _ in range(2)],
+            },
+        }
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d, keep=2)
+            ck.save(1, tree, blocking=True)
+            out = ck.restore(1, tree)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

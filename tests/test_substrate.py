@@ -1,0 +1,229 @@
+"""Substrate unit tests: checkpointer, data pipeline, optimizer, schedules,
+gradient compression, fault-tolerance control plane, sharding rules."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.pipeline import SyntheticLM, TextFileLM
+from repro.distributed.fault_tolerance import (
+    ElasticPlan,
+    FailureInjector,
+    HeartbeatMonitor,
+)
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, global_norm
+from repro.optim.compression import Compressed, compress, decompress
+from repro.optim.schedules import constant, warmup_cosine
+from repro.configs.base import TrainConfig
+
+
+class TestCheckpointer:
+    def _tree(self, seed=0):
+        rng = np.random.default_rng(seed)
+        return {
+            "w": jnp.asarray(rng.normal(size=(8, 8)), jnp.float32),
+            "opt": {"m": jnp.asarray(rng.normal(size=(8,)), jnp.float32)},
+        }
+
+    def test_save_restore(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), keep=3)
+        tree = self._tree()
+        ck.save(5, tree, blocking=True)
+        assert ck.latest_step() == 5
+        out = ck.restore(5, tree)
+        np.testing.assert_array_equal(out["w"], tree["w"])
+
+    def test_retention_gc(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), keep=2)
+        for s in (1, 2, 3, 4):
+            ck.save(s, self._tree(s), blocking=True)
+        assert ck.all_steps() == [3, 4]
+
+    def test_async_save(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), keep=3)
+        ck.save(7, self._tree(), blocking=False)
+        ck.wait()
+        assert ck.latest_step() == 7
+
+    def test_atomic_publish_no_tmp_visible(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), keep=3)
+        ck.save(1, self._tree(), blocking=True)
+        assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+    def test_restore_newest_of_many(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), keep=5)
+        trees = {s: self._tree(s) for s in (1, 2, 3)}
+        for s, t in trees.items():
+            ck.save(s, t, blocking=True)
+        out = ck.restore(ck.latest_step(), trees[3])
+        np.testing.assert_array_equal(out["w"], trees[3]["w"])
+
+
+class TestDataPipeline:
+    def test_synthetic_deterministic(self):
+        src = SyntheticLM(vocab_size=100, seq_len=16, global_batch=4, seed=1)
+        a, b = src.batch(7), src.batch(7)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        c = src.batch(8)
+        assert not np.array_equal(a["tokens"], c["tokens"])
+
+    def test_synthetic_range(self):
+        src = SyntheticLM(vocab_size=50, seq_len=32, global_batch=2)
+        t = src.batch(0)["tokens"]
+        assert t.min() >= 1 and t.max() < 50
+        assert t.dtype == np.int32
+
+    def test_textfile(self, tmp_path):
+        p = tmp_path / "corpus.txt"
+        p.write_bytes(b"hello world, this is a test corpus for the lm." * 20)
+        src = TextFileLM(str(p), seq_len=16, global_batch=3, seed=0)
+        t = src.batch(0)["tokens"]
+        assert t.shape == (3, 16)
+        np.testing.assert_array_equal(t, src.batch(0)["tokens"])
+
+
+class TestOptimizer:
+    def test_adamw_descends_quadratic(self):
+        params = {"w": jnp.asarray([3.0, -2.0])}
+        tcfg = TrainConfig(learning_rate=0.1, weight_decay=0.0, grad_clip=1e9)
+        lr = constant(0.1)
+        opt = adamw_init(params)
+        for _ in range(200):
+            grads = jax.tree.map(lambda p: 2 * p, params)  # d/dp ||p||^2
+            params, opt, m = adamw_update(grads, opt, params, tcfg, lr)
+        assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+    def test_grad_clip_applied(self):
+        params = {"w": jnp.ones((4,))}
+        tcfg = TrainConfig(grad_clip=1.0, weight_decay=0.0)
+        opt = adamw_init(params)
+        grads = {"w": jnp.full((4,), 100.0)}
+        _, _, metrics = adamw_update(grads, opt, params, tcfg, constant(1e-3))
+        assert float(metrics["grad_norm"]) == pytest.approx(200.0, rel=1e-3)
+
+    def test_global_norm(self):
+        tree = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+        assert float(global_norm(tree)) == pytest.approx(5.0)
+
+    def test_schedule_warmup_cosine(self):
+        fn = warmup_cosine(1.0, 10, 100)
+        assert float(fn(jnp.asarray(0))) < 0.2
+        assert float(fn(jnp.asarray(10))) == pytest.approx(1.0, abs=1e-2)
+        # Cosine decays to the floor (0.1 * peak).
+        assert float(fn(jnp.asarray(100))) == pytest.approx(0.1, abs=1e-2)
+        # Monotone decay after warmup.
+        vals = [float(fn(jnp.asarray(s))) for s in (10, 40, 70, 100)]
+        assert vals == sorted(vals, reverse=True)
+
+
+class TestCompression:
+    def test_roundtrip_error_bounded(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+        c, _ = compress(x)
+        y = decompress(c)
+        # int8 round-to-nearest: error bounded by half the quantization step.
+        assert float(jnp.max(jnp.abs(x - y))) <= float(c.scale) * 0.51
+
+    def test_error_feedback_reduces_bias(self):
+        """With error feedback, the accumulated compression error stays
+        bounded (residual absorbs it) instead of growing."""
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(32,)), jnp.float32) * 0.01
+        res = jnp.zeros_like(x)
+        total_in, total_out = jnp.zeros_like(x), jnp.zeros_like(x)
+        for _ in range(50):
+            c, res = compress(x, residual=res)
+            y = decompress(c)
+            total_in = total_in + x
+            total_out = total_out + y
+        rel = float(jnp.linalg.norm(total_in - total_out)
+                    / jnp.linalg.norm(total_in))
+        assert rel < 0.05, rel
+
+
+class TestFaultTolerance:
+    def test_dead_host_detection(self):
+        mon = HeartbeatMonitor(["h0", "h1"], timeout_s=10.0)
+        mon.beat("h0", 1.0, now=100.0)
+        mon.beat("h1", 1.0, now=100.0)
+        assert mon.dead_hosts(now=105.0) == []
+        mon.beat("h0", 1.0, now=120.0)
+        assert mon.dead_hosts(now=125.0) == ["h1"]
+
+    def test_straggler_detection(self):
+        mon = HeartbeatMonitor([f"h{i}" for i in range(4)])
+        for i in range(4):
+            for _ in range(10):
+                mon.beat(f"h{i}", 1.0 if i else 5.0)  # h0 is slow
+        assert mon.stragglers() == ["h0"]
+
+    def test_elastic_plan_shrinks_dp(self):
+        plan = ElasticPlan.plan(alive_chips=96, model_parallel=16, max_data=16)
+        assert plan.model == 16
+        assert plan.data == 4          # largest pow2 <= 96//16=6
+        assert plan.dropped_chips == 96 - 64
+
+    def test_elastic_plan_impossible(self):
+        with pytest.raises(RuntimeError):
+            ElasticPlan.plan(alive_chips=8, model_parallel=16, max_data=4)
+
+    def test_failure_injector(self):
+        inj = FailureInjector({3: ["h1"], 7: ["h0", "h2"]})
+        assert inj.failures_at(3) == ["h1"]
+        assert inj.failures_at(4) == []
+
+
+class TestShardingRules:
+    def test_spec_for_outside_mesh_is_replicated(self):
+        from repro.distributed.sharding import spec_for
+
+        spec = spec_for(("batch", "embed"))
+        assert all(p is None for p in spec)
+
+    def test_rules_inside_mesh(self):
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed.sharding import sharding_rules, spec_for
+        from repro.launch.mesh import make_local_mesh
+
+        mesh = make_local_mesh(1)
+        with mesh, sharding_rules(mesh):
+            spec = spec_for(("batch", None, "heads"))
+            assert isinstance(spec, P)
+            assert len(spec) == 3
+
+    def test_divisible_spec_drops_indivisible(self):
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed.sharding import divisible_spec
+        from repro.launch.mesh import make_local_mesh
+
+        mesh = make_local_mesh(1)  # 1 device: everything divides
+        spec = divisible_spec(mesh, ("batch",), (7,))
+        assert isinstance(spec, P)
+
+    def test_param_shardings_tree(self):
+        from repro.configs.base import reduced
+        from repro.configs.registry import get_config
+        from repro.distributed.sharding import sharding_rules, shardings_for
+        from repro.launch.mesh import make_local_mesh
+        from repro.models.model import model_specs
+        from repro.models.params import abstract_params, logical_axes
+
+        cfg = reduced(get_config("qwen2-7b"))
+        specs = model_specs(cfg)
+        mesh = make_local_mesh(1)
+        with mesh, sharding_rules(mesh):
+            sh = shardings_for(mesh, logical_axes(specs), abstract_params(specs))
+        from jax.sharding import NamedSharding
+
+        for leaf in jax.tree.leaves(
+            sh, is_leaf=lambda x: isinstance(x, NamedSharding)
+        ):
+            assert isinstance(leaf, NamedSharding)

@@ -1,0 +1,153 @@
+"""Integration tests: end-to-end training (loss goes down, checkpoint/restart
+is bit-exact), continuous-batching serve engine."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeConfig, TrainConfig, reduced
+from repro.configs.registry import get_config
+from repro.launch.mesh import make_local_mesh
+from repro.models.model import model_specs
+from repro.models.params import init_params
+from repro.serve.engine import Request, ServeEngine
+from repro.train.trainer import Trainer
+
+SHAPE = ShapeConfig("train_4k", 64, 4, "train")
+
+
+def _cfg(arch="qwen2-7b", **kw):
+    cfg = reduced(get_config(arch))
+    return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+class TestTrainerIntegration:
+    def test_loss_decreases(self, tmp_path):
+        tcfg = TrainConfig(
+            learning_rate=3e-3, checkpoint_dir=str(tmp_path), total_steps=40,
+            warmup_steps=4,
+        )
+        tr = Trainer(_cfg(), tcfg, SHAPE, make_local_mesh(1))
+        hist = tr.run(30, log_every=1000)
+        first5 = np.mean([h["loss"] for h in hist[:5]])
+        last5 = np.mean([h["loss"] for h in hist[-5:]])
+        assert last5 < first5 - 0.1, (first5, last5)
+
+    def test_checkpoint_restart_bitexact(self, tmp_path):
+        """Interrupt + restore == uninterrupted (deterministic data + CPU)."""
+        mk = lambda d: TrainConfig(
+            checkpoint_dir=str(d), checkpoint_every=5, total_steps=20, seed=3
+        )
+        # Uninterrupted 10 steps.
+        t1 = Trainer(_cfg(), mk(tmp_path / "a"), SHAPE, make_local_mesh(1))
+        t1.run(10, log_every=1000)
+        # 5 steps, drop trainer, restore from checkpoint and continue.
+        t2 = Trainer(_cfg(), mk(tmp_path / "b"), SHAPE, make_local_mesh(1))
+        t2.run(5, log_every=1000)
+        t2.ckpt.wait()
+        del t2
+        t3 = Trainer(_cfg(), mk(tmp_path / "b"), SHAPE, make_local_mesh(1))
+        assert t3.step == 5  # restored
+        t3.run(5, log_every=1000)
+        for a, b in zip(jax.tree.leaves(t1.params), jax.tree.leaves(t3.params)):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                atol=1e-6,
+            )
+
+    def test_microbatch_accumulation_matches(self, tmp_path):
+        """2 microbatches == 1 full batch (same grads up to fp32 assoc)."""
+        t_full = Trainer(
+            _cfg(), TrainConfig(checkpoint_dir=str(tmp_path / "f"),
+                                microbatches=1, seed=0),
+            SHAPE, make_local_mesh(1),
+        )
+        t_micro = Trainer(
+            _cfg(), TrainConfig(checkpoint_dir=str(tmp_path / "m"),
+                                microbatches=2, seed=0),
+            SHAPE, make_local_mesh(1),
+        )
+        h_full = t_full.run(3, log_every=1000)
+        h_micro = t_micro.run(3, log_every=1000)
+        for a, b in zip(jax.tree.leaves(t_full.params),
+                        jax.tree.leaves(t_micro.params)):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                atol=5e-4,
+            )
+
+    def test_straggler_flagged(self, tmp_path):
+        from repro.distributed.fault_tolerance import HeartbeatMonitor
+
+        mon = HeartbeatMonitor([f"h{i}" for i in range(4)])
+        tr = Trainer(
+            _cfg(), TrainConfig(checkpoint_dir=str(tmp_path)), SHAPE,
+            make_local_mesh(1), monitor=mon,
+        )
+        tr.run(2, log_every=1000)
+        # Manually skew one host and verify detection wiring.
+        for _ in range(20):
+            mon.beat("h3", 50.0)
+        assert mon.stragglers() == ["h3"]
+
+
+class TestServeEngine:
+    @pytest.fixture(scope="class")
+    def engine_setup(self):
+        cfg = _cfg()
+        params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+        return cfg, params
+
+    def test_all_requests_finish(self, engine_setup):
+        cfg, params = engine_setup
+        eng = ServeEngine(cfg, params, max_lanes=3, max_seq=64)
+        rng = np.random.default_rng(0)
+        for uid in range(7):  # more requests than lanes
+            eng.submit(Request(uid, rng.integers(3, 100, 5).tolist(),
+                               max_new_tokens=6))
+        out = eng.run()
+        assert sorted(out) == list(range(7))
+        assert all(1 <= len(v) <= 6 for v in out.values())
+
+    def test_continuous_batching_overlap(self, engine_setup):
+        """Later requests are admitted while earlier ones still decode."""
+        cfg, params = engine_setup
+        eng = ServeEngine(cfg, params, max_lanes=2, max_seq=64)
+        eng.submit(Request(0, [5, 6, 7], max_new_tokens=12))
+        eng.submit(Request(1, [8, 9], max_new_tokens=2))
+        eng.submit(Request(2, [10, 11], max_new_tokens=2))
+        saw_overlap = False
+        for _ in range(200):
+            eng.tick()
+            st = eng.stats()
+            if st["finished"] >= 1 and st["active"] >= 1:
+                saw_overlap = True
+            if st["finished"] == 3 and st["active"] == 0 and st["queued"] == 0:
+                break
+        assert saw_overlap
+        assert len(eng.finished) == 3
+
+    def test_greedy_deterministic(self, engine_setup):
+        cfg, params = engine_setup
+        runs = []
+        for _ in range(2):
+            eng = ServeEngine(cfg, params, max_lanes=1, max_seq=64, seed=0)
+            eng.submit(Request(0, [4, 5, 6], max_new_tokens=8))
+            runs.append(eng.run()[0])
+        assert runs[0] == runs[1]
+
+    def test_lane_isolation(self, engine_setup):
+        """A lane's output must not depend on what other lanes run."""
+        cfg, params = engine_setup
+        eng1 = ServeEngine(cfg, params, max_lanes=2, max_seq=64, seed=0)
+        eng1.submit(Request(0, [4, 5, 6], max_new_tokens=6))
+        solo = eng1.run()[0]
+        eng2 = ServeEngine(cfg, params, max_lanes=2, max_seq=64, seed=0)
+        eng2.submit(Request(0, [4, 5, 6], max_new_tokens=6))
+        eng2.submit(Request(1, [30, 31, 32, 33], max_new_tokens=6))
+        both = eng2.run()[0]
+        assert solo == both
