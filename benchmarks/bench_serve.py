@@ -1,0 +1,134 @@
+"""Serving benchmark: time-to-first-token and throughput, dense token-replay
+engine vs paged engine with batched prefill.
+
+TTFT is reported both in engine ticks (the architectural win: one batched
+forward pass vs one tick per prompt token) and wall-clock seconds. The
+paged engine's tick TTFT is 1 by construction; the replay engine's equals
+the prompt length.
+
+    PYTHONPATH=src python -m benchmarks.run --only serve
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ServeConfig, reduced
+from repro.configs.registry import get_config
+from repro.models.model import model_specs
+from repro.models.params import init_params
+from repro.serve.engine import Request, ServeEngine
+
+PROMPT_LENS = (32, 64, 128, 256)
+MAX_SEQ = 320
+MAX_NEW = 8
+
+
+def _setup():
+    cfg = dataclasses.replace(
+        reduced(get_config("qwen2-7b")), capacity_factor=100.0
+    )
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _serve_cfg(paged: bool, lanes: int) -> ServeConfig:
+    return ServeConfig(
+        max_lanes=lanes, max_seq=MAX_SEQ, block_size=16,
+        paged=paged, batched_prefill=paged,
+    )
+
+
+def _ttft(cfg, params, serve, prompt_len: int, reps: int = 3) -> tuple[int, float]:
+    """(ticks, seconds) from submission to the first generated token of one
+    request. The same engine first serves an identical throwaway request so
+    every XLA program (prefill bucket + decode tick buckets) is compiled
+    before timing; best of ``reps`` to shrug off machine noise."""
+    rng = np.random.default_rng(0)
+    eng = ServeEngine(cfg, params, serve=serve)
+    warm = rng.integers(3, cfg.vocab_size, prompt_len).tolist()
+    eng.submit(Request(999, warm, max_new_tokens=MAX_NEW))
+    eng.run()
+    best = (0, float("inf"))
+    for rep in range(1, reps + 1):
+        uid = 1000 + rep
+        eng.submit(Request(
+            uid, rng.integers(3, cfg.vocab_size, prompt_len).tolist(),
+            max_new_tokens=MAX_NEW,
+        ))
+        ticks = 0
+        t0 = time.perf_counter()
+        while eng.sched.timing[uid].first_token < 0:
+            eng.tick()
+            ticks += 1
+            if ticks > 10 * prompt_len:
+                break
+        sec = time.perf_counter() - t0
+        eng.run()  # drain
+        if sec < best[1]:
+            best = (ticks, sec)
+    return best
+
+
+def _throughput(cfg, params, serve, n_req: int = 8) -> float:
+    """tok/s over a mixed batch; the identical batch runs once un-timed on
+    the same engine so compiles aren't billed."""
+    eng = ServeEngine(cfg, params, serve=serve)
+
+    def submit_all(offset):
+        rng = np.random.default_rng(1)
+        for u in range(n_req):
+            plen = int(rng.integers(8, 48))
+            eng.submit(Request(
+                offset + u, rng.integers(3, cfg.vocab_size, plen).tolist(),
+                max_new_tokens=16,
+            ))
+
+    submit_all(0)
+    eng.run()  # warm every program shape
+    submit_all(1000)
+    t0 = time.perf_counter()
+    before = sum(len(v) for v in eng.finished.values())
+    eng.run()
+    dt = time.perf_counter() - t0
+    after = sum(len(v) for v in eng.finished.values())
+    return (after - before) / dt
+
+
+def run(csv_rows: list[str]) -> None:
+    cfg, params = _setup()
+    fused = dataclasses.replace(_serve_cfg(True, 1), prefill_impl="ss_fused")
+    for plen in PROMPT_LENS:
+        ticks_d, sec_d = _ttft(cfg, params, _serve_cfg(False, 1), plen)
+        ticks_p, sec_p = _ttft(cfg, params, _serve_cfg(True, 1), plen)
+        _, sec_f = _ttft(cfg, params, fused, plen)
+        csv_rows.append(f"serve,prompt{plen},ttft_ticks_dense,{ticks_d}")
+        csv_rows.append(f"serve,prompt{plen},ttft_ticks_paged,{ticks_p}")
+        csv_rows.append(f"serve,prompt{plen},ttft_s_dense,{sec_d:.4f}")
+        csv_rows.append(f"serve,prompt{plen},ttft_s_paged,{sec_p:.4f}")
+        csv_rows.append(f"serve,prompt{plen},ttft_s_paged_ss_fused,{sec_f:.4f}")
+        csv_rows.append(
+            f"serve,prompt{plen},ttft_tick_speedup,{ticks_d / max(ticks_p, 1):.1f}"
+        )
+        csv_rows.append(
+            f"serve,prompt{plen},ttft_wall_speedup,{sec_d / max(sec_p, 1e-9):.1f}"
+        )
+        csv_rows.append(
+            f"serve,prompt{plen},ttft_wall_speedup_ss_fused,"
+            f"{sec_d / max(sec_f, 1e-9):.1f}"
+        )
+    for lanes in (2, 4):
+        tps_d = _throughput(cfg, params, _serve_cfg(False, lanes))
+        tps_p = _throughput(cfg, params, _serve_cfg(True, lanes))
+        csv_rows.append(f"serve,lanes{lanes},tok_per_s_dense,{tps_d:.1f}")
+        csv_rows.append(f"serve,lanes{lanes},tok_per_s_paged,{tps_p:.1f}")
+
+
+if __name__ == "__main__":
+    rows: list[str] = []
+    run(rows)
+    print("name,case,metric,value")
+    print("\n".join(rows))

@@ -13,6 +13,7 @@ from benchmarks import (
     bench_accuracy,
     bench_complexity,
     bench_error_bound,
+    bench_serve,
     bench_spectrum,
     roofline,
 )
@@ -23,6 +24,7 @@ SUITES = {
     "accuracy": bench_accuracy.run,          # paper Theorem 1
     "error_bound": bench_error_bound.run,    # paper §7 eq. (12)
     "roofline": roofline.run,                # EXPERIMENTS.md §Roofline
+    "serve": bench_serve.run,                # paged vs dense serving TTFT
 }
 
 

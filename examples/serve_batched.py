@@ -1,9 +1,12 @@
-"""Batched serving with continuous batching over the SS decode path.
+"""Batched serving over the paged KV cache with batched prefill.
 
 Submits a bursty stream of requests (staggered arrivals, mixed lengths) to
-the lane-based engine and reports throughput + per-request latency.
+the engine and reports throughput, latency, and pool utilization. Compare
+engines with --mode:
 
-    PYTHONPATH=src python examples/serve_batched.py [--lanes 4] [--requests 12]
+    PYTHONPATH=src python examples/serve_batched.py                # paged
+    PYTHONPATH=src python examples/serve_batched.py --mode dense   # seed-style
+    PYTHONPATH=src python examples/serve_batched.py --mode ss_fused
 """
 from __future__ import annotations
 
@@ -14,7 +17,7 @@ import time
 import jax
 import numpy as np
 
-from repro.configs.base import reduced
+from repro.configs.base import ServeConfig, reduced
 from repro.configs.registry import get_config
 from repro.models.model import model_specs
 from repro.models.params import init_params
@@ -27,6 +30,14 @@ def main():
     ap.add_argument("--lanes", type=int, default=4)
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-seq", type=int, default=160)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="KV pool size in blocks (0 = lanes*max_seq/bs)")
+    ap.add_argument("--mode", default="paged",
+                    choices=["paged", "dense", "ss_fused"],
+                    help="paged = block pool + batched prefill; dense = "
+                         "seed-style per-lane caches + token replay; "
+                         "ss_fused = paged with Pallas-kernel prefill")
     ap.add_argument("--decode-impl", default="spectral_shift",
                     choices=["full", "spectral_shift"])
     args = ap.parse_args()
@@ -36,42 +47,47 @@ def main():
         decode_attention_impl=args.decode_impl, num_landmarks=16,
     )
     params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
-    engine = ServeEngine(cfg, params, max_lanes=args.lanes,
-                         max_seq=args.max_seq)
+    serve = ServeConfig(
+        max_lanes=args.lanes, max_seq=args.max_seq,
+        block_size=args.block_size, num_blocks=args.num_blocks,
+        paged=args.mode != "dense",
+        batched_prefill=args.mode != "dense",
+        prefill_impl="ss_fused" if args.mode == "ss_fused" else "replay",
+    )
+    engine = ServeEngine(cfg, params, serve=serve)
 
     rng = np.random.default_rng(0)
-    arrivals = {}  # uid -> tick of arrival
-    done_at = {}
     pending = list(range(args.requests))
     t0 = time.time()
     tick = 0
-    while pending or engine.stats()["active"] or engine.stats()["queued"]:
-        # Bursty arrivals: ~1/3 chance of a new request per tick.
+    while pending or not engine.sched.idle:
+        # Bursty arrivals: a new request roughly every third tick.
         if pending and (tick % 3 == 0):
             uid = pending.pop(0)
-            plen = int(rng.integers(4, 24))
+            plen = int(rng.integers(4, 48))
             engine.submit(Request(
                 uid, rng.integers(3, cfg.vocab_size, plen).tolist(),
                 max_new_tokens=int(rng.integers(8, 32)),
             ))
-            arrivals[uid] = tick
-        before = set(engine.finished)
         engine.tick()
-        for uid in set(engine.finished) - before:
-            done_at[uid] = tick
         tick += 1
         if tick > 20_000:
             break
     dt = time.time() - t0
 
-    total_tokens = sum(len(v) for v in engine.finished.values())
-    lat = [done_at[u] - arrivals[u] for u in done_at]
-    print(f"[serve_batched] impl={args.decode_impl} lanes={args.lanes}")
-    print(f"  {len(engine.finished)}/{args.requests} finished, "
+    st = engine.stats()
+    total_tokens = st["new_tokens"]
+    print(f"[serve_batched] mode={st['mode']} impl={args.decode_impl} "
+          f"lanes={args.lanes}")
+    print(f"  {st['finished']}/{args.requests} finished, "
           f"{total_tokens} new tokens in {dt:.2f}s "
           f"({total_tokens / dt:.1f} tok/s)")
-    print(f"  latency ticks: p50={int(np.median(lat))} "
-          f"p95={int(np.percentile(lat, 95))}")
+    print(f"  ttft ticks p50={st['ttft_ticks_p50']} "
+          f"latency ticks p50={st['latency_ticks_p50']} "
+          f"preemptions={st['preemptions']}")
+    if "kv" in st:
+        print(f"  kv pool: {st['kv']['num_blocks']} blocks, "
+              f"final utilization {st['kv']['utilization']:.2f}")
 
 
 if __name__ == "__main__":

@@ -111,6 +111,56 @@ SHAPE_PRESETS: dict[str, ShapeConfig] = {
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Serving-engine knobs: paged KV cache + two-phase scheduler.
+
+    ``paged=False, batched_prefill=False`` reproduces the seed engine exactly
+    (dense per-lane caches, one prompt token per tick); the defaults give the
+    vLLM-style engine (shared block pool, one-forward-pass prefill).
+    """
+
+    max_lanes: int = 4
+    max_seq: int = 512
+    block_size: int = 16          # tokens per KV block; must divide max_seq
+    num_blocks: int = 0           # 0 => max_lanes * max_seq / block_size
+    paged: bool = True            # block-paged pool vs dense per-lane caches
+    batched_prefill: bool = True  # whole-prompt forward vs token replay
+    prefill_bucket: int = 32      # prompts padded up to a bucket multiple
+                                  # (bounds the number of prefill compiles);
+                                  # rounded up to a block_size multiple
+    prefill_impl: str = "replay"  # replay  = per-token decode math, exact
+                                  # ss_fused = Pallas landmark_summary /
+                                  #   query_side kernels, approximate prompt
+                                  #   attention (landmark state still exact)
+    eos_id: int = 2
+    seed: int = 0
+
+    @property
+    def blocks_per_lane(self) -> int:
+        return self.max_seq // self.block_size
+
+    @property
+    def resolved_num_blocks(self) -> int:
+        # +1: block 0 is reserved as the permanently-zero block that backs
+        # unallocated block-table slots.
+        n = self.num_blocks or self.max_lanes * self.blocks_per_lane
+        # One lane must always be able to hold a full sequence, or a lone
+        # request could deadlock preempting itself forever.
+        return max(n, self.blocks_per_lane) + 1
+
+    def __post_init__(self):
+        # Only the block-paged layout needs the divisibility; the dense
+        # seed-compat mode accepts any max_seq, as the seed engine did.
+        if self.paged and self.max_seq % self.block_size:
+            raise ValueError(
+                f"block_size {self.block_size} must divide max_seq "
+                f"{self.max_seq} (or set paged=False)"
+            )
+        if self.prefill_impl not in ("replay", "ss_fused"):
+            raise ValueError(f"unknown prefill_impl {self.prefill_impl!r}")
+
+
+@dataclasses.dataclass(frozen=True)
 class TrainConfig:
     """Optimizer / trainer knobs (used by the real training driver)."""
 

@@ -43,7 +43,10 @@ def init_params(specs, key: jax.Array, dtype=jnp.float32):
     """Materialize real parameters. Each leaf gets an independent stream
     derived from its tree path, so adding parameters never reshuffles
     existing initializations."""
-    paths_and_specs, treedef = jax.tree.flatten_with_path(specs, is_leaf=_is_spec)
+    # jax.tree.flatten_with_path only exists on newer jax; use tree_util.
+    paths_and_specs, treedef = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=_is_spec
+    )
     leaves = []
     for path, spec in paths_and_specs:
         pdt = spec.dtype or dtype

@@ -80,10 +80,15 @@ def ss_decode_attention(
     pos: jnp.ndarray,      # scalar int32: index of the current token
     cfg: ModelConfig,
     scale: float,
+    seq_max: int | None = None,  # landmark segmentation horizon; defaults to
+                                 # the cache view length. Batched prefill
+                                 # passes the lane's full max_seq so segment
+                                 # routing matches later decode steps even
+                                 # though its K/V view is only prompt-long.
 ) -> jnp.ndarray:
     s_max = k_cache.shape[2]
     c = q_lmk_sum.shape[2]
-    counts = _landmark_counts(pos, s_max, c).astype(jnp.float32)  # (c,)
+    counts = _landmark_counts(pos, seq_max or s_max, c).astype(jnp.float32)  # (c,)
     valid = counts > 0
     q_l = q_lmk_sum.astype(jnp.float32) / jnp.maximum(counts, 1.0)[:, None]
     k_l = k_lmk_sum.astype(jnp.float32) / jnp.maximum(counts, 1.0)[:, None]
@@ -142,8 +147,11 @@ def _update_seq(cache_arr, new, pos):
     )
 
 
-def gqa_decode(p, cfg: ModelConfig, x, cache, pos, impl):
-    """x (B,1,D); cache {k,v,q_lmk,k_lmk}. Returns (attn_out, new_cache)."""
+def gqa_decode(p, cfg: ModelConfig, x, cache, pos, impl, seq_max=None):
+    """x (B,1,D); cache {k,v,q_lmk,k_lmk}. Returns (attn_out, new_cache).
+
+    ``seq_max`` pins the landmark segmentation horizon when the cache view
+    is shorter than the lane's logical sequence (paged short views)."""
     dt = x.dtype
     dh = cfg.resolved_head_dim
     q = jnp.einsum("bsd,dhe->bhse", x, p["w_q"].astype(dt))
@@ -158,7 +166,7 @@ def gqa_decode(p, cfg: ModelConfig, x, cache, pos, impl):
         q = apply_rotary(q, sin[None], cos[None])
         k = apply_rotary(k, sin[None], cos[None])
 
-    s_max = cache["k"].shape[2]
+    s_max = seq_max or cache["k"].shape[2]
     new_cache = dict(cache)
     new_cache["k"] = _update_seq(cache["k"], k, pos)
     new_cache["v"] = _update_seq(cache["v"], v, pos)
@@ -171,14 +179,15 @@ def gqa_decode(p, cfg: ModelConfig, x, cache, pos, impl):
     if impl == "spectral_shift":
         k_lmk = _broadcast_kv(new_cache["k_lmk"], cfg.num_heads)
         out = ss_decode_attention(
-            q, kb, vb, new_cache["q_lmk"], k_lmk, pos, cfg, scale
+            q, kb, vb, new_cache["q_lmk"], k_lmk, pos, cfg, scale,
+            seq_max=s_max,
         )
     else:
         out = full_decode_attention(q, kb, vb, pos, scale)
     return jnp.einsum("bhse,hed->bsd", out, p["w_o"].astype(dt)), new_cache
 
 
-def mla_decode(p, cfg: ModelConfig, x, cache, pos, impl):
+def mla_decode(p, cfg: ModelConfig, x, cache, pos, impl, seq_max=None):
     """Absorbed MLA decode: attention runs in the (kv_lora + rope) latent
     space; values are the latents, up-projected after mixing."""
     dt = x.dtype
@@ -201,7 +210,7 @@ def mla_decode(p, cfg: ModelConfig, x, cache, pos, impl):
     new_cache["rope"] = jax.lax.dynamic_update_slice(
         cache["rope"], k_rope.astype(cache["rope"].dtype), (0, pos, 0)
     )
-    s_max = cache["latent"].shape[1]
+    s_max = seq_max or cache["latent"].shape[1]
     k_eff_new = jnp.concatenate([c_kv, k_rope], axis=-1)[:, 0]  # (B, r+dr)
     new_cache["k_lmk"] = _lmk_add(cache["k_lmk"], k_eff_new, pos, s_max)
     new_cache["q_lmk"] = _lmk_add(cache["q_lmk"], q_eff[:, :, 0], pos, s_max)
@@ -219,7 +228,8 @@ def mla_decode(p, cfg: ModelConfig, x, cache, pos, impl):
             new_cache["k_lmk"][:, None], new_cache["q_lmk"].shape[:2] + new_cache["k_lmk"].shape[1:]
         )
         out_lat = ss_decode_attention(
-            q_eff, k_eff_b, lat_b, new_cache["q_lmk"], k_lmk, pos, cfg, scale
+            q_eff, k_eff_b, lat_b, new_cache["q_lmk"], k_lmk, pos, cfg, scale,
+            seq_max=s_max,
         )
     else:
         out_lat = full_decode_attention(q_eff, k_eff_b, lat_b, pos, scale)
@@ -302,12 +312,14 @@ def slstm_block_decode(p, cfg: ModelConfig, x, state):
 # --------------------------------------------------------------------------
 # whole-model decode step
 # --------------------------------------------------------------------------
-def _dense_layer_decode(lp, cfg, x, lcache, pos, impl):
+def _dense_layer_decode(lp, cfg, x, lcache, pos, impl, seq_max=None):
     h = rms_norm(x, lp["norm_attn"], cfg.norm_eps)
     if cfg.mla:
-        attn, new_cache = mla_decode(lp["attn"], cfg, h, lcache, pos, impl)
+        attn, new_cache = mla_decode(lp["attn"], cfg, h, lcache, pos, impl,
+                                     seq_max)
     else:
-        attn, new_cache = gqa_decode(lp["attn"], cfg, h, lcache, pos, impl)
+        attn, new_cache = gqa_decode(lp["attn"], cfg, h, lcache, pos, impl,
+                                     seq_max)
     x = x + attn
     h = rms_norm(x, lp["norm_mlp"], cfg.norm_eps)
     if cfg.moe:
@@ -317,9 +329,10 @@ def _dense_layer_decode(lp, cfg, x, lcache, pos, impl):
     return x + ff, new_cache
 
 
-def _hymba_layer_decode(lp, cfg, x, lcache, pos, impl):
+def _hymba_layer_decode(lp, cfg, x, lcache, pos, impl, seq_max=None):
     h = rms_norm(x, lp["norm_mix"], cfg.norm_eps)
-    attn, attn_cache = gqa_decode(lp["attn"], cfg, h, lcache["attn"], pos, impl)
+    attn, attn_cache = gqa_decode(lp["attn"], cfg, h, lcache["attn"], pos,
+                                  impl, seq_max)
     ssm, ssm_state = mamba_decode(lp["mamba"], cfg, h, lcache["mamba"])
     mixed = (
         lp["gate_attn"].astype(x.dtype) * attn + lp["gate_ssm"].astype(x.dtype) * ssm
@@ -330,8 +343,13 @@ def _hymba_layer_decode(lp, cfg, x, lcache, pos, impl):
     return x, {"attn": attn_cache, "mamba": ssm_state}
 
 
-def decode_step(params, cfg: ModelConfig, cache: Cache, tokens: jnp.ndarray):
-    """One decode step. tokens (B,1) int32. Returns (logits (B,1,V), cache)."""
+def decode_step(params, cfg: ModelConfig, cache: Cache, tokens: jnp.ndarray,
+                seq_max: int | None = None):
+    """One decode step. tokens (B,1) int32. Returns (logits (B,1,V), cache).
+
+    ``seq_max`` (optional) fixes the landmark segmentation horizon
+    independently of the K/V view length — the paged engine gathers views
+    only as long as the longest active sequence needs."""
     from repro.models.model import working_params
 
     params = working_params(params, cfg)
@@ -354,7 +372,7 @@ def decode_step(params, cfg: ModelConfig, cache: Cache, tokens: jnp.ndarray):
         return logits, {"pos": pos + 1, "layers": new_layers}
 
     if cfg.family == "audio":
-        return _whisper_decode(params, cfg, cache, tokens)
+        return _whisper_decode(params, cfg, cache, tokens, seq_max)
 
     layer_decode = {
         "dense": _dense_layer_decode,
@@ -366,14 +384,14 @@ def decode_step(params, cfg: ModelConfig, cache: Cache, tokens: jnp.ndarray):
     if cfg.scan_layers and not isinstance(params["layers"], list):
         def body(y, xs):
             lp, lc = xs
-            y, nc = layer_decode(lp, cfg, y, lc, pos, impl)
+            y, nc = layer_decode(lp, cfg, y, lc, pos, impl, seq_max)
             return y, nc
 
         x, new_layer_cache = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
     else:
         new_list = []
         for lp, lc in zip(params["layers"], cache["layers"]):
-            x, nc = layer_decode(lp, cfg, x, lc, pos, impl)
+            x, nc = layer_decode(lp, cfg, x, lc, pos, impl, seq_max)
             new_list.append(nc)
         new_layer_cache = new_list
 
@@ -385,7 +403,7 @@ def decode_step(params, cfg: ModelConfig, cache: Cache, tokens: jnp.ndarray):
     return logits, new_cache
 
 
-def _whisper_decode(params, cfg: ModelConfig, cache, tokens):
+def _whisper_decode(params, cfg: ModelConfig, cache, tokens, seq_max=None):
     pos = cache["pos"]
     dt = jnp.dtype(cfg.compute_dtype)
     x = _embed_tokens(params, cfg, tokens).astype(dt)
@@ -396,7 +414,7 @@ def _whisper_decode(params, cfg: ModelConfig, cache, tokens):
     new_layers = []
     for i, (lp, lc) in enumerate(zip(params["layers"], cache["layers"])):
         h = layer_norm(x, lp["ln_self"]["scale"], lp["ln_self"]["bias"], cfg.norm_eps)
-        attn, nc = gqa_decode(lp["self_attn"], cfg, h, lc, pos, impl)
+        attn, nc = gqa_decode(lp["self_attn"], cfg, h, lc, pos, impl, seq_max)
         x = x + attn
         h = layer_norm(x, lp["ln_cross"]["scale"], lp["ln_cross"]["bias"], cfg.norm_eps)
         ck, cv = cache["cross_k"][i], cache["cross_v"][i]

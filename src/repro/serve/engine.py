@@ -1,21 +1,31 @@
-"""Continuous-batching serving engine over the spectral-shift decode path.
+"""Continuous-batching serving engine: paged KV cache + two-phase scheduler
+over the spectral-shift decode path.
 
-vLLM-style lane scheduling on top of ``decode_step``:
+vLLM-style serving on top of ``decode_step``:
 
-* a fixed pool of ``max_lanes`` decode lanes, each with its own KV cache +
-  landmark state and its own position counter (``decode_step`` is vmapped
-  over lanes, so per-lane ``pos`` comes for free);
-* requests queue up, are admitted into free lanes, prefill runs *inline*
-  (prompt tokens are fed through the decode path one per engine tick —
-  chunked prefill; a production deployment would batch-prefill with the
-  Pallas kernels, see kernels/ops.py) and generation continues in the same
-  lane until EOS / max_new_tokens;
-* every engine tick advances ALL active lanes with one jitted batched step —
-  admission/retirement never stalls other lanes (continuous batching).
+* a fixed pool of ``max_lanes`` decode lanes share a **block-paged KV
+  cache** (serve/paged.py): K/V lives in fixed-size token blocks handed out
+  by a free-list allocator, so memory tracks the working set instead of
+  ``max_lanes * max_seq``; landmark running sums — the paper-technique state
+  — are a fixed ``(c, d)`` summary per layer and stay dense per lane;
+* requests wait in a FCFS queue and are admitted when a lane AND enough
+  blocks for their prompt are available (serve/scheduler.py). If decode
+  growth exhausts the pool, the youngest request is preempted (blocks
+  recycled, request requeued, recompute on re-admission);
+* **batched prefill** (serve/prefill.py) pushes the whole prompt through
+  the model in one jitted forward pass, writing K/V straight into the
+  allocated blocks and seeding the landmark sums — first-token latency is
+  one tick instead of O(prompt_len) ticks of token replay;
+* every engine tick advances ALL decoding lanes with one jitted batched
+  step — admission/retirement never stalls other lanes.
 
-The engine is deliberately synchronous and single-host; the multi-pod
-serving story (TP-sharded lanes) reuses the same ``decode_step`` under pjit
-— see launch/dryrun.py's decode cells, which lower exactly that.
+``ServeConfig(paged=False, batched_prefill=False)`` reproduces the seed
+engine (dense per-lane caches, token-replay prefill) — kept as the
+benchmark/equivalence baseline. Greedy outputs are token-identical between
+the two modes; for MoE families this holds in the dropless capacity regime
+(capacity dropping is sequence-length dependent, so whole-prompt prefill
+and token-by-token replay legitimately route differently when tokens
+overflow expert capacity — same caveat as tests/test_decode.py).
 """
 from __future__ import annotations
 
@@ -28,10 +38,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
-from repro.models.params import init_params
+from repro.configs.base import ModelConfig, ServeConfig
 from repro.serve.decode import decode_step
-from repro.serve.kv_cache import cache_specs
+from repro.serve.paged import BlockAllocator, PagedKVCache
+from repro.serve.prefill import make_prefill_fn, prefill_supported
+from repro.serve.scheduler import Scheduler
 
 
 @dataclasses.dataclass
@@ -48,7 +59,8 @@ class _Lane:
     prompt_left: deque = dataclasses.field(default_factory=deque)
     generated: list[int] = dataclasses.field(default_factory=list)
     next_token: int = 0
-    steps: int = 0
+    pos: int = 0          # cache position the next decode step writes to
+    prefilled_tick: int = -1  # tick of batched prefill (skip decode that tick)
 
     @property
     def free(self) -> bool:
@@ -61,102 +73,205 @@ class ServeEngine:
         cfg: ModelConfig,
         params,
         *,
-        max_lanes: int = 4,
-        max_seq: int = 512,
-        eos_id: int = 2,
-        seed: int = 0,
+        max_lanes: Optional[int] = None,
+        max_seq: Optional[int] = None,
+        eos_id: Optional[int] = None,
+        seed: Optional[int] = None,
+        serve: Optional[ServeConfig] = None,
     ):
-        self.cfg, self.params = cfg, params
-        self.max_lanes, self.max_seq, self.eos_id = max_lanes, max_seq, eos_id
-        self.queue: deque[Request] = deque()
-        self.lanes = [_Lane() for _ in range(max_lanes)]
+        serve = serve or ServeConfig()
+        overrides = {
+            k: v
+            for k, v in dict(max_lanes=max_lanes, max_seq=max_seq,
+                             eos_id=eos_id, seed=seed).items()
+            if v is not None
+        }
+        if overrides:
+            serve = dataclasses.replace(serve, **overrides)
+        self.cfg, self.params, self.serve = cfg, params, serve
+        self.max_lanes, self.max_seq = serve.max_lanes, serve.max_seq
+        self.eos_id = serve.eos_id
+        self.lanes = [_Lane() for _ in range(self.max_lanes)]
         self.finished: dict[int, list[int]] = {}
-        self._key = jax.random.PRNGKey(seed)
+        self._key = jax.random.PRNGKey(serve.seed)
+        self._tick = 0
 
-        # Per-lane cache: cache_specs with B=1, stacked on a leading lane
-        # axis; decode_step vmapped over that axis gives per-lane positions.
-        specs = cache_specs(cfg, 1, max_seq)
-        one = init_params(specs, jax.random.PRNGKey(0))  # zeros (init="zeros")
-        self.cache = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (max_lanes, *x.shape)).copy(), one
+        self.kv = PagedKVCache(cfg, serve)
+        alloc = (
+            BlockAllocator(serve.resolved_num_blocks, serve.block_size)
+            if self.kv.has_paged_leaves else None
         )
-        step = functools.partial(decode_step, self.params, cfg)
-        self._step = jax.jit(jax.vmap(step))
+        self.sched = Scheduler(alloc, self.max_lanes, serve.blocks_per_lane)
+        self.sched.requeue_cb = self._on_preempt
+
+        # landmark horizon pinned to max_seq regardless of view length
+        step = functools.partial(
+            decode_step, self.params, cfg, seq_max=self.max_seq
+        )
+        # whole decode tick (gather -> step -> commit) as one XLA program
+        self._fused_step = self.kv.make_fused_step(jax.vmap(step))
+        self.batched = serve.batched_prefill and prefill_supported(cfg)
+        if self.batched:
+            self._prefill = make_prefill_fn(
+                params, cfg, seq_max=self.max_seq,
+                prefill_impl=serve.prefill_impl,
+            )
+        # bucket rounded up to a block multiple so prefill writes whole blocks
+        b = serve.prefill_bucket
+        self._bucket = -(-b // serve.block_size) * serve.block_size
 
     # -- public API ----------------------------------------------------------
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        if len(req.prompt) >= self.max_seq:
+            raise ValueError(
+                f"prompt len {len(req.prompt)} >= max_seq {self.max_seq}"
+            )
+        self.sched.submit(req)
 
     def run(self, max_ticks: int = 10_000) -> dict[int, list[int]]:
         """Drive until queue + lanes drain (or tick budget). Returns outputs."""
         for _ in range(max_ticks):
-            if not self.queue and all(l.free for l in self.lanes):
+            if self.sched.idle:
                 break
             self.tick()
         return self.finished
 
-    # -- scheduling ------------------------------------------------------------
-    def _admit(self) -> None:
-        for i, lane in enumerate(self.lanes):
-            if lane.free and self.queue:
-                req = self.queue.popleft()
-                lane.req = req
-                lane.prompt_left = deque(req.prompt)
-                lane.generated = []
-                lane.steps = 0
-                lane.next_token = lane.prompt_left.popleft()
-                # Zero this lane's cache (fresh request).
-                self.cache = jax.tree.map(
-                    lambda c: c.at[i].set(jnp.zeros_like(c[i])), self.cache
-                )
+    # -- scheduling hooks ------------------------------------------------------
+    def _on_preempt(self, lane_idx: int) -> Optional[Request]:
+        lane = self.lanes[lane_idx]
+        req = lane.req
+        self.lanes[lane_idx] = _Lane()
+        return req
 
     def _retire(self, i: int) -> None:
         lane = self.lanes[i]
         self.finished[lane.req.uid] = list(lane.generated)
+        self.sched.release(i)
         self.lanes[i] = _Lane()
+
+    # -- prefill phase ---------------------------------------------------------
+    def _run_prefill(self, i: int, req: Request) -> None:
+        lane = self.lanes[i]
+        n = len(req.prompt)
+        if self.serve.prefill_impl == "ss_fused":
+            # The fused kernels have no key-validity mask: run unpadded
+            # (one XLA program per distinct prompt length).
+            n_pad = n
+        else:
+            n_pad = min(-(-n // self._bucket) * self._bucket, self.max_seq)
+        tokens = np.zeros((1, n_pad), np.int32)
+        tokens[0, :n] = req.prompt
+        logits, pcache = self._prefill(
+            jnp.asarray(tokens), jnp.asarray(n, jnp.int32)
+        )
+        self.kv.write_prefill(i, pcache, self.sched.table_row(i), n_tokens=n)
+        lane.pos = n
+        lane.prefilled_tick = self._tick
+        lg = np.asarray(logits[0, n - 1, : self.cfg.vocab_size], np.float32)
+        self._emit_token(i, lg)
+
+    # -- sampling / retirement -------------------------------------------------
+    def _sample(self, lane: _Lane, lg: np.ndarray) -> int:
+        if lane.req.temperature > 0:
+            self._key, sub = jax.random.split(self._key)
+            gumbel = np.asarray(jax.random.gumbel(sub, lg.shape))
+            return int(np.argmax(lg / lane.req.temperature + gumbel))
+        return int(np.argmax(lg))
+
+    def _emit_token(self, i: int, lg: np.ndarray) -> None:
+        lane = self.lanes[i]
+        tok = self._sample(lane, lg)
+        lane.generated.append(tok)
+        self.sched.note_token(lane.req.uid)
+        done = (
+            tok == self.eos_id
+            or len(lane.generated) >= lane.req.max_new_tokens
+            or lane.pos + 1 >= self.max_seq
+        )
+        if done:
+            self._retire(i)
+        else:
+            lane.next_token = tok
 
     # -- one engine tick -------------------------------------------------------
     def tick(self) -> None:
-        self._admit()
-        active = [i for i, l in enumerate(self.lanes) if not l.free]
+        self._tick += 1
+        self.sched.tick_now = self._tick
+
+        for i, req in self.sched.admit():
+            lane = self.lanes[i] = _Lane(req=req)
+            if self.batched and req.prompt:
+                # prefill overwrites every dense leaf for the lane; no
+                # separate zeroing needed
+                self._run_prefill(i, req)
+            else:
+                self.kv.zero_lane_dense(i)
+                lane.prompt_left = deque(req.prompt)
+                lane.generated = []
+                lane.pos = 0
+                lane.next_token = (
+                    lane.prompt_left.popleft() if lane.prompt_left else 0
+                )
+
+        # decode phase: every occupied lane not prefilled this very tick
+        candidates = [
+            i for i, l in enumerate(self.lanes)
+            if not l.free and l.prefilled_tick != self._tick
+        ]
+        # grow block tables (may preempt — youngest first); a lane whose own
+        # request was preempted (or that cannot grow) drops out of the step
+        active = []
+        for i in candidates:
+            if self.lanes[i].free:  # preempted as a victim earlier this loop
+                continue
+            if not self.sched.ensure_block(i, self.lanes[i].pos):
+                continue
+            active.append(i)
+        active = [i for i in active if not self.lanes[i].free]
         if not active:
             return
+
+        tables = self.sched.tables()
         tokens = np.zeros((self.max_lanes, 1, 1), np.int32)
+        positions = np.zeros(self.max_lanes, np.int32)
+        mask = np.zeros(self.max_lanes, bool)
         for i in active:
             tokens[i, 0, 0] = self.lanes[i].next_token
-        logits, self.cache = self._step(self.cache, jnp.asarray(tokens))
-        logits = np.asarray(logits[:, 0, 0])  # (lanes, V)
-
-        self._key, sub = jax.random.split(self._key)
-        gumbel = np.asarray(
-            jax.random.gumbel(sub, (self.max_lanes, logits.shape[-1]))
+            positions[i] = self.lanes[i].pos
+            mask[i] = True
+        nb_view = self.kv.view_blocks_needed(positions, active)
+        logits, new_storage = self._fused_step(
+            self.kv._storage, jnp.asarray(tables), jnp.asarray(tokens),
+            jnp.asarray(positions), jnp.asarray(mask), nb_view,
         )
+        self.kv._storage = list(new_storage)
+        logits = np.asarray(logits[:, 0, 0], np.float32)
+
         for i in active:
             lane = self.lanes[i]
-            lane.steps += 1
-            if lane.prompt_left:  # still prefilling: ignore the sample
+            lane.pos += 1
+            if lane.prompt_left:  # replay prefill: ignore the sample
                 lane.next_token = lane.prompt_left.popleft()
                 continue
-            lg = logits[i, : self.cfg.vocab_size]
-            if lane.req.temperature > 0:
-                tok = int(np.argmax(lg / lane.req.temperature + gumbel[i, : lg.shape[0]]))
-            else:
-                tok = int(np.argmax(lg))
-            lane.generated.append(tok)
-            done = (
-                tok == self.eos_id
-                or len(lane.generated) >= lane.req.max_new_tokens
-                or lane.steps >= self.max_seq - 1
-            )
-            if done:
-                self._retire(i)
-            else:
-                lane.next_token = tok
+            self._emit_token(i, logits[i, : self.cfg.vocab_size])
+
+    # -- maintenance -----------------------------------------------------------
+    def defragment(self) -> int:
+        """Compact live blocks onto the lowest pool ids (e.g. before
+        shrinking or snapshotting the pool) and permute device storage to
+        match. Safe between ticks; block tables stay valid. Returns the
+        number of blocks moved."""
+        if self.sched.allocator is None:
+            return 0
+        mapping = self.sched.allocator.defragment()
+        self.kv.apply_mapping(mapping)
+        return len(mapping)
 
     # -- introspection ---------------------------------------------------------
     def stats(self) -> dict:
-        return {
-            "queued": len(self.queue),
-            "active": sum(not l.free for l in self.lanes),
-            "finished": len(self.finished),
-        }
+        st = self.sched.stats()
+        st["mode"] = (
+            f"{'paged' if self.kv.has_paged_leaves else 'dense'}"
+            f"+{'batched' if self.batched else 'replay'}-prefill"
+        )
+        return st

@@ -89,6 +89,28 @@ def _stack(layer: dict, n: int) -> dict:
     return stack_layer_specs(layer, n)
 
 
+def cache_leaf_layout(cfg: ModelConfig, seq_len: int):
+    """Flatten the B=1 cache tree for block-paged storage planning.
+
+    Returns ``(leaves, treedef)`` where each leaf is ``(spec, seq_axis)``:
+    ``seq_axis`` is the index of the ``cache_seq`` dimension (pageable into
+    token blocks) or None for fixed-size state (landmark running sums, SSM
+    states, ``pos``) that stays dense per lane."""
+    import jax
+
+    from repro.models.params import ParamSpec
+
+    specs = cache_specs(cfg, 1, seq_len)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    leaves = [
+        (spec, spec.axes.index(SEQ) if SEQ in spec.axes else None)
+        for _, spec in paths
+    ]
+    return leaves, treedef
+
+
 def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
     """Full decode-state ParamSpec tree for one model."""
     specs: dict = {"pos": ParamSpec((), (), init="zeros", dtype=jnp.int32)}

@@ -1,0 +1,327 @@
+"""Block-paged KV cache: vLLM-style fixed-size token blocks over the
+spectral-shift decode state.
+
+Two pieces:
+
+* ``BlockAllocator`` — host-side bookkeeping: a free list of fixed-size
+  token blocks, per-request block tables, alloc/free/defragment and
+  utilization stats. Block 0 is reserved as the permanently-zero block that
+  backs unallocated block-table slots, so gathers never need a validity
+  mask (the decode path's causal key mask already ignores positions past
+  ``pos``).
+
+* ``PagedKVCache`` — maps the ``cache_specs`` ParamSpec tree onto
+  block-shaped device storage. Leaves with a ``cache_seq`` axis (attention
+  K/V, MLA latents) live in shared block pools shaped
+  ``(num_blocks, ..., block_size, ...)``; everything else (landmark running
+  sums, SSM states, ``pos``) is small and fixed-size, so it stays dense per
+  lane exactly like the seed engine. ``make_fused_step`` builds the whole
+  decode tick (gather lane views -> batched decode -> commit touched
+  blocks) as one jitted program; ``write_prefill`` installs a batched
+  prefill's result; ``gather_views`` assembles the lane-stacked dense tree
+  for inspection/tests.
+
+The memory win is at the pool: ``num_blocks`` is sized to the expected
+working set, not ``max_lanes * max_seq``. The per-tick gather materializes a
+transient dense view (the decode kernels are contiguous-K/V); a paged
+attention kernel would remove that copy and is left as a follow-up.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ServeConfig
+from repro.models.params import ParamSpec
+from repro.serve.kv_cache import cache_leaf_layout
+
+ZERO_BLOCK = 0  # reserved all-zero block id backing unallocated table slots
+
+
+# ==========================================================================
+# Host-side block bookkeeping
+# ==========================================================================
+class BlockAllocator:
+    """Free-list allocator of fixed-size token blocks with per-request
+    block tables. Pure host-side bookkeeping; device storage is owned by
+    ``PagedKVCache``."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError("need at least one allocatable block past block 0")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # LIFO free list (recently freed blocks are reused first — they are
+        # the ones most likely still resident in cache). Block 0 excluded.
+        self._free: list[int] = list(range(num_blocks - 1, 0, -1))
+        self.tables: dict[int, list[int]] = {}  # request uid -> block ids
+
+    # -- queries ------------------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return (self.num_blocks - 1) - len(self._free)
+
+    def blocks_for_tokens(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    def can_alloc(self, n_blocks: int) -> bool:
+        return n_blocks <= self.num_free
+
+    def stats(self) -> dict:
+        usable = self.num_blocks - 1
+        return {
+            "num_blocks": usable,
+            "blocks_used": self.num_used,
+            "blocks_free": self.num_free,
+            "utilization": self.num_used / max(usable, 1),
+            "requests": len(self.tables),
+        }
+
+    # -- mutation -----------------------------------------------------------
+    def alloc(self, uid: int, n_blocks: int) -> Optional[list[int]]:
+        """Append ``n_blocks`` fresh blocks to ``uid``'s table. Returns the
+        new block ids, or None (no state change) if the pool is short."""
+        if n_blocks > self.num_free:
+            return None
+        got = [self._free.pop() for _ in range(n_blocks)]
+        self.tables.setdefault(uid, []).extend(got)
+        return got
+
+    def free(self, uid: int) -> list[int]:
+        """Release every block owned by ``uid``; returns the freed ids."""
+        blocks = self.tables.pop(uid, [])
+        self._free.extend(reversed(blocks))
+        return blocks
+
+    def defragment(self) -> dict[int, int]:
+        """Compact live blocks onto the lowest ids. Returns the {old: new}
+        mapping (identity entries omitted); the caller must permute device
+        storage with the same mapping (``PagedKVCache.apply_mapping``)."""
+        live = sorted(b for blocks in self.tables.values() for b in blocks)
+        mapping = {
+            old: new for new, old in enumerate(live, start=1) if old != new
+        }
+        if mapping:
+            for blocks in self.tables.values():
+                blocks[:] = [mapping.get(b, b) for b in blocks]
+            n_live = len(live)
+            self._free = list(range(self.num_blocks - 1, n_live, -1))
+        return mapping
+
+
+# ==========================================================================
+# Device-side block-pool storage
+# ==========================================================================
+@dataclasses.dataclass
+class _LeafInfo:
+    spec: ParamSpec
+    seq_axis: Optional[int]  # index of the cache_seq axis, None = dense leaf
+
+
+def _leaf_infos(cfg: ModelConfig, max_seq: int) -> tuple[list[_LeafInfo], Any]:
+    leaves, treedef = cache_leaf_layout(cfg, max_seq)
+    return [_LeafInfo(spec, j) for spec, j in leaves], treedef
+
+
+class PagedKVCache:
+    """Block-pool device storage for one engine's decode state.
+
+    With ``paged=False`` every leaf (including K/V) is stored lane-dense —
+    bitwise the seed engine's layout — which is the comparison baseline for
+    the paged path and the fallback when a model has no sequence-shaped
+    cache at all (pure SSM stacks)."""
+
+    def __init__(self, cfg: ModelConfig, serve: ServeConfig):
+        self.cfg, self.serve = cfg, serve
+        self.block_size = serve.block_size
+        self.max_lanes, self.max_seq = serve.max_lanes, serve.max_seq
+        self.num_blocks = serve.resolved_num_blocks
+        self.infos, self.treedef = _leaf_infos(cfg, serve.max_seq)
+        self.paged = serve.paged and any(
+            i.seq_axis is not None for i in self.infos
+        )
+        self._storage: list[jnp.ndarray] = []
+        for info in self.infos:
+            dt = info.spec.dtype or jnp.float32
+            if self.paged and info.seq_axis is not None:
+                shape = list(info.spec.shape)
+                shape[info.seq_axis] = self.block_size
+                self._storage.append(
+                    jnp.zeros((self.num_blocks, *shape), dt)
+                )
+            else:
+                self._storage.append(
+                    jnp.zeros((self.max_lanes, *info.spec.shape), dt)
+                )
+
+    @property
+    def has_paged_leaves(self) -> bool:
+        return self.paged
+
+    def pool_tokens(self) -> int:
+        """Capacity of the shared pool, in tokens (0 when not paged)."""
+        return (self.num_blocks - 1) * self.block_size if self.paged else 0
+
+    # -- assemble the dense view decode_step expects -------------------------
+    def _gather_leaf(self, arr, info: _LeafInfo, tables) -> jnp.ndarray:
+        """Pool (num_blocks, ..., bs, ...) + tables (lanes, nb) ->
+        lane-stacked view (lanes, ..., nb*bs, ...)."""
+        j = info.seq_axis
+        g = jnp.take(arr, tables, axis=0)  # (lanes, nb, ..., bs, ...)
+        g = jnp.moveaxis(g, 1, 1 + j)      # nb next to its bs axis
+        shape = info.spec.shape
+        view_len = tables.shape[1] * self.block_size
+        return g.reshape(self.max_lanes, *shape[:j], view_len,
+                         *shape[j + 1:])
+
+    def gather_views(self, tables: np.ndarray) -> Any:
+        """tables (max_lanes, blocks_per_lane) int32, ZERO_BLOCK where
+        unallocated. Returns the lane-stacked dense cache tree: every leaf
+        (max_lanes, *spec.shape)."""
+        tb = jnp.asarray(tables, jnp.int32)
+        leaves = [
+            arr if (not self.paged or info.seq_axis is None)
+            else self._gather_leaf(arr, info, tb)
+            for arr, info in zip(self._storage, self.infos)
+        ]
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    # -- write paths ----------------------------------------------------------
+    def write_prefill(
+        self, lane: int, prefill_tree: Any, table_row: np.ndarray,
+        n_tokens: int,
+    ) -> None:
+        """Install a batched-prefill result (a B=1 cache tree whose seq
+        leaves are padded-prompt long, a block multiple) into ``lane``:
+        the first ``ceil(n_tokens / block_size)`` blocks of each seq leaf go
+        to the lane's allocated blocks (positions past ``n_tokens`` are
+        zero-masked, matching what unallocated slots read as), dense leaves
+        overwrite the lane's dense slots."""
+        new_leaves = jax.tree_util.tree_leaves(prefill_tree)
+        bs = self.block_size
+        nb = -(-n_tokens // bs)
+        for idx, info in enumerate(self.infos):
+            j = info.seq_axis
+            leaf = new_leaves[idx]
+            if not self.paged or j is None:
+                if j is not None and leaf.shape[j] != self.max_seq:
+                    pad = [(0, 0)] * leaf.ndim
+                    pad[j] = (0, self.max_seq - leaf.shape[j])
+                    leaf = jnp.pad(leaf, pad)
+                self._storage[idx] = self._storage[idx].at[lane].set(leaf)
+                continue
+            if leaf.shape[j] % bs:  # ss_fused runs unpadded prompt lengths
+                pad = [(0, 0)] * leaf.ndim
+                pad[j] = (0, -leaf.shape[j] % bs)
+                leaf = jnp.pad(leaf, pad)
+            shape = leaf.shape
+            n_blocks_pad = shape[j] // bs
+            split = leaf.reshape(
+                *shape[:j], n_blocks_pad, bs, *shape[j + 1:]
+            )
+            split = jnp.moveaxis(split, j, 0)  # (n_blocks_pad, ..., bs, ...)
+            ids = jnp.asarray(table_row[:nb], jnp.int32)
+            self._storage[idx] = self._storage[idx].at[ids].set(split[:nb])
+
+    def make_fused_step(self, vmapped_decode_step):
+        """One jitted XLA program for the whole decode tick:
+        gather lane views from the pool -> batched decode step -> commit
+        (dense leaves masked to active lanes; the touched K/V block of each
+        active lane scattered back). Pool buffers are donated, so block
+        writes update in place instead of copying the pool every tick.
+
+        Views are gathered only ``n_view_blocks`` long — the engine passes
+        the (bucketed) block count of the longest active sequence, so short
+        working sets pay short gathers and short attention reads; the
+        decode step's ``seq_max`` keeps landmark segmentation pinned to the
+        full horizon regardless of view length.
+
+        Returns ``fn(storage, tables, tokens, positions, active,
+        n_view_blocks) -> (logits, new_storage)``; one XLA program compiles
+        per distinct ``n_view_blocks``; the engine swaps its storage list
+        for the returned one."""
+        infos, treedef = self.infos, self.treedef
+        paged, bs = self.paged, self.block_size
+        n_lanes = self.max_lanes
+
+        def fused(storage, tables, tokens, positions, active):
+            views = [
+                arr if (not paged or info.seq_axis is None)
+                else self._gather_leaf(arr, info, tables)
+                for arr, info in zip(storage, infos)
+            ]
+            cache = jax.tree_util.tree_unflatten(treedef, views)
+            logits, new_cache = vmapped_decode_step(cache, tokens)
+            new_leaves = jax.tree_util.tree_leaves(new_cache)
+            out = []
+            for arr, new, info in zip(storage, new_leaves, infos):
+                if not paged or info.seq_axis is None:
+                    mask = active.reshape((n_lanes,) + (1,) * (arr.ndim - 1))
+                    out.append(jnp.where(mask, new.astype(arr.dtype), arr))
+                    continue
+                j = info.seq_axis
+
+                def ext(per_lane, p, j=j):
+                    return jax.lax.dynamic_slice_in_dim(
+                        per_lane, (p // bs) * bs, bs, axis=j
+                    )
+
+                blocks = jax.vmap(ext)(new, positions)
+                ids = tables[jnp.arange(n_lanes), positions // bs]
+                # inactive lanes dump into the zero block, re-zeroed below
+                ids = jnp.where(active, ids, ZERO_BLOCK)
+                pool = arr.at[ids].set(blocks.astype(arr.dtype))
+                pool = pool.at[ZERO_BLOCK].set(
+                    jnp.zeros_like(pool[ZERO_BLOCK])
+                )
+                out.append(pool)
+            return logits, out
+
+        jitted = jax.jit(fused, donate_argnums=(0,))
+
+        def call(storage, tables, tokens, positions, active, n_view_blocks):
+            if self.paged:
+                tables = tables[:, :n_view_blocks]
+            return jitted(storage, tables, tokens, positions, active)
+
+        return call
+
+    def view_blocks_needed(self, positions, lanes) -> int:
+        """Bucketed (next power of two) block count covering the deepest
+        active position; a handful of tick programs total."""
+        if not self.paged or not lanes:
+            return self.max_seq // self.block_size
+        need = max(int(positions[i]) // self.block_size + 1 for i in lanes)
+        nb = 1
+        while nb < need:
+            nb *= 2
+        return min(nb, self.max_seq // self.block_size)
+
+    def zero_lane_dense(self, lane: int) -> None:
+        """Fresh-request reset of a lane's dense (non-paged) state."""
+        for idx, info in enumerate(self.infos):
+            if self.paged and info.seq_axis is not None:
+                continue
+            self._storage[idx] = self._storage[idx].at[lane].set(
+                jnp.zeros_like(self._storage[idx][lane])
+            )
+
+    def apply_mapping(self, mapping: dict[int, int]) -> None:
+        """Permute pool storage after ``BlockAllocator.defragment``."""
+        if not mapping or not self.paged:
+            return
+        old = jnp.asarray(list(mapping.keys()), jnp.int32)
+        new = jnp.asarray(list(mapping.values()), jnp.int32)
+        for idx, info in enumerate(self.infos):
+            if info.seq_axis is None:
+                continue
+            arr = self._storage[idx]
+            self._storage[idx] = arr.at[new].set(arr[old])

@@ -1,0 +1,296 @@
+"""Batched prompt prefill: one jitted forward pass seeds the decode state.
+
+The seed engine replayed prompts token-by-token through ``decode_step`` —
+O(prompt_len) engine ticks (each a host round-trip) before the first
+generated token. The spectral-shifting method makes whole-prompt prefill
+cheap: the per-layer landmark state is just a fixed ``(c, d)`` running-sum
+summary, so the entire prompt can be pushed through the model at once and
+the cache seeded directly:
+
+* K/V (or MLA latent/rope) for all prompt positions in one projection;
+* ``q_lmk``/``k_lmk`` running sums as masked segment sums over the prompt
+  (exactly what per-token ``_lmk_add`` would have accumulated);
+* per-position attention outputs, three ways (``prefill_impl``):
+    - ``replay``  — the decode-path attention math vmapped over positions
+      (per-position landmark prefixes), numerically equivalent to feeding
+      tokens one at a time; honors ``cfg.decode_attention_impl``. MoE
+      caveat: expert capacity is computed over the whole prompt here but
+      per token in replay, so equivalence for moe families holds only in
+      the dropless regime (large ``capacity_factor``);
+    - ``ss_fused`` — the Pallas ``landmark_summary``/``query_side`` kernels
+      (kernels/ss_attention.py) over the whole prompt: the O(n) streamed
+      formulation, approximate for causal prompts (landmarks see the full
+      prompt) but the cache it leaves behind is still exact.
+
+In ``replay`` mode prompts are right-padded to a bucket multiple so only a
+handful of XLA programs ever compile; all padded positions are masked out
+of cache writes and landmark sums. ``ss_fused`` runs unpadded (the Pallas
+kernels carry no key-validity mask, so padding would leak into the softmax
+normalization) — one XLA program per distinct prompt length, the tradeoff
+for the ~12x faster prefill.
+
+Supported for the attention-cache families (dense / moe / vlm, GQA or MLA).
+Hybrid and SSM stacks keep token replay (their recurrent state is inherently
+sequential); the engine falls back automatically.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import _broadcast_kv, ss_config_from
+from repro.models.layers import apply_rotary, mlp_forward, rms_norm, rotary_angles
+from repro.models.model import _embed_tokens, _unembed, working_params
+from repro.models.moe import moe_forward
+from repro.models.params import ParamSpec
+from repro.serve.decode import (
+    _segment_len,
+    full_decode_attention,
+    ss_decode_attention,
+)
+from repro.serve.kv_cache import cache_specs
+
+
+def prefill_supported(cfg: ModelConfig) -> bool:
+    """Families whose whole decode state is derivable in one forward pass."""
+    return cfg.family in ("dense", "moe", "vlm")
+
+
+def _zero_cache(cfg: ModelConfig, seq_len: int) -> Any:
+    specs = cache_specs(cfg, 1, seq_len)
+    is_spec = lambda x: isinstance(x, ParamSpec)  # noqa: E731
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype or jnp.float32), specs,
+        is_leaf=is_spec,
+    )
+
+
+def _routing(n: int, n_valid, seq_max: int, c: int):
+    """Segment routing for a prompt window: (t_mask (n,), onehot (n, c))
+    with positions >= n_valid zeroed out."""
+    t = jnp.arange(n)
+    t_mask = t < n_valid
+    seg = t // _segment_len(seq_max, c)
+    oh = jax.nn.one_hot(seg, c, dtype=jnp.float32) * t_mask[:, None]
+    return t_mask, oh
+
+
+def _prefix_sums(oh: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Per-position inclusive landmark prefix sums.
+
+    oh (n, c) masked routing; x (B, H, n, d). Returns (n, B, H, c, d) where
+    entry t equals the running sums ``_lmk_add`` would hold after feeding
+    tokens 0..t — the state the decode path sees at position t."""
+    contrib = oh[None, None, :, :, None] * x[:, :, :, None, :]  # (B,H,n,c,d)
+    cum = jnp.cumsum(contrib.astype(jnp.float32), axis=2)
+    return jnp.moveaxis(cum, 2, 0)
+
+
+def _attend_prefill(
+    cfg: ModelConfig, impl: str, prefill_impl: str,
+    q, k_b, v_b, q_sums, k_sums_b, scale, seq_max: int, t_mask,
+):
+    """Per-position attention over the prompt window.
+
+    q (B,H,n,d); k_b/v_b (B,H,n,d) kv-broadcast and pad-masked;
+    q_sums/k_sums_b (n,B,H,c,d) landmark prefixes. Returns (B,H,n,dv)."""
+    n = q.shape[2]
+    if prefill_impl == "ss_fused" and impl == "spectral_shift":
+        from repro.kernels.ops import ss_attention_fused
+
+        # The fused kernels carry no key-validity mask, so this branch must
+        # only ever see unpadded prompts (the engine passes exact-length
+        # windows for ss_fused); padded zero-keys would otherwise leak into
+        # the softmax normalization and landmark means.
+        return ss_attention_fused(
+            q, k_b, v_b, ss_config_from(cfg, causal=False), scale=scale,
+            interpret=cfg.kernels_interpret,
+        )
+    qs = jnp.moveaxis(q, 2, 0)[:, :, :, None, :]  # (n, B, H, 1, d)
+    pos_t = jnp.arange(n)
+    if impl == "spectral_shift":
+        def one(qt, qsum, ksum, pos):
+            return ss_decode_attention(
+                qt, k_b, v_b, qsum, ksum, pos, cfg, scale, seq_max=seq_max
+            )
+    else:
+        def one(qt, qsum, ksum, pos):
+            return full_decode_attention(qt, k_b, v_b, pos, scale)
+
+    outs = jax.vmap(one)(qs, q_sums, k_sums_b, pos_t)  # (n, B, H, 1, dv)
+    return jnp.moveaxis(outs[:, :, :, 0, :], 0, 2)      # (B, H, n, dv)
+
+
+# --------------------------------------------------------------------------
+# per-layer prefill (mirrors gqa_decode / mla_decode, vectorized over n)
+# --------------------------------------------------------------------------
+def _gqa_prefill(p, cfg: ModelConfig, x, sin, cos, t_mask, oh, seq_max, impl,
+                 prefill_impl):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhe->bhse", x, p["w_q"].astype(dt))
+    k = jnp.einsum("bsd,dhe->bhse", x, p["w_k"].astype(dt))
+    v = jnp.einsum("bsd,dhe->bhse", x, p["w_v"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["b_q"].astype(dt)[None, :, None, :]
+        k = k + p["b_k"].astype(dt)[None, :, None, :]
+        v = v + p["b_v"].astype(dt)[None, :, None, :]
+    if cfg.rope_theta > 0:
+        q = apply_rotary(q, sin, cos)
+        k = apply_rotary(k, sin, cos)
+
+    pad = t_mask[None, None, :, None]
+    k_m = jnp.where(pad, k, 0).astype(k.dtype)
+    v_m = jnp.where(pad, v, 0).astype(v.dtype)
+
+    q_sums = _prefix_sums(oh, q)          # (n, B, H, c, d)
+    k_sums = _prefix_sums(oh, k_m)        # (n, B, Hkv, c, d)
+    kb = _broadcast_kv(k_m, cfg.num_heads)
+    vb = _broadcast_kv(v_m, cfg.num_heads)
+    k_sums_b = jax.vmap(_broadcast_kv, (0, None))(k_sums, cfg.num_heads)
+
+    out = _attend_prefill(
+        cfg, impl, prefill_impl, q, kb, vb, q_sums, k_sums_b,
+        cfg.resolved_head_dim ** -0.5, seq_max, t_mask,
+    )
+    new_cache = {
+        "k": k_m, "v": v_m,
+        "q_lmk": q_sums[-1].astype(jnp.float32),
+        "k_lmk": k_sums[-1].astype(jnp.float32),
+    }
+    attn = jnp.einsum("bhse,hed->bsd", out.astype(dt), p["w_o"].astype(dt))
+    return attn, new_cache
+
+
+def _mla_prefill(p, cfg: ModelConfig, x, sin, cos, t_mask, oh, seq_max, impl,
+                 prefill_impl):
+    dt = x.dtype
+    dh, dr = cfg.resolved_head_dim, cfg.rope_head_dim
+    c_kv = rms_norm(x @ p["w_dkv"].astype(dt), p["norm_kv"], cfg.norm_eps)
+    k_rope = jnp.einsum("bsd,de->bse", x, p["w_k_rope"].astype(dt))[:, None]
+    k_rope = apply_rotary(k_rope, sin, cos)[:, 0]  # (B, n, dr)
+
+    q_nope = jnp.einsum("bsd,dhe->bhse", x, p["w_q_nope"].astype(dt))
+    q_rope = jnp.einsum("bsd,dhe->bhse", x, p["w_q_rope"].astype(dt))
+    q_rope = apply_rotary(q_rope, sin, cos)
+    q_abs = jnp.einsum("bhse,rhe->bhsr", q_nope, p["w_uk"].astype(dt))
+    q_eff = jnp.concatenate([q_abs, q_rope], axis=-1)  # (B, H, n, r+dr)
+
+    pad2 = t_mask[None, :, None]
+    c_kv_m = jnp.where(pad2, c_kv, 0).astype(c_kv.dtype)
+    k_rope_m = jnp.where(pad2, k_rope, 0).astype(k_rope.dtype)
+    k_eff = jnp.concatenate([c_kv_m, k_rope_m], axis=-1)  # (B, n, r+dr)
+
+    q_sums = _prefix_sums(oh, q_eff)                    # (n, B, H, c, de)
+    k_sums = _prefix_sums(oh, k_eff[:, None])[:, :, 0]  # (n, B, c, de)
+
+    h = cfg.num_heads
+    k_eff_b = jnp.broadcast_to(
+        k_eff[:, None], (k_eff.shape[0], h, *k_eff.shape[1:])
+    )
+    lat_b = jnp.broadcast_to(
+        c_kv_m[:, None], (c_kv_m.shape[0], h, *c_kv_m.shape[1:])
+    )
+    k_sums_b = jnp.broadcast_to(
+        k_sums[:, :, None], (*k_sums.shape[:2], h, *k_sums.shape[2:])
+    )
+    out_lat = _attend_prefill(
+        cfg, impl, prefill_impl, q_eff, k_eff_b, lat_b, q_sums, k_sums_b,
+        (dh + dr) ** -0.5, seq_max, t_mask,
+    )
+    out = jnp.einsum("bhsr,rhe->bhse", out_lat.astype(dt), p["w_uv"].astype(dt))
+    attn = jnp.einsum("bhse,hed->bsd", out, p["w_o"].astype(dt))
+    new_cache = {
+        "latent": c_kv_m, "rope": k_rope_m,
+        "q_lmk": q_sums[-1].astype(jnp.float32),
+        "k_lmk": k_sums[-1].astype(jnp.float32),
+    }
+    return attn, new_cache
+
+
+def _dense_layer_prefill(lp, cfg: ModelConfig, x, sin, cos, t_mask, oh,
+                         seq_max, impl, prefill_impl):
+    h = rms_norm(x, lp["norm_attn"], cfg.norm_eps)
+    fn = _mla_prefill if cfg.mla else _gqa_prefill
+    attn, new_cache = fn(
+        lp["attn"], cfg, h, sin, cos, t_mask, oh, seq_max, impl, prefill_impl
+    )
+    x = x + attn
+    h = rms_norm(x, lp["norm_mlp"], cfg.norm_eps)
+    if cfg.moe:
+        ff, _ = moe_forward(lp["moe"], cfg, h)
+    else:
+        ff = mlp_forward(lp["mlp"], h, cfg.act)
+    return x + ff, new_cache
+
+
+# --------------------------------------------------------------------------
+# whole-prompt prefill
+# --------------------------------------------------------------------------
+def batched_prefill(
+    params, cfg: ModelConfig, tokens: jnp.ndarray, n_valid: jnp.ndarray,
+    *, seq_max: int, prefill_impl: str = "replay",
+):
+    """Run a whole (padded) prompt through the model in one pass.
+
+    tokens (1, n_pad) int32, n_valid scalar int32 <= n_pad. Returns
+    ``(logits (1, n_pad, V), cache)`` where ``cache`` matches
+    ``cache_specs(cfg, 1, n_pad)`` in structure: K/V filled for positions
+    < n_valid (zeros elsewhere), landmark running sums accumulated over the
+    first n_valid tokens with ``seq_max`` segment routing, pos = n_valid.
+    The next-token logits live at index ``n_valid - 1``.
+    """
+    if not prefill_supported(cfg):
+        raise ValueError(f"batched prefill unsupported for family {cfg.family}")
+    params = working_params(params, cfg)
+    cache = _zero_cache(cfg, tokens.shape[1])
+    dt = jnp.dtype(cfg.compute_dtype)
+    n = tokens.shape[1]
+    x = _embed_tokens(params, cfg, tokens).astype(dt)
+    impl = cfg.decode_attention_impl
+
+    c = cfg.num_landmarks
+    t_mask, oh = _routing(n, n_valid, seq_max, c)
+    positions = jnp.arange(n)[None]  # (1, n)
+    rope_dim = cfg.rope_head_dim if cfg.mla else cfg.resolved_head_dim
+    sin, cos = rotary_angles(positions, rope_dim, cfg.rope_theta)
+    sin, cos = sin[:, None], cos[:, None]  # (1, 1, n, dh/2)
+
+    layer_fn = functools.partial(
+        _dense_layer_prefill, cfg=cfg, sin=sin, cos=cos, t_mask=t_mask,
+        oh=oh, seq_max=seq_max, impl=impl, prefill_impl=prefill_impl,
+    )
+    if cfg.scan_layers and not isinstance(params["layers"], list):
+        def body(y, lp):
+            y, nc = layer_fn(lp, x=y)
+            return y, nc
+
+        x, new_layers = jax.lax.scan(body, x, params["layers"])
+    else:
+        new_layers = []
+        for lp in params["layers"]:
+            x, nc = layer_fn(lp, x=x)
+            new_layers.append(nc)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(params, cfg, x)
+    new_cache = dict(cache)
+    new_cache["layers"] = new_layers
+    new_cache["pos"] = jnp.asarray(n_valid, jnp.int32)
+    return logits, new_cache
+
+
+def make_prefill_fn(params, cfg: ModelConfig, *, seq_max: int,
+                    prefill_impl: str = "replay"):
+    """Jitted prefill closure ``fn(tokens, n_valid)``; jax.jit specializes
+    one XLA program per padded prompt length (per bucket in ``replay``
+    mode, per exact length in ``ss_fused`` mode — the engine slices
+    accordingly)."""
+    fn = functools.partial(
+        batched_prefill, params, cfg, seq_max=seq_max,
+        prefill_impl=prefill_impl,
+    )
+    return jax.jit(fn)

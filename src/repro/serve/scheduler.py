@@ -1,0 +1,213 @@
+"""Two-phase (prefill/decode) request scheduler over the block pool.
+
+Policy — deliberately simple and predictable:
+
+* FCFS waiting queue. A request is admitted when a lane is free AND the
+  allocator can cover its whole prompt (``ceil(prompt_len / block_size)``
+  blocks). Decode growth allocates one block at a time, on demand.
+* When decode growth finds the pool empty, the scheduler preempts the
+  YOUNGEST running request (latest admission): its blocks are freed and the
+  request goes back to the FRONT of the waiting queue, restarting from
+  scratch on re-admission (recompute, vLLM's default). The pool is sized so
+  one lane can always hold a full sequence, so a lone request never
+  self-preempts forever.
+* Per-request latency/throughput counters (arrival, admission, first token,
+  finish, preemption count) are aggregated for ``engine.stats()``.
+
+The scheduler owns host-side bookkeeping only — block tables live in the
+``BlockAllocator``; device storage belongs to ``PagedKVCache``; the engine
+drives the actual prefill/decode computations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from repro.serve.paged import ZERO_BLOCK, BlockAllocator
+
+
+@dataclasses.dataclass
+class RequestTiming:
+    arrived: int = -1
+    admitted: int = -1
+    first_token: int = -1
+    finished: int = -1
+    preemptions: int = 0
+    new_tokens: int = 0
+
+    @property
+    def ttft(self) -> Optional[int]:
+        if self.first_token < 0 or self.arrived < 0:
+            return None
+        return self.first_token - self.arrived
+
+
+class Scheduler:
+    def __init__(self, allocator: Optional[BlockAllocator], max_lanes: int,
+                 blocks_per_lane: int):
+        self.allocator = allocator  # None => model has no paged state
+        self.max_lanes = max_lanes
+        self.blocks_per_lane = blocks_per_lane
+        self.waiting: deque = deque()
+        # set by the engine: lane index -> Request to requeue on preemption
+        self.requeue_cb = None
+        self.lane_uid: list[Optional[int]] = [None] * max_lanes
+        self.admit_order: dict[int, int] = {}  # uid -> admission tick
+        self.timing: dict[int, RequestTiming] = {}
+        self.tick_now = 0
+        # aggregate counters
+        self.total_preemptions = 0
+        self.total_admitted = 0
+        self.total_finished = 0
+
+    # -- block tables ---------------------------------------------------------
+    def table_row(self, lane: int) -> np.ndarray:
+        """One lane's block table, ZERO_BLOCK-padded to blocks_per_lane."""
+        row = np.full(self.blocks_per_lane, ZERO_BLOCK, np.int32)
+        uid = self.lane_uid[lane]
+        if self.allocator is not None and uid is not None:
+            blocks = self.allocator.tables.get(uid, [])
+            row[: len(blocks)] = blocks
+        return row
+
+    def tables(self) -> np.ndarray:
+        """(max_lanes, blocks_per_lane) int32 block tables; ZERO_BLOCK pads
+        unallocated slots."""
+        return np.stack([
+            self.table_row(lane) for lane in range(self.max_lanes)
+        ])
+
+    # -- queue ---------------------------------------------------------------
+    def submit(self, req) -> None:
+        self.waiting.append(req)
+        t = self.timing.setdefault(req.uid, RequestTiming())
+        if t.arrived < 0:
+            t.arrived = self.tick_now
+
+    def _blocks_for_prompt(self, req) -> int:
+        if self.allocator is None:
+            return 0
+        return self.allocator.blocks_for_tokens(max(len(req.prompt), 1))
+
+    def admit(self) -> list[tuple[int, object]]:
+        """Admit FCFS while lanes and blocks allow. Returns [(lane, req)]."""
+        admissions = []
+        for lane in range(self.max_lanes):
+            if self.lane_uid[lane] is not None or not self.waiting:
+                continue
+            req = self.waiting[0]
+            need = self._blocks_for_prompt(req)
+            if self.allocator is not None:
+                if not self.allocator.can_alloc(need):
+                    break  # FCFS: don't let short requests starve the head
+                self.allocator.alloc(req.uid, need)
+            self.waiting.popleft()
+            self.lane_uid[lane] = req.uid
+            self.admit_order[req.uid] = self.tick_now
+            self.timing[req.uid].admitted = self.tick_now
+            self.total_admitted += 1
+            admissions.append((lane, req))
+        return admissions
+
+    # -- decode-time growth ---------------------------------------------------
+    def ensure_block(self, lane: int, pos: int) -> bool:
+        """Guarantee the block covering ``pos`` exists for ``lane``. May
+        preempt the youngest request. Returns False if ``lane`` itself was
+        preempted (its step must be skipped this tick)."""
+        uid = self.lane_uid[lane]
+        if self.allocator is None or uid is None:
+            return True
+        have = len(self.allocator.tables.get(uid, []))
+        need_idx = pos // self.allocator.block_size
+        while need_idx >= have:
+            if self.allocator.alloc(uid, 1) is not None:
+                have += 1
+                continue
+            victim = self._youngest_lane()
+            if victim is None:
+                # Defensive: unreachable while this lane holds a uid (it is
+                # itself a preemption candidate). Without the block the
+                # step would scatter into the reserved zero block, so skip
+                # the lane rather than corrupt its cache.
+                return False
+            self.preempt(victim)
+            if victim == lane:
+                return False
+        return True
+
+    def _youngest_lane(self) -> Optional[int]:
+        running = [
+            (self.admit_order[uid], lane)
+            for lane, uid in enumerate(self.lane_uid)
+            if uid is not None
+        ]
+        if not running:
+            return None
+        return max(running)[1]
+
+    def preempt(self, lane: int) -> None:
+        """Free a lane's blocks and requeue its request at the queue front.
+        The engine's ``requeue_cb`` clears the lane and hands back the
+        Request object (the scheduler never holds it)."""
+        uid = self.lane_uid[lane]
+        if uid is None:
+            return
+        if self.allocator is not None:
+            self.allocator.free(uid)
+        self.lane_uid[lane] = None
+        self.admit_order.pop(uid, None)
+        t = self.timing[uid]
+        t.preemptions += 1
+        # Tokens generated so far are discarded (recompute on re-admission)
+        # and will be re-counted when re-emitted; first_token stands — the
+        # user did see it.
+        t.new_tokens = 0
+        self.total_preemptions += 1
+        req = self.requeue_cb(lane) if self.requeue_cb else None
+        if req is not None:
+            self.waiting.appendleft(req)
+
+    def release(self, lane: int) -> None:
+        """Normal retirement: free blocks, mark finished."""
+        uid = self.lane_uid[lane]
+        if uid is None:
+            return
+        if self.allocator is not None:
+            self.allocator.free(uid)
+        self.lane_uid[lane] = None
+        self.admit_order.pop(uid, None)
+        self.timing[uid].finished = self.tick_now
+        self.total_finished += 1
+
+    def note_token(self, uid: int) -> None:
+        t = self.timing[uid]
+        if t.first_token < 0:
+            t.first_token = self.tick_now
+        t.new_tokens += 1
+
+    @property
+    def idle(self) -> bool:
+        """O(lanes) drain check for the serving hot loop."""
+        return not self.waiting and all(u is None for u in self.lane_uid)
+
+    # -- metrics --------------------------------------------------------------
+    def stats(self) -> dict:
+        ttfts = [t.ttft for t in self.timing.values() if t.ttft is not None]
+        done = [t for t in self.timing.values() if t.finished >= 0]
+        lat = [t.finished - t.arrived for t in done]
+        out = {
+            "queued": len(self.waiting),
+            "active": sum(u is not None for u in self.lane_uid),
+            "admitted": self.total_admitted,
+            "finished": self.total_finished,
+            "preemptions": self.total_preemptions,
+            "new_tokens": sum(t.new_tokens for t in self.timing.values()),
+            "ttft_ticks_p50": float(np.median(ttfts)) if ttfts else None,
+            "latency_ticks_p50": float(np.median(lat)) if lat else None,
+        }
+        if self.allocator is not None:
+            out["kv"] = self.allocator.stats()
+        return out

@@ -1,0 +1,292 @@
+"""Paged serving subsystem: block allocator invariants, paged-vs-dense
+decode equivalence, batched-prefill-vs-token-replay equivalence, and the
+preemption round-trip."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ServeConfig, reduced
+from repro.configs.registry import get_config
+from repro.models.model import model_specs
+from repro.models.params import init_params
+from repro.serve.decode import decode_step
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.kv_cache import cache_specs
+from repro.serve.paged import ZERO_BLOCK, BlockAllocator, PagedKVCache
+from repro.serve.prefill import batched_prefill
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = dataclasses.replace(
+        reduced(get_config("qwen2-7b")), capacity_factor=100.0
+    )
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _requests(cfg, n, seed=0, lo=4, hi=24, max_new=8):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            u,
+            rng.integers(3, cfg.vocab_size, int(rng.integers(lo, hi))).tolist(),
+            max_new_tokens=max_new,
+        )
+        for u in range(n)
+    ]
+
+
+def _run(cfg, params, reqs, serve, stagger=0):
+    eng = ServeEngine(cfg, params, serve=serve)
+    for r in reqs[: len(reqs) - stagger]:
+        eng.submit(Request(r.uid, list(r.prompt), r.max_new_tokens))
+    if stagger:
+        for _ in range(4):
+            eng.tick()
+        for r in reqs[len(reqs) - stagger:]:
+            eng.submit(Request(r.uid, list(r.prompt), r.max_new_tokens))
+    out = eng.run()
+    return out, eng
+
+
+BASE = ServeConfig(max_lanes=2, max_seq=64, block_size=8)
+DENSE = dataclasses.replace(BASE, paged=False, batched_prefill=False)
+
+
+# ==========================================================================
+# BlockAllocator
+# ==========================================================================
+class TestBlockAllocator:
+    def test_alloc_free_reuse(self):
+        a = BlockAllocator(9, 8)  # 8 usable (block 0 reserved)
+        got = a.alloc(1, 3)
+        assert got is not None and len(got) == 3
+        assert ZERO_BLOCK not in got
+        assert a.num_free == 5
+        assert a.alloc(2, 6) is None  # over budget: no state change
+        assert a.num_free == 5 and 2 not in a.tables
+        freed = a.free(1)
+        assert sorted(freed) == sorted(got)
+        assert a.num_free == 8
+        # freed blocks come back (LIFO) and are never double-issued
+        again = a.alloc(3, 8)
+        assert sorted(again) == list(range(1, 9))
+        assert a.alloc(4, 1) is None
+
+    def test_tables_are_per_request(self):
+        a = BlockAllocator(9, 4)
+        a.alloc(7, 2)
+        a.alloc(8, 2)
+        assert set(a.tables[7]).isdisjoint(a.tables[8])
+        a.alloc(7, 1)
+        assert len(a.tables[7]) == 3  # growth appends
+
+    def test_stats_and_utilization(self):
+        a = BlockAllocator(9, 4)
+        a.alloc(1, 4)
+        st = a.stats()
+        assert st["blocks_used"] == 4 and st["blocks_free"] == 4
+        assert st["utilization"] == pytest.approx(0.5)
+
+    def test_defragment_compacts_and_remaps(self):
+        a = BlockAllocator(17, 8)
+        a.alloc(1, 3)
+        a.alloc(2, 4)
+        a.alloc(3, 2)
+        a.free(2)  # hole in the middle
+        mapping = a.defragment()
+        live = sorted(b for t in a.tables.values() for b in t)
+        assert live == list(range(1, 6))  # compact prefix, block 0 untouched
+        assert ZERO_BLOCK not in mapping and ZERO_BLOCK not in mapping.values()
+        assert a.num_free == 16 - 5
+
+
+# ==========================================================================
+# Paged storage
+# ==========================================================================
+def test_paged_gather_matches_dense_roundtrip(qwen):
+    """write_prefill -> gather_views reconstructs exactly the dense cache
+    batched_prefill produced (modulo zero-padding past the prompt)."""
+    cfg, params = qwen
+    serve = BASE
+    kv = PagedKVCache(cfg, serve)
+    alloc = BlockAllocator(serve.resolved_num_blocks, serve.block_size)
+    rng = np.random.default_rng(0)
+    n = 19
+    tokens = np.zeros((1, 32), np.int32)
+    tokens[0, :n] = rng.integers(3, cfg.vocab_size, n)
+    _, pcache = batched_prefill(
+        params, cfg, jnp.asarray(tokens), jnp.asarray(n, jnp.int32),
+        seq_max=serve.max_seq,
+    )
+    alloc.alloc(0, alloc.blocks_for_tokens(n))
+    tables = np.full((serve.max_lanes, serve.blocks_per_lane), ZERO_BLOCK,
+                     np.int32)
+    row = alloc.tables[0]
+    tables[0, : len(row)] = row
+    kv.write_prefill(0, pcache, tables[0], n_tokens=n)
+    view = kv.gather_views(tables)
+
+    k_dense = np.asarray(pcache["layers"][0]["k"] if isinstance(
+        pcache["layers"], list) else pcache["layers"]["k"][0])
+    k_view = np.asarray(view["layers"][0]["k"][0] if isinstance(
+        view["layers"], list) else view["layers"]["k"][0][0])
+    np.testing.assert_allclose(k_view[..., :32, :], k_dense, atol=0)
+    assert np.all(k_view[..., 32:, :] == 0)  # unallocated -> zero block
+    assert int(view["pos"][0]) == n
+
+
+# ==========================================================================
+# Engine equivalence
+# ==========================================================================
+def test_paged_vs_dense_token_identical(qwen):
+    """Mixed batch, staggered arrivals: the paged/batched-prefill engine
+    produces token-identical greedy outputs to the seed-style dense engine."""
+    cfg, params = qwen
+    reqs = _requests(cfg, 6, seed=1)
+    ref, _ = _run(cfg, params, reqs, DENSE, stagger=3)
+    out, eng = _run(cfg, params, reqs, BASE, stagger=3)
+    assert ref == out
+    st = eng.stats()
+    assert st["finished"] == 6
+    assert st["mode"] == "paged+batched-prefill"
+
+
+def test_batched_prefill_matches_token_replay(qwen):
+    """Cache state + next-token logits after batched prefill equal those
+    after feeding the prompt token-by-token through decode_step."""
+    cfg, params = qwen
+    s_max = 64
+    rng = np.random.default_rng(3)
+    n = 21
+    prompt = rng.integers(3, cfg.vocab_size, n)
+
+    cache = init_params(cache_specs(cfg, 1, s_max), jax.random.PRNGKey(1))
+    step = jax.jit(lambda c, t: decode_step(params, cfg, c, t))
+    for i in range(n):
+        replay_logits, cache = step(
+            cache, jnp.asarray(prompt[None, i: i + 1], jnp.int32)
+        )
+
+    n_pad = 32
+    tokens = np.zeros((1, n_pad), np.int32)
+    tokens[0, :n] = prompt
+    logits, pcache = batched_prefill(
+        params, cfg, jnp.asarray(tokens), jnp.asarray(n, jnp.int32),
+        seq_max=s_max,
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits[0, n - 1], np.float32),
+        np.asarray(replay_logits[0, 0], np.float32), atol=2e-4, rtol=2e-4,
+    )
+    assert int(pcache["pos"]) == n == int(cache["pos"])
+    ref_l, new_l = cache["layers"], pcache["layers"]
+    get = (lambda t, k: t[k]) if not isinstance(ref_l, list) else (
+        lambda t, k: jnp.stack([la[k] for la in t])
+    )
+    # Layer 0 is a pure accumulation path (no upstream attention): cumsum
+    # must match sequential _lmk_add to fp epsilon.
+    for key in ("q_lmk", "k_lmk"):
+        np.testing.assert_allclose(
+            np.asarray(get(new_l, key))[0], np.asarray(get(ref_l, key))[0],
+            atol=1e-4, rtol=1e-4,
+        )
+    np.testing.assert_array_equal(
+        np.asarray(get(new_l, "k"))[0],
+        np.asarray(get(ref_l, "k"))[0][..., :n_pad, :],
+    )
+    # Deeper layers inherit fp-reassociation noise amplified through the
+    # layer-0 pseudoinverse (vmapped vs sequential attention); greedy
+    # outputs stay identical (test_paged_vs_dense_token_identical).
+    for key in ("q_lmk", "k_lmk"):
+        np.testing.assert_allclose(
+            np.asarray(get(new_l, key)), np.asarray(get(ref_l, key)),
+            atol=5e-2, rtol=5e-2,
+        )
+    np.testing.assert_allclose(
+        np.asarray(get(new_l, "k")),
+        np.asarray(get(ref_l, "k"))[..., :n_pad, :], atol=5e-2, rtol=5e-2,
+    )
+
+
+def test_preemption_roundtrip_identical(qwen):
+    """A pool too small for all lanes forces preemption; the preempted
+    request restarts from scratch and still finishes with identical
+    greedy output."""
+    cfg, params = qwen
+    reqs = _requests(cfg, 4, seed=2, lo=20, hi=21, max_new=30)
+    serve = dataclasses.replace(BASE, max_lanes=3, num_blocks=12)
+    ref, _ = _run(cfg, params, reqs, dataclasses.replace(
+        DENSE, max_lanes=3))
+    out, eng = _run(cfg, params, reqs, serve)
+    st = eng.stats()
+    assert st["preemptions"] > 0, "pool should have forced preemption"
+    assert st["finished"] == 4
+    assert ref == out
+    assert st["kv"]["blocks_used"] == 0  # everything released at the end
+
+
+def test_scheduler_metrics_and_ttft(qwen):
+    """Batched prefill: first token lands one tick after admission, and the
+    engine surfaces latency/utilization counters."""
+    cfg, params = qwen
+    reqs = _requests(cfg, 1, seed=4, lo=30, hi=31, max_new=4)
+    _, eng = _run(cfg, params, reqs, BASE)
+    st = eng.stats()
+    assert st["ttft_ticks_p50"] == 1.0  # one tick: prefill + first sample
+    assert st["new_tokens"] == 4
+    _, eng_d = _run(cfg, params, reqs, DENSE)
+    # token replay pays one tick per prompt token before the first sample
+    assert eng_d.stats()["ttft_ticks_p50"] == float(len(reqs[0].prompt))
+
+
+def test_ssm_family_falls_back_dense():
+    """xLSTM has no sequence-shaped cache: the engine runs lane-dense with
+    no allocator, and outputs match the seed configuration."""
+    cfg = reduced(get_config("xlstm-350m"))
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+    reqs = _requests(cfg, 3, seed=5)
+    ref, _ = _run(cfg, params, reqs, DENSE)
+    out, eng = _run(cfg, params, reqs, BASE)
+    assert ref == out
+    assert eng.stats()["mode"] == "dense+replay-prefill"
+    assert "kv" not in eng.stats()
+
+
+def test_defragment_mid_stream_preserves_outputs(qwen):
+    """engine.defragment() between ticks permutes pool storage + tables
+    consistently: in-flight requests finish with unchanged output."""
+    cfg, params = qwen
+    reqs = _requests(cfg, 4, seed=8, max_new=12)
+    ref, _ = _run(cfg, params, reqs, DENSE)
+    eng = ServeEngine(cfg, params, serve=BASE)
+    for r in reqs:
+        eng.submit(Request(r.uid, list(r.prompt), r.max_new_tokens))
+    moved_total = 0
+    for _ in range(60):
+        if eng.sched.idle:
+            break
+        eng.tick()
+        moved_total += eng.defragment()  # compact while requests in flight
+    out = eng.run()
+    assert ref == out
+    # retirements between staggered requests leave holes, so compaction
+    # must actually have moved something for this test to mean anything
+    assert moved_total > 0
+
+
+def test_ss_fused_prefill_runs(qwen):
+    """The Pallas-kernel prefill path (approximate prompt attention) serves
+    a batch end-to-end and leaves exact landmark state behind."""
+    cfg, params = qwen
+    reqs = _requests(cfg, 3, seed=6)
+    serve = dataclasses.replace(BASE, prefill_impl="ss_fused")
+    out, eng = _run(cfg, params, reqs, serve)
+    assert eng.stats()["finished"] == 3
+    assert all(len(v) > 0 for v in out.values())
