@@ -15,6 +15,7 @@ from benchmarks import (
     bench_error_bound,
     bench_serve,
     bench_spectrum,
+    bench_train_step,
     roofline,
 )
 
@@ -25,6 +26,7 @@ SUITES = {
     "error_bound": bench_error_bound.run,    # paper §7 eq. (12)
     "roofline": roofline.run,                # EXPERIMENTS.md §Roofline
     "serve": bench_serve.run,                # paged vs dense serving TTFT
+    "train_step": bench_train_step.run,      # fused vs jnp fwd+bwd
 }
 
 

@@ -1,0 +1,17 @@
+"""repro — production-scale JAX/Pallas reproduction of Spectral Shifting.
+
+Process-wide numerics configuration lives here (imported before any mesh or
+jit is built):
+
+* ``jax_threefry_partitionable=True`` — the legacy (non-partitionable)
+  threefry lowering produces *different* random values for the same key
+  depending on the output sharding GSPMD assigns, so jitted parameter init
+  with sharded ``out_shardings`` diverged between mesh shapes (TP-4 vs
+  single-device trained from different ``embed``/``lm_head`` weights).
+  Partitionable threefry makes random bits a pure function of (key, shape),
+  independent of partitioning, which is the documented contract every
+  multi-mesh test and elastic-restart path in this repo relies on.
+"""
+import jax
+
+jax.config.update("jax_threefry_partitionable", True)

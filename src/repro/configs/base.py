@@ -39,6 +39,14 @@ class ModelConfig:
                                        # (collectives move bf16, not fp32)
     kernels_interpret: bool = True     # Pallas interpret mode (CPU); the TPU
                                        # launcher flips this to False
+    attention_backend: str = "auto"    # kernel route for *_fused impls:
+                                       # auto (dispatch registry) | fused |
+                                       # jnp | interpret (forced)
+    autotune: bool = False             # measured autotune for unseen shape
+                                       # keys (kernels/dispatch.py); winners
+                                       # persist to the on-disk cache
+    autotune_cache: str = ""           # cache path override ("" = default
+                                       # REPRO_AUTOTUNE_CACHE / ~/.cache)
 
     # MoE
     moe: bool = False
@@ -74,7 +82,8 @@ class ModelConfig:
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"
     scan_layers: bool = True
-    remat: str = "full"          # none | full | dots
+    remat: str = "full"          # none | full | dots | ss_stats (save only
+                                 # the fused-attention (m, l)/BV residuals)
     unroll_scans: bool = False   # probe mode: unroll chunk scans so XLA
                                  # cost_analysis sees every body (math-identical)
 

@@ -46,6 +46,66 @@ DEFAULT_RULES: dict[str, object] = {
     "cache_batch": ("pod", "data"),
 }
 
+def seq_axis_sharded(mesh: Mesh, overrides: Optional[dict] = None) -> bool:
+    """True when the activation sequence axis ("seq" rule, after overrides)
+    maps onto mesh axes of total size > 1. Used to auto-select the GEMM
+    segment-means path (``landmark_via_matmul``): the reshape path's fp32
+    axis-split makes GSPMD all-gather the full (n, d) tensor per layer when
+    the sequence is sharded (core/landmarks.py)."""
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+    v = rules.get("seq")
+    if v is None:
+        return False
+    axes = (v,) if isinstance(v, str) else tuple(v)
+    size = 1
+    for a in axes:
+        if a in mesh.axis_names:
+            size *= mesh.shape[a]
+    return size > 1
+
+
+def apply_seq_sharding_config(cfg, mesh: Mesh, overrides: Optional[dict] = None,
+                              log=None):
+    """Context-parallel implications for a ModelConfig, in one place (used by
+    both the Trainer and dryrun.run_cell so compile-time stats model the same
+    kernel route the trainer runs):
+
+    * ``landmark_via_matmul=True`` — see ``seq_axis_sharded``;
+    * fused attention falls back to ``attention_backend="jnp"`` — the Pallas
+      kernels stream a single-device n axis; until they are shard_map-wrapped
+      (ROADMAP) only the jnp route partitions under GSPMD;
+    * with that fallback, ``remat="ss_stats"`` becomes ``"full"`` — the jnp
+      route emits no ``ss_bv``/``ss_stats`` checkpoint names, so the
+      save-only-these-names policy would silently save nothing (full remat
+      behavior anyway; make it explicit).
+
+    Returns ``cfg`` unchanged when the sequence axis is not sharded.
+    """
+    import dataclasses
+
+    if not seq_axis_sharded(mesh, overrides):
+        return cfg
+    if not cfg.landmark_via_matmul:
+        if log:
+            log.info("sequence axis is sharded: enabling landmark_via_matmul")
+        cfg = dataclasses.replace(cfg, landmark_via_matmul=True)
+    if (cfg.attention_impl == "spectral_shift_fused"
+            and cfg.attention_backend in ("auto", "fused")):
+        if log:
+            log.info("sequence axis is sharded: forcing attention_backend=jnp")
+        cfg = dataclasses.replace(cfg, attention_backend="jnp")
+        if cfg.remat == "ss_stats":
+            if log:
+                log.warning(
+                    "remat='ss_stats' has no tagged residuals on the jnp "
+                    "route; using remat='full'"
+                )
+            cfg = dataclasses.replace(cfg, remat="full")
+    return cfg
+
+
 _state = threading.local()
 
 

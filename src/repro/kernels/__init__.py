@@ -1,16 +1,49 @@
 """Pallas TPU kernels for the paper's O(n) attention hot spots.
 
-``ss_attention.py`` holds the two pl.pallas_call kernels (BlockSpec VMEM
-tiling), ``ops.py`` the jitted wrappers, ``ref.py`` the pure-jnp oracles.
-Validated in interpret mode on CPU; TPU v5e is the compile target.
+``ss_attention.py`` holds the forward pl.pallas_call kernels (BlockSpec VMEM
+tiling, segment-causal masks, online-softmax stats), ``ss_attention_bwd.py``
+the flash-style backward kernels, ``ops.py`` the jitted custom-VJP wrappers,
+``dispatch.py`` the impl/block-size registry with measured autotune, and
+``ref.py`` the pure-jnp oracles. Validated in interpret mode on CPU; TPU
+v5e is the compile target.
 """
 
-from repro.kernels.ops import nystrom_attention_fused, ss_attention_fused
+from repro.kernels.dispatch import (
+    Plan,
+    PlanKey,
+    autotune,
+    dispatch_ss_attention,
+    get_plan,
+    load_cache,
+    make_key,
+    register_plan,
+    save_cache,
+)
+from repro.kernels.ops import (
+    landmark_summary_op,
+    nystrom_attention_fused,
+    query_side_op,
+    ss_attention_fused,
+)
 from repro.kernels.ss_attention import landmark_summary, query_side
+from repro.kernels.ss_attention_bwd import landmark_summary_bwd, query_side_bwd
 
 __all__ = [
+    "Plan",
+    "PlanKey",
+    "autotune",
+    "dispatch_ss_attention",
+    "get_plan",
     "landmark_summary",
+    "landmark_summary_bwd",
+    "landmark_summary_op",
+    "load_cache",
+    "make_key",
     "nystrom_attention_fused",
     "query_side",
+    "query_side_bwd",
+    "query_side_op",
+    "register_plan",
+    "save_cache",
     "ss_attention_fused",
 ]

@@ -1,0 +1,326 @@
+"""Impl / block-size dispatch for spectral-shifting attention.
+
+One registry answers "which implementation, which block size?" for every
+attention call, replacing ad-hoc ``impl == "spectral_shift_fused"``
+branching in model code:
+
+    key  = (backend, n_bucket, c, d, dtype, causal)
+    plan = Plan(impl = fused | jnp | interpret, block_n, source)
+
+Resolution order: in-memory registry -> on-disk autotune cache -> measured
+autotune (only when explicitly enabled) -> backend heuristic. Plans are
+resolved at *trace* time — shapes are static under jit, so a jitted train
+step consults the registry once per compiled shape and bakes the winning
+kernel in.
+
+The measured-autotune mode times real candidate executions (jnp reference
+vs fused kernels across block sizes) on synthetic data of the exact shape
+and persists winners to a JSON cache (``REPRO_AUTOTUNE_CACHE`` or
+``~/.cache/repro/ss_autotune.json``) so subsequent processes skip the
+measurement. ``n`` is bucketed to the next power of two to keep the cache
+dense across nearby sequence lengths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+import threading
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import SSConfig, spectral_shift_attention
+
+_IMPLS = ("fused", "jnp", "interpret")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanKey:
+    backend: str      # "cpu" | "tpu" | "gpu"
+    n: int            # sequence length, bucketed to next power of two
+    c: int            # landmark count
+    d: int            # head dim
+    dtype: str        # canonical dtype name, e.g. "float32" / "bfloat16"
+    causal: bool
+
+    def encode(self) -> str:
+        kind = "causal" if self.causal else "bidir"
+        return f"{self.backend}|n{self.n}|c{self.c}|d{self.d}|{self.dtype}|{kind}"
+
+    @staticmethod
+    def decode(s: str) -> "PlanKey":
+        backend, n, c, d, dtype, kind = s.split("|")
+        return PlanKey(
+            backend=backend, n=int(n[1:]), c=int(c[1:]), d=int(d[1:]),
+            dtype=dtype, causal=(kind == "causal"),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    impl: str            # "fused" | "jnp" | "interpret"
+    block_n: int = 512
+    source: str = "heuristic"  # heuristic | registered | cache | autotuned
+
+    def __post_init__(self):
+        if self.impl not in _IMPLS:
+            raise ValueError(f"unknown impl {self.impl!r}; want one of {_IMPLS}")
+
+
+_lock = threading.Lock()
+_REGISTRY: dict[PlanKey, Plan] = {}
+_CACHE_LOADED: set[str] = set()
+_CACHE_OVERRIDE: Optional[str] = None
+
+
+def _bucket(n: int) -> int:
+    """Next power of two >= n (min 128): nearby lengths share one plan."""
+    b = 128
+    while b < n:
+        b *= 2
+    return b
+
+
+def make_key(
+    n: int, c: int, d: int, dtype, causal: bool, backend: Optional[str] = None
+) -> PlanKey:
+    return PlanKey(
+        backend=backend or jax.default_backend(),
+        n=_bucket(n),
+        c=c,
+        d=d,
+        dtype=jnp.dtype(dtype).name,
+        causal=causal,
+    )
+
+
+def cache_path() -> str:
+    if _CACHE_OVERRIDE:
+        return _CACHE_OVERRIDE
+    return os.environ.get(
+        "REPRO_AUTOTUNE_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro", "ss_autotune.json"),
+    )
+
+
+def set_cache_path(path: Optional[str]) -> None:
+    """Process-wide cache-file override (``ModelConfig.autotune_cache``):
+    every subsequent load/save — including trace-time ``_default_tune``
+    winners — round-trips through this file. ``None``/"" restores the
+    env-var/default resolution."""
+    global _CACHE_OVERRIDE
+    _CACHE_OVERRIDE = path or None
+
+
+def register_plan(key: PlanKey, plan: Plan) -> None:
+    with _lock:
+        _REGISTRY[key] = plan
+
+
+def clear_registry() -> None:
+    global _CACHE_OVERRIDE
+    with _lock:
+        _REGISTRY.clear()
+        _CACHE_LOADED.clear()
+        _CACHE_OVERRIDE = None
+
+
+def load_cache(path: Optional[str] = None) -> int:
+    """Merge plans from the on-disk cache into the registry; returns count."""
+    path = path or cache_path()
+    if not os.path.exists(path):
+        return 0
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return 0
+    plans = payload.get("plans", {})
+    loaded = 0
+    with _lock:
+        for ks, pd in plans.items():
+            try:
+                key = PlanKey.decode(ks)
+                plan = Plan(
+                    impl=pd["impl"], block_n=int(pd["block_n"]), source="cache"
+                )
+            except (ValueError, KeyError):
+                continue
+            # In-process plans (registered/autotuned this run) win over disk.
+            _REGISTRY.setdefault(key, plan)
+            loaded += 1
+        _CACHE_LOADED.add(path)
+    return loaded
+
+
+def save_cache(path: Optional[str] = None) -> str:
+    """Write all non-heuristic registry plans to disk (atomic, merging)."""
+    path = path or cache_path()
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    existing: dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                existing = json.load(f).get("plans", {})
+        except (OSError, json.JSONDecodeError):
+            existing = {}
+    with _lock:
+        for key, plan in _REGISTRY.items():
+            if plan.source == "heuristic":
+                continue
+            existing[key.encode()] = {"impl": plan.impl, "block_n": plan.block_n}
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump({"version": 1, "plans": existing}, f, indent=2, sort_keys=True)
+    os.replace(tmp, path)
+    return path
+
+
+def heuristic_plan(key: PlanKey) -> Plan:
+    """Backend defaults when nothing measured is available."""
+    if key.backend == "cpu":
+        # Interpret-mode Pallas is an order of magnitude slower than the jnp
+        # reference on CPU; fused only pays off on a real accelerator.
+        return Plan(impl="jnp", block_n=min(512, key.n), source="heuristic")
+    if key.n <= 1024:
+        block = 256
+    elif key.n <= 8192:
+        block = 512
+    else:
+        block = 1024
+    return Plan(impl="fused", block_n=block, source="heuristic")
+
+
+def get_plan(key: PlanKey, *, autotune_enabled: bool = False,
+             tune_fn: Optional[Callable[[PlanKey], Plan]] = None) -> Plan:
+    """Registry -> disk cache -> measured autotune (opt-in) -> heuristic."""
+    with _lock:
+        plan = _REGISTRY.get(key)
+    if plan is not None:
+        return plan
+    if cache_path() not in _CACHE_LOADED:
+        load_cache()
+        with _lock:
+            plan = _REGISTRY.get(key)
+        if plan is not None:
+            return plan
+    if autotune_enabled:
+        return (tune_fn or _default_tune)(key)
+    return heuristic_plan(key)
+
+
+# --------------------------------------------------------------------------
+# Measured autotune.
+# --------------------------------------------------------------------------
+def _time_call(fn, *args, reps: int = 2) -> float:
+    fn(*args)  # warmup / compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def autotune(
+    n: int,
+    c: int,
+    d: int,
+    dtype=jnp.float32,
+    causal: bool = False,
+    *,
+    backend: Optional[str] = None,
+    block_candidates: tuple[int, ...] = (256, 512, 1024),
+    reps: int = 2,
+    save: bool = True,
+    cache_file: Optional[str] = None,
+    interpret: Optional[bool] = None,
+) -> Plan:
+    """Measure jnp vs fused (across block sizes) on synthetic data of the
+    exact shape; register and (optionally) persist the winner."""
+    from repro.kernels.ops import ss_attention_fused
+
+    key = make_key(n, c, d, dtype, causal, backend=backend)
+    if interpret is None:
+        interpret = key.backend == "cpu"
+    cfg = SSConfig(num_landmarks=c, causal=causal)
+    rng = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(rng, 3)
+    q = (jax.random.normal(kq, (1, n, d)) * 0.5).astype(dtype)
+    k = (jax.random.normal(kk, (1, n, d)) * 0.5).astype(dtype)
+    v = jax.random.normal(kv, (1, n, d)).astype(dtype)
+
+    jnp_fn = jax.jit(lambda q, k, v: spectral_shift_attention(q, k, v, cfg))
+    results: list[tuple[float, Plan]] = [
+        (_time_call(jnp_fn, q, k, v, reps=reps),
+         Plan(impl="jnp", block_n=min(512, n), source="autotuned"))
+    ]
+    fused_impl = "interpret" if interpret else "fused"
+    for block in dict.fromkeys(min(bc, n) for bc in block_candidates):
+        fn = functools.partial(
+            ss_attention_fused, cfg=cfg, block_n=block, interpret=interpret
+        )
+        try:
+            t = _time_call(fn, q, k, v, reps=reps)
+        except Exception:
+            continue  # candidate doesn't lower on this backend/shape
+        results.append(
+            (t, Plan(impl=fused_impl, block_n=block, source="autotuned"))
+        )
+    _, plan = min(results, key=lambda r: r[0])
+    register_plan(key, plan)
+    if save:
+        save_cache(cache_file)
+    return plan
+
+
+def _default_tune(key: PlanKey) -> Plan:
+    return autotune(
+        key.n, key.c, key.d, dtype=key.dtype, causal=key.causal,
+        backend=key.backend,
+    )
+
+
+# --------------------------------------------------------------------------
+# Model-facing entry point.
+# --------------------------------------------------------------------------
+def dispatch_ss_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    cfg: SSConfig,
+    *,
+    scale: Optional[float] = None,
+    backend: str = "auto",
+    autotune_enabled: bool = False,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Route one attention call through the dispatch registry.
+
+    ``backend``: "auto" resolves a plan per shape key; "fused" / "jnp" /
+    "interpret" force that implementation. Shapes (..., n, d) with arbitrary
+    leading dims. Fully differentiable on every route.
+    """
+    from repro.kernels.ops import ss_attention_fused
+
+    n, d = q.shape[-2], q.shape[-1]
+    if backend == "auto":
+        key = make_key(n, cfg.num_landmarks, d, q.dtype, cfg.causal)
+        plan = get_plan(key, autotune_enabled=autotune_enabled)
+        impl, block_n = plan.impl, plan.block_n
+    elif backend in _IMPLS:
+        impl, block_n = backend, 512
+    else:
+        raise ValueError(
+            f"unknown attention backend {backend!r}; want 'auto' or one of {_IMPLS}"
+        )
+    if impl == "jnp":
+        return spectral_shift_attention(q, k, v, cfg, scale=scale)
+    return ss_attention_fused(
+        q, k, v, cfg, scale=scale, block_n=block_n,
+        interpret=True if impl == "interpret" else interpret,
+    )

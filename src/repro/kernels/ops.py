@@ -1,14 +1,27 @@
 """Jitted wrapper: full spectral-shifting attention backed by Pallas kernels.
 
 ``ss_attention_fused(q, k, v, ...)`` computes the same function as
-``repro.core.attention.spectral_shift_attention`` (non-causal path) but with
-the two O(n) GEMMs executed by the Pallas kernels in ``ss_attention.py``:
+``repro.core.attention.spectral_shift_attention`` — including the
+segment-causal variant — with the two O(n) GEMMs executed by the Pallas
+kernels in ``ss_attention.py``:
 
-    1. landmarks            (jnp: reshape+mean, trivial)
-    2. A_s, U_ss, delta     (jnp: c x c, O(c^3))
+    1. landmarks            (jnp: segment means, trivial)
+    2. A_s, U_ss, delta     (jnp: c x c, O(c^3) — stays on jnp autodiff)
     3. BV                   (Pallas: landmark_summary, streamed over n)
     4. M = U_ss @ BV        (jnp: c x c @ c x dv)
     5. out = F @ M + d * V  (Pallas: query_side, streamed over n)
+
+Steps 3 and 5 carry ``jax.custom_vjp`` rules backed by the flash-style
+backward kernels in ``ss_attention_bwd.py``: the forward saves the online-
+softmax statistics ``(m, l)`` (B-side) instead of any (c, n)/(n, c) factor,
+and the backward reconstructs the softmax streams exactly from them. The
+saved residuals are tagged with ``jax.ad_checkpoint.checkpoint_name``
+(names ``"ss_bv"`` / ``"ss_stats"``) so the ``remat="ss_stats"`` policy in
+models/model.py keeps only these tiny tensors across the layer boundary.
+
+``jax.grad`` therefore flows end to end: through the custom-VJP kernels for
+the O(n) streams and through ordinary jnp autodiff for the cubic-small
+``ss_core`` (pinv + delta) and the landmark means.
 
 Accepts (..., n, d) with arbitrary leading dims; leading dims are flattened
 into the kernel batch dim.
@@ -20,13 +33,88 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
 
-from repro.core.attention import SSConfig, _softmax
+from repro.core.attention import SSConfig, _softmax, full_attention
 from repro.core.landmarks import segment_means
 from repro.core.spectral_shift import ss_core
 from repro.kernels.ss_attention import landmark_summary, query_side
+from repro.kernels.ss_attention_bwd import landmark_summary_bwd, query_side_bwd
 
 
+# --------------------------------------------------------------------------
+# Differentiable kernel ops. ``meta`` is a hashable tuple of static config;
+# custom_vjp treats it as non-differentiable.
+# --------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def landmark_summary_op(meta, q_l, k, v):
+    """Differentiable BV = softmax(Q~ K^T) @ V.  meta = (scale, block_n,
+    causal, interpret)."""
+    scale, block_n, causal, interpret = meta
+    return landmark_summary(
+        q_l, k, v, scale=scale, block_n=block_n, causal=causal,
+        interpret=interpret,
+    )
+
+
+def _landmark_summary_fwd(meta, q_l, k, v):
+    scale, block_n, causal, interpret = meta
+    bv, m, l = landmark_summary(
+        q_l, k, v, scale=scale, block_n=block_n, causal=causal,
+        interpret=interpret, return_stats=True,
+    )
+    res = (
+        q_l, k, v,
+        checkpoint_name(bv, "ss_bv"),
+        checkpoint_name(m, "ss_stats"),
+        checkpoint_name(l, "ss_stats"),
+    )
+    return bv, res
+
+
+def _landmark_summary_bwd(meta, res, g):
+    scale, block_n, causal, interpret = meta
+    q_l, k, v, bv, m, l = res
+    return landmark_summary_bwd(
+        q_l, k, v, bv, m, l, g, scale=scale, block_n=block_n, causal=causal,
+        interpret=interpret,
+    )
+
+
+landmark_summary_op.defvjp(_landmark_summary_fwd, _landmark_summary_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def query_side_op(meta, q, k_l, m_mat, v, delta):
+    """Differentiable out = softmax(Q K~^T) @ M + delta * V.  meta = (scale,
+    block_n, causal, seq_len_k, interpret); ``delta`` must be fp32."""
+    scale, block_n, causal, seq_len_k, interpret = meta
+    return query_side(
+        q, k_l, m_mat, v, delta, scale=scale, block_n=block_n, causal=causal,
+        seq_len_k=seq_len_k, interpret=interpret,
+    )
+
+
+def _query_side_fwd(meta, q, k_l, m_mat, v, delta):
+    out = query_side_op(meta, q, k_l, m_mat, v, delta)
+    return out, (q, k_l, m_mat, v, delta)
+
+
+def _query_side_bwd(meta, res, g):
+    scale, block_n, causal, seq_len_k, interpret = meta
+    q, k_l, m_mat, v, delta = res
+    return query_side_bwd(
+        q, k_l, m_mat, v, delta, g, scale=scale, block_n=block_n,
+        causal=causal, seq_len_k=seq_len_k, interpret=interpret,
+    )
+
+
+query_side_op.defvjp(_query_side_fwd, _query_side_bwd)
+
+
+# --------------------------------------------------------------------------
+# Full fused attention.
+# --------------------------------------------------------------------------
 @functools.partial(
     jax.jit,
     static_argnames=("cfg", "scale", "block_n", "interpret"),
@@ -41,29 +129,50 @@ def ss_attention_fused(
     block_n: int = 512,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """Pallas-backed spectral-shifting attention. Shapes (..., n, d)."""
-    if cfg.causal:
-        raise NotImplementedError(
-            "fused kernel is bidirectional/decode-only; use the jnp path for "
-            "the segment-causal variant"
-        )
+    """Pallas-backed spectral-shifting attention. Shapes (..., n, d).
+
+    Differentiable (custom-VJP kernels) and segment-causal capable —
+    ``cfg.causal=True`` applies the same masks as the jnp reference path:
+    the B-/F-side masks stream inside the kernels, the (c, c) core mask and
+    the lower-triangular projection of U stay in jnp.
+    """
     *lead, n, d = q.shape
+    n_k = k.shape[-2]
     dv = v.shape[-1]
+    c = cfg.num_landmarks
+    if n <= c and n_k <= c:
+        # Degenerate small-n regime: exact attention, as the jnp path does.
+        return full_attention(q, k, v, causal=cfg.causal, scale=scale)
     scale = scale if scale is not None else 1.0 / (d**0.5)
     b = 1
     for s_ in lead:
         b *= s_
     qf = q.reshape(b, n, d)
-    kf = k.reshape(b, k.shape[-2], d)
-    vf = v.reshape(b, v.shape[-2], dv)
+    kf = k.reshape(b, n_k, d)
+    vf = v.reshape(b, n_k, dv)
 
-    q_l = segment_means(qf, cfg.num_landmarks)  # (b, c, d)
-    k_l = segment_means(kf, cfg.num_landmarks)
+    q_l = segment_means(qf, c, via_matmul=cfg.landmark_via_matmul)  # (b, c, d)
+    k_l = segment_means(kf, c, via_matmul=cfg.landmark_via_matmul)
+    if q_l.shape[-2] != k_l.shape[-2]:
+        # Mirror the jnp path's guard: n_q <= c < n_k degenerates Q~ to
+        # per-token landmarks and the (c, c) core goes rectangular.
+        raise ValueError(
+            "spectral-shift attention needs matching landmark counts for Q~ "
+            f"and K~, got {q_l.shape[-2]} vs {k_l.shape[-2]}. For decode "
+            "(n_q=1) use the jnp path with cached q_landmarks/k_landmarks."
+        )
 
-    # c x c core in jnp (fp32 softmax).
+    # c x c core in jnp (fp32 softmax), causally masked like _ss_factors.
+    c_count = q_l.shape[1]
+    a_mask = (
+        jnp.arange(c_count)[:, None] >= jnp.arange(c_count)[None, :]
+        if cfg.causal
+        else None
+    )
     a = _softmax(
         jnp.einsum("bcd,bed->bce", q_l.astype(jnp.float32), k_l.astype(jnp.float32))
-        * scale
+        * scale,
+        a_mask,
     )
     core = ss_core(
         a,
@@ -72,21 +181,46 @@ def ss_attention_fused(
         rank_tol=cfg.rank_tol,
         use_shift=cfg.use_shift,
     )
+    if cfg.delta_scale == "corrected" and cfg.use_shift:
+        # Beyond-paper shift rescale — mirror spectral_shift_attention.
+        core = core._replace(
+            delta=core.delta * (c_count / n_k),
+            u=jnp.matmul(
+                core.z,
+                jnp.eye(c_count, dtype=core.z.dtype)
+                - (core.delta * (c_count / n_k)) * core.z,
+            ),
+        )
+    if cfg.variant == "eq10_literal":
+        u = jnp.matmul(
+            core.z, jnp.eye(c_count, dtype=a.dtype) - core.delta * a
+        )
+    else:
+        u = core.u
+    if cfg.causal:
+        # Exact pinv of the lower-triangular core is lower-triangular;
+        # project the finite Newton–Schulz estimate back (no future leak).
+        tril = jnp.tril(jnp.ones((c_count, c_count), bool))
+        u = jnp.where(tril, u, 0.0)
 
-    bv = landmark_summary(
-        q_l, kf, vf, scale=scale, block_n=block_n, interpret=interpret
+    bv = landmark_summary_op(
+        (scale, block_n, cfg.causal, interpret), q_l, kf, vf
     )  # (b, c, dv)
-    m_mat = jnp.matmul(core.u.astype(jnp.float32), bv.astype(jnp.float32)).astype(
+    m_mat = jnp.matmul(u.astype(jnp.float32), bv.astype(jnp.float32)).astype(
         v.dtype
     )
-    delta = (
-        core.delta
-        if (cfg.include_shift_identity and qf.shape[1] == kf.shape[1])
-        else jnp.zeros_like(core.delta)
-    )
-    out = query_side(
-        qf, k_l, m_mat, vf, delta, scale=scale, block_n=block_n,
-        interpret=interpret,
+    if cfg.include_shift_identity and n <= n_k:
+        # + delta_ss I_n -> + delta_ss * V on the query-aligned rows of V
+        # (decode convention: queries are the last n positions of the
+        # n_k-long context; self-attention is the n == n_k case).
+        delta = core.delta.astype(jnp.float32)
+        v_q = vf if n == n_k else vf[:, n_k - n :]
+    else:
+        delta = jnp.zeros((b, 1, 1), jnp.float32)
+        v_q = vf if n == n_k else jnp.zeros((b, n, dv), vf.dtype)
+    out = query_side_op(
+        (scale, block_n, cfg.causal, n_k, interpret),
+        qf, k_l, m_mat, v_q, delta,
     )
     return out.reshape(*lead, n, dv)
 

@@ -7,12 +7,21 @@ O(c^2)-small and stays in jnp:
   queries are VMEM-resident; K/V stream HBM->VMEM in ``block_n`` chunks with
   the online-softmax (flash) recurrence, so no (c, n) intermediate ever
   exists. Grid = (batch, n_blocks), n innermost so the fp32 accumulators in
-  VMEM scratch persist across the stream.
+  VMEM scratch persist across the stream. ``return_stats=True`` additionally
+  emits the per-row online-softmax statistics ``(m, l)`` — the residuals the
+  custom-VJP backward kernel (ss_attention_bwd.py) uses to reconstruct the
+  softmax factor exactly without a second reduction pass.
 
 * ``query_side`` (F-side): ``out = softmax(Q K~^T) @ M + delta * V`` with
   ``M = U_ss (BV)`` (c x dv, VMEM-resident). Softmax axis is c (fully
   resident) so each Q/V block needs exactly one HBM read and one write —
   the (n, c) matrix F is never materialized.
+
+Both kernels take ``seg`` (landmark segment length, 0 = bidirectional) for
+the segment-causal variant: landmark row r only attends keys in segments
+<= r (B-side), and query position p only attends landmark columns
+<= segment_of(p) (F-side) — the same masks ``core.attention._ss_factors``
+applies on the jnp path, evaluated inside the stream.
 
 Block shapes default to MXU/VPU-aligned sizes (lane dim = head_dim, ideally
 a multiple of 128; sublane blocks multiples of 8). Kernels are validated on
@@ -30,24 +39,36 @@ from jax.experimental.pallas import tpu as pltpu
 _NEG_INF = -1e30
 
 
+def _b_side_mask(shape, i, *, n_valid: int, block_n: int, seg: int):
+    """Key-validity x segment-causal mask for one streamed B-side block
+    (shape (c, bn) at block index ``i``), or None when nothing is masked.
+    Shared by the forward step and the backward kernel so the two can never
+    drift apart."""
+    mask = None
+    if n_valid % block_n:
+        # Keys past the true sequence end (zero-padded tail block).
+        kv_pos = i * block_n + jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+        mask = kv_pos < n_valid
+    if seg:
+        # Segment-causal: landmark row r (the mean of segment r) attends
+        # keys up to the end of its own segment only.
+        kv_pos = i * block_n + jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+        row = jax.lax.broadcasted_iota(jnp.int32, shape, 0)
+        cmask = kv_pos < (row + 1) * seg
+        mask = cmask if mask is None else jnp.logical_and(mask, cmask)
+    return mask
+
+
 # --------------------------------------------------------------------------
 # B-side: landmark summary with online softmax over the streamed n axis.
 # --------------------------------------------------------------------------
-def _landmark_summary_kernel(
-    q_ref,  # (1, c, d)    VMEM
-    k_ref,  # (1, bn, d)   VMEM (streamed)
-    v_ref,  # (1, bn, dv)  VMEM (streamed)
-    o_ref,  # (1, c, dv)   VMEM
-    m_scr,  # (c, 1)       fp32 scratch: running max
-    l_scr,  # (c, 1)       fp32 scratch: running denominator
-    acc_scr,  # (c, dv)    fp32 scratch: running numerator
-    *,
-    scale: float,
-    n_valid: int,
-    block_n: int,
+def _landmark_summary_step(
+    q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr, *,
+    scale: float, n_valid: int, block_n: int, seg: int,
 ):
+    """One online-softmax step over key/value block ``i`` (shared by the
+    plain and the stats-emitting kernel)."""
     i = pl.program_id(1)
-    n_blocks = pl.num_programs(1)
 
     @pl.when(i == 0)
     def _init():
@@ -61,14 +82,17 @@ def _landmark_summary_kernel(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     ) * scale                                             # (c, bn)
 
-    # Mask keys past the true sequence end (zero-padded tail block).
-    if n_valid % block_n:
-        kv_pos = i * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(kv_pos < n_valid, s, _NEG_INF)
+    mask = _b_side_mask(s.shape, i, n_valid=n_valid, block_n=block_n, seg=seg)
+    if mask is not None:
+        s = jnp.where(mask, s, _NEG_INF)
 
     m_prev = m_scr[...]                                   # (c, 1)
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
     p = jnp.exp(s - m_new)                                # (c, bn)
+    if mask is not None:
+        # exp underflows to 0 for real scores, but a fully-masked row in the
+        # first block has m_new == s == -inf => exp(0) == 1; zero explicitly.
+        p = jnp.where(mask, p, 0.0)
     corr = jnp.exp(m_prev - m_new)                        # (c, 1)
     l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
     pv = jax.lax.dot_general(
@@ -78,10 +102,55 @@ def _landmark_summary_kernel(
     acc_scr[...] = acc_scr[...] * corr + pv
     m_scr[...] = m_new
 
-    @pl.when(i == n_blocks - 1)
+
+def _landmark_summary_kernel(
+    q_ref,  # (1, c, d)    VMEM
+    k_ref,  # (1, bn, d)   VMEM (streamed)
+    v_ref,  # (1, bn, dv)  VMEM (streamed)
+    o_ref,  # (1, c, dv)   VMEM
+    m_scr,  # (c, 1)       fp32 scratch: running max
+    l_scr,  # (c, 1)       fp32 scratch: running denominator
+    acc_scr,  # (c, dv)    fp32 scratch: running numerator
+    *,
+    scale: float,
+    n_valid: int,
+    block_n: int,
+    seg: int,
+):
+    _landmark_summary_step(
+        q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr,
+        scale=scale, n_valid=n_valid, block_n=block_n, seg=seg,
+    )
+
+    @pl.when(pl.program_id(1) == pl.num_programs(1) - 1)
     def _finalize():
         denom = jnp.maximum(l_scr[...], 1e-30)
         o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def _landmark_summary_stats_kernel(
+    q_ref, k_ref, v_ref,
+    o_ref,      # (1, c, dv)  VMEM
+    mo_ref,     # (1, c, 1)   fp32: final row max
+    lo_ref,     # (1, c, 1)   fp32: final row denominator
+    m_scr, l_scr, acc_scr,
+    *,
+    scale: float,
+    n_valid: int,
+    block_n: int,
+    seg: int,
+):
+    _landmark_summary_step(
+        q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr,
+        scale=scale, n_valid=n_valid, block_n=block_n, seg=seg,
+    )
+
+    @pl.when(pl.program_id(1) == pl.num_programs(1) - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+        mo_ref[0] = m_scr[...]
+        lo_ref[0] = l_scr[...]
 
 
 def landmark_summary(
@@ -91,11 +160,20 @@ def landmark_summary(
     *,
     scale: float,
     block_n: int = 512,
+    causal: bool = False,
     interpret: bool = False,
-) -> jnp.ndarray:
-    """BV = softmax(Q~ K^T * scale) @ V via a flash-style streamed kernel."""
+    return_stats: bool = False,
+):
+    """BV = softmax(Q~ K^T * scale) @ V via a flash-style streamed kernel.
+
+    ``causal=True`` applies the segment-causal B-mask (landmark r sees keys
+    < (r+1)*seg with seg = ceil(n/c)). ``return_stats=True`` returns
+    ``(bv, m, l)`` with ``m``/``l`` (b, c, 1) fp32 — the online-softmax max
+    and denominator, saved as custom-VJP residuals.
+    """
     b, c, d = q_l.shape
     n, dv = k.shape[1], v.shape[2]
+    seg = -(-n // c) if causal else 0
     block_n = min(block_n, n)
     n_pad = -n % block_n
     if n_pad:
@@ -103,24 +181,46 @@ def landmark_summary(
         v = jnp.pad(v, ((0, 0), (0, n_pad), (0, 0)))
     n_blocks = (n + n_pad) // block_n
 
-    kernel = functools.partial(
-        _landmark_summary_kernel, scale=scale, n_valid=n, block_n=block_n
-    )
+    in_specs = [
+        pl.BlockSpec((1, c, d), lambda bi, i: (bi, 0, 0)),
+        pl.BlockSpec((1, block_n, d), lambda bi, i: (bi, i, 0)),
+        pl.BlockSpec((1, block_n, dv), lambda bi, i: (bi, i, 0)),
+    ]
+    scratch_shapes = [
+        pltpu.VMEM((c, 1), jnp.float32),
+        pltpu.VMEM((c, 1), jnp.float32),
+        pltpu.VMEM((c, dv), jnp.float32),
+    ]
+    common = dict(scale=scale, n_valid=n, block_n=block_n, seg=seg)
+    if not return_stats:
+        kernel = functools.partial(_landmark_summary_kernel, **common)
+        return pl.pallas_call(
+            kernel,
+            grid=(b, n_blocks),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, c, dv), lambda bi, i: (bi, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((b, c, dv), v.dtype),
+            scratch_shapes=scratch_shapes,
+            interpret=interpret,
+        )(q_l, k, v)
+
+    kernel = functools.partial(_landmark_summary_stats_kernel, **common)
+    stat_spec = pl.BlockSpec((1, c, 1), lambda bi, i: (bi, 0, 0))
     return pl.pallas_call(
         kernel,
         grid=(b, n_blocks),
-        in_specs=[
-            pl.BlockSpec((1, c, d), lambda bi, i: (bi, 0, 0)),
-            pl.BlockSpec((1, block_n, d), lambda bi, i: (bi, i, 0)),
-            pl.BlockSpec((1, block_n, dv), lambda bi, i: (bi, i, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, c, dv), lambda bi, i: (bi, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, c, dv), v.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((c, 1), jnp.float32),
-            pltpu.VMEM((c, 1), jnp.float32),
-            pltpu.VMEM((c, dv), jnp.float32),
-        ],
+        in_specs=in_specs,
+        out_specs=(
+            pl.BlockSpec((1, c, dv), lambda bi, i: (bi, 0, 0)),
+            stat_spec,
+            stat_spec,
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, c, dv), v.dtype),
+            jax.ShapeDtypeStruct((b, c, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, c, 1), jnp.float32),
+        ),
+        scratch_shapes=scratch_shapes,
         interpret=interpret,
     )(q_l, k, v)
 
@@ -128,6 +228,33 @@ def landmark_summary(
 # --------------------------------------------------------------------------
 # F-side: fused softmax(Q K~^T) @ M + delta * V over streamed Q/V blocks.
 # --------------------------------------------------------------------------
+def _query_side_probs(q_ref, kl_ref, *, scale, block_n, seg, pos_offset):
+    """Block-resident softmax factor P (bn, c), with the segment-causal
+    F-mask applied when ``seg`` is set. Shared with the backward kernel."""
+    i = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)                      # (bn, d)
+    kl = kl_ref[0].astype(jnp.float32)                    # (c, d)
+    s = jax.lax.dot_general(
+        q, kl, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                             # (bn, c)
+    mask = None
+    if seg:
+        # Query at position p attends landmark columns <= p // seg only.
+        qpos = (
+            i * block_n
+            + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            + pos_offset
+        )
+        lseg = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = lseg <= qpos // seg
+        s = jnp.where(mask, s, _NEG_INF)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    if mask is not None:
+        p = jnp.where(mask, p, 0.0)
+    return p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+
+
 def _query_side_kernel(
     q_ref,      # (1, bn, d)   VMEM (streamed)
     kl_ref,     # (1, c, d)    VMEM
@@ -137,15 +264,14 @@ def _query_side_kernel(
     o_ref,      # (1, bn, dv)  VMEM
     *,
     scale: float,
+    block_n: int,
+    seg: int,
+    pos_offset: int,
 ):
-    q = q_ref[0].astype(jnp.float32)                      # (bn, d)
-    kl = kl_ref[0].astype(jnp.float32)                    # (c, d)
-    s = jax.lax.dot_general(
-        q, kl, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    ) * scale                                             # (bn, c)
-    s = s - jnp.max(s, axis=-1, keepdims=True)
-    p = jnp.exp(s)
-    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    p = _query_side_probs(
+        q_ref, kl_ref, scale=scale, block_n=block_n, seg=seg,
+        pos_offset=pos_offset,
+    )
     out = jax.lax.dot_general(
         p, m_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
@@ -163,11 +289,22 @@ def query_side(
     *,
     scale: float,
     block_n: int = 512,
+    causal: bool = False,
+    seq_len_k: int = 0,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """out = softmax(Q K~^T * scale) @ M + delta * V, one HBM pass over Q/V."""
+    """out = softmax(Q K~^T * scale) @ M + delta * V, one HBM pass over Q/V.
+
+    ``causal=True`` applies the segment-causal F-mask; ``seq_len_k`` is the
+    key-sequence length the landmark segments were built from (defaults to
+    n, i.e. self-attention; a longer context puts the queries at its tail,
+    the decode convention).
+    """
     b, n, d = q.shape
     c, dv = k_l.shape[1], v.shape[2]
+    n_k = seq_len_k or n
+    seg = -(-n_k // c) if causal else 0
+    pos_offset = n_k - n if causal else 0
     block_n = min(block_n, n)
     n_pad = -n % block_n
     if n_pad:
@@ -175,7 +312,10 @@ def query_side(
         v = jnp.pad(v, ((0, 0), (0, n_pad), (0, 0)))
     n_blocks = (n + n_pad) // block_n
 
-    kernel = functools.partial(_query_side_kernel, scale=scale)
+    kernel = functools.partial(
+        _query_side_kernel, scale=scale, block_n=block_n, seg=seg,
+        pos_offset=pos_offset,
+    )
     out = pl.pallas_call(
         kernel,
         grid=(b, n_blocks),

@@ -26,6 +26,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import SHAPE_PRESETS, TrainConfig
 from repro.configs.registry import ARCH_IDS, batch_specs, get_config
 from repro.distributed.sharding import (
+    apply_seq_sharding_config,
     named_sharding,
     shardings_for,
     sharding_rules,
@@ -189,6 +190,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, attention: str | None 
         # Shard the KV-cache sequence over "model" (kv heads are often
         # narrower than the model axis).
         overrides.setdefault("cache_seq", "model")
+
+    cfg = apply_seq_sharding_config(cfg, mesh, overrides)
 
     t0 = time.time()
     result: dict = {

@@ -51,17 +51,17 @@ def _core_attention(cfg: ModelConfig, impl: str, q, k, v, *, causal: bool):
         return chunked_attention(q, k, v, causal=causal,
                                  unroll=cfg.unroll_scans)
     if impl == "spectral_shift_fused":
-        # Pallas-kernel-backed path (kernels/ss_attention.py). The fused
-        # kernels are bidirectional/decode-oriented; the segment-causal
-        # variant falls back to the jnp path.
-        if causal:
-            return spectral_shift_attention(
-                q, k, v, ss_config_from(cfg, causal=True)
-            )
-        from repro.kernels.ops import ss_attention_fused
+        # Pallas-kernel-backed path, routed through the dispatch registry
+        # (kernels/dispatch.py): plan = impl + block size per shape key,
+        # resolved at trace time. Both the bidirectional and the
+        # segment-causal variant run fused; grads flow through the
+        # custom-VJP backward kernels.
+        from repro.kernels.dispatch import dispatch_ss_attention
 
-        return ss_attention_fused(
-            q, k, v, ss_config_from(cfg, causal=False),
+        return dispatch_ss_attention(
+            q, k, v, ss_config_from(cfg, causal=causal),
+            backend=cfg.attention_backend,
+            autotune_enabled=cfg.autotune,
             interpret=cfg.kernels_interpret,
         )
     if impl in ("spectral_shift", "nystrom"):

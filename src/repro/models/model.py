@@ -347,6 +347,17 @@ def _run_trunk(params, cfg: ModelConfig, x, positions, impl, mode):
             layer_fn,
             policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
         )
+    elif cfg.remat == "ss_stats":
+        # Fused-attention training profile: across the layer boundary keep
+        # only the (c, dv) landmark summary BV and the (c, 1) online-softmax
+        # stats the custom-VJP kernels named in kernels/ops.py — everything
+        # O(n)-sized is recomputed in backward.
+        layer_fn = jax.checkpoint(
+            layer_fn,
+            policy=jax.checkpoint_policies.save_only_these_names(
+                "ss_bv", "ss_stats"
+            ),
+        )
 
     if cfg.scan_layers and not isinstance(params["layers"], list):
         def body(carry, lp):

@@ -64,6 +64,20 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, lr_fn: Callable):
     return train_step
 
 
+def make_grad_step(cfg: ModelConfig):
+    """Forward + backward only (no optimizer update): the fwd+bwd cell that
+    ``benchmarks/bench_train_step.py`` times and the gradient-parity tests
+    compare across attention backends."""
+
+    def grad_step(params, batch):
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, cfg, batch
+        )
+        return loss, grads
+
+    return grad_step
+
+
 def make_eval_step(cfg: ModelConfig):
     def eval_step(params, batch):
         loss, metrics = loss_fn(params, cfg, batch)

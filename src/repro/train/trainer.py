@@ -22,7 +22,6 @@ and continues. The elastic integration test exercises exactly this path.
 """
 from __future__ import annotations
 
-import dataclasses
 import logging
 import time
 from typing import Callable, Optional
@@ -41,7 +40,11 @@ from repro.distributed.fault_tolerance import (
     FailureInjector,
     HeartbeatMonitor,
 )
-from repro.distributed.sharding import sharding_rules, shardings_for
+from repro.distributed.sharding import (
+    apply_seq_sharding_config,
+    sharding_rules,
+    shardings_for,
+)
 from repro.models.model import model_specs
 from repro.models.params import abstract_params, init_params, logical_axes
 from repro.optim.adamw import AdamWState, adamw_init
@@ -65,8 +68,9 @@ class Trainer:
         injector: Optional[FailureInjector] = None,
         lr_fn: Optional[Callable] = None,
     ):
-        self.cfg, self.tcfg, self.shape = cfg, tcfg, shape
         self.rule_overrides = rule_overrides or {}
+        cfg = apply_seq_sharding_config(cfg, mesh, self.rule_overrides, log=log)
+        self.cfg, self.tcfg, self.shape = cfg, tcfg, shape
         self.data = data or SyntheticLM(
             vocab_size=cfg.vocab_size,
             seq_len=shape.seq_len,
@@ -93,6 +97,7 @@ class Trainer:
         axes = logical_axes(specs)
         params_abs = abstract_params(specs, dtype=jnp.dtype(cfg.param_dtype))
 
+        self._warm_attention_plans()
         with mesh, sharding_rules(mesh, self.rule_overrides):
             self.p_sh = shardings_for(mesh, axes, params_abs)
             bspecs, baxes = batch_specs(cfg, self.shape)
@@ -134,6 +139,43 @@ class Trainer:
                 self.params = init(key)
                 opt = jax.jit(adamw_init, out_shardings=self.o_sh)
                 self.opt_state = opt(self.params)
+
+    def _warm_attention_plans(self) -> None:
+        """Measured-autotune warmup: resolve the train-shape kernel plan
+        before the step is jitted, so trace-time dispatch (models/
+        attention.py) hits the registry instead of tuning mid-trace. A
+        previously measured plan (in-memory or on disk, including the
+        ``autotune_cache`` override) short-circuits re-measurement — this
+        runs again on every elastic mesh re-install."""
+        cfg = self.cfg
+        if (not cfg.autotune
+                or cfg.attention_impl != "spectral_shift_fused"
+                or cfg.attention_backend != "auto"):
+            # A forced backend never consults the registry — measuring
+            # would be pure wasted startup time.
+            return
+        from repro.kernels import dispatch
+
+        if cfg.autotune_cache:
+            dispatch.set_cache_path(cfg.autotune_cache)
+            dispatch.load_cache()
+        key = dispatch.make_key(
+            self.shape.seq_len, cfg.num_landmarks, cfg.resolved_head_dim,
+            cfg.compute_dtype, cfg.is_decoder_only,
+        )
+        plan = dispatch.get_plan(key)
+        if plan.source == "heuristic":  # nothing measured for this shape yet
+            plan = dispatch.autotune(
+                self.shape.seq_len,
+                cfg.num_landmarks,
+                cfg.resolved_head_dim,
+                dtype=cfg.compute_dtype,
+                causal=cfg.is_decoder_only,
+            )
+        log.info(
+            "attention plan for n=%d (%s): impl=%s block_n=%d",
+            self.shape.seq_len, plan.source, plan.impl, plan.block_n,
+        )
 
     # -- checkpoint ----------------------------------------------------------
     def save(self, blocking: bool = False) -> None:

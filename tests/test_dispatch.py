@@ -1,0 +1,175 @@
+"""Dispatch registry: plan selection, disk-cache round-trip, autotune smoke,
+and routing parity of ``dispatch_ss_attention`` across forced backends."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attention import SSConfig, spectral_shift_attention
+from repro.kernels import dispatch
+
+
+@pytest.fixture(autouse=True)
+def isolated_cache(tmp_path, monkeypatch):
+    """Every test gets a private cache file and a clean registry."""
+    monkeypatch.setenv(
+        "REPRO_AUTOTUNE_CACHE", str(tmp_path / "autotune.json")
+    )
+    dispatch.clear_registry()
+    yield
+    dispatch.clear_registry()
+
+
+def test_key_buckets_sequence_length():
+    k1 = dispatch.make_key(1000, 64, 64, jnp.float32, False, backend="tpu")
+    k2 = dispatch.make_key(1024, 64, 64, jnp.float32, False, backend="tpu")
+    k3 = dispatch.make_key(1025, 64, 64, jnp.float32, False, backend="tpu")
+    assert k1 == k2 and k1.n == 1024
+    assert k3.n == 2048
+
+
+def test_key_encode_decode_roundtrip():
+    key = dispatch.make_key(4096, 64, 128, jnp.bfloat16, True, backend="tpu")
+    assert dispatch.PlanKey.decode(key.encode()) == key
+
+
+def test_heuristics():
+    cpu = dispatch.make_key(4096, 64, 64, jnp.float32, False, backend="cpu")
+    assert dispatch.heuristic_plan(cpu).impl == "jnp"
+    tpu_small = dispatch.make_key(512, 64, 64, jnp.bfloat16, True, backend="tpu")
+    tpu_big = dispatch.make_key(32768, 64, 64, jnp.bfloat16, True, backend="tpu")
+    assert dispatch.heuristic_plan(tpu_small).impl == "fused"
+    assert dispatch.heuristic_plan(tpu_big).block_n == 1024
+
+
+def test_register_overrides_heuristic():
+    key = dispatch.make_key(2048, 64, 64, jnp.float32, False, backend="tpu")
+    forced = dispatch.Plan(impl="jnp", block_n=256, source="registered")
+    dispatch.register_plan(key, forced)
+    assert dispatch.get_plan(key) == forced
+
+
+def test_cache_round_trip():
+    key = dispatch.make_key(8192, 64, 128, jnp.bfloat16, True, backend="tpu")
+    plan = dispatch.Plan(impl="fused", block_n=1024, source="autotuned")
+    dispatch.register_plan(key, plan)
+    path = dispatch.save_cache()
+    assert os.path.exists(path)
+    with open(path) as f:
+        payload = json.load(f)
+    assert key.encode() in payload["plans"]
+
+    # A fresh process: empty registry, plans come back from disk.
+    dispatch.clear_registry()
+    assert dispatch.load_cache() == 1
+    got = dispatch.get_plan(key)
+    assert (got.impl, got.block_n) == ("fused", 1024)
+    assert got.source == "cache"
+
+
+def test_save_cache_merges_existing_entries():
+    k1 = dispatch.make_key(1024, 64, 64, jnp.float32, False, backend="tpu")
+    dispatch.register_plan(k1, dispatch.Plan("fused", 512, source="autotuned"))
+    dispatch.save_cache()
+    dispatch.clear_registry()
+    k2 = dispatch.make_key(4096, 64, 64, jnp.float32, True, backend="tpu")
+    dispatch.register_plan(k2, dispatch.Plan("fused", 1024, source="autotuned"))
+    dispatch.save_cache()
+    dispatch.clear_registry()
+    assert dispatch.load_cache() == 2
+
+
+def test_heuristic_plans_not_persisted():
+    key = dispatch.make_key(1024, 64, 64, jnp.float32, False, backend="cpu")
+    dispatch.register_plan(key, dispatch.heuristic_plan(key))
+    dispatch.save_cache()
+    with open(dispatch.cache_path()) as f:
+        assert f.read().count('"plans": {}') == 1
+
+
+def test_autotune_records_measured_plan():
+    plan = dispatch.autotune(
+        128, 16, 16, causal=False, block_candidates=(64,), reps=1
+    )
+    assert plan.source == "autotuned"
+    assert plan.impl in ("jnp", "interpret")  # CPU: fused means interpret
+    # Winner is queryable without re-measuring, in-memory and from disk.
+    key = dispatch.make_key(128, 16, 16, jnp.float32, False)
+    assert dispatch.get_plan(key) == plan
+    dispatch.clear_registry()
+    dispatch.load_cache()
+    assert dispatch.get_plan(key).impl == plan.impl
+
+
+class TestDispatchRouting:
+    def _qkv(self, n=192, d=32):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        return (
+            jax.random.normal(ks[0], (2, n, d)) * 0.5,
+            jax.random.normal(ks[1], (2, n, d)) * 0.5,
+            jax.random.normal(ks[2], (2, n, d)),
+        )
+
+    @pytest.mark.parametrize("causal", [False, True])
+    def test_forced_backends_agree(self, causal):
+        q, k, v = self._qkv()
+        cfg = SSConfig(num_landmarks=16, causal=causal)
+        ref = spectral_shift_attention(q, k, v, cfg)
+        out_jnp = dispatch.dispatch_ss_attention(q, k, v, cfg, backend="jnp")
+        out_interp = dispatch.dispatch_ss_attention(
+            q, k, v, cfg, backend="interpret"
+        )
+        np.testing.assert_allclose(out_jnp, ref, atol=1e-6)
+        np.testing.assert_allclose(out_interp, ref, atol=1e-4, rtol=1e-4)
+
+    def test_auto_on_cpu_routes_to_jnp_plan(self):
+        q, k, v = self._qkv()
+        cfg = SSConfig(num_landmarks=16)
+        key = dispatch.make_key(q.shape[-2], 16, q.shape[-1], q.dtype, False)
+        assert dispatch.get_plan(key).impl == "jnp"
+        out = dispatch.dispatch_ss_attention(q, k, v, cfg, backend="auto")
+        np.testing.assert_allclose(
+            out, spectral_shift_attention(q, k, v, cfg), atol=1e-6
+        )
+
+    def test_registered_plan_steers_auto_route(self):
+        q, k, v = self._qkv()
+        cfg = SSConfig(num_landmarks=16)
+        key = dispatch.make_key(q.shape[-2], 16, q.shape[-1], q.dtype, False)
+        dispatch.register_plan(
+            key, dispatch.Plan(impl="interpret", block_n=64, source="registered")
+        )
+        out = dispatch.dispatch_ss_attention(q, k, v, cfg, backend="auto")
+        np.testing.assert_allclose(
+            out, spectral_shift_attention(q, k, v, cfg), atol=1e-4, rtol=1e-4
+        )
+
+    def test_unknown_backend_raises(self):
+        q, k, v = self._qkv(64, 16)
+        with pytest.raises(ValueError, match="unknown attention backend"):
+            dispatch.dispatch_ss_attention(
+                q, k, v, SSConfig(num_landmarks=8), backend="cuda"
+            )
+
+    def test_model_attention_impl_uses_dispatch(self):
+        """models/attention.py fused impl (causal) == jnp impl output."""
+        from repro.configs.base import reduced
+        from repro.configs.registry import get_config
+        from repro.models.attention import _core_attention
+
+        cfg = reduced(
+            get_config("qwen2-7b"), num_landmarks=16,
+            attention_backend="interpret",
+        )
+        key = jax.random.PRNGKey(2)
+        q = jax.random.normal(key, (1, 2, 160, 32)) * 0.5
+        fused = _core_attention(
+            cfg, "spectral_shift_fused", q, q, q, causal=True
+        )
+        ref = _core_attention(cfg, "spectral_shift", q, q, q, causal=True)
+        np.testing.assert_allclose(fused, ref, atol=1e-4, rtol=1e-4)

@@ -123,3 +123,86 @@ class TestFusedOp:
         out = ss_attention_fused(q, k, v, cfg, interpret=True)
         assert out.dtype == jnp.bfloat16
         assert not bool(jnp.any(jnp.isnan(out.astype(jnp.float32))))
+
+
+class TestCausalKernels:
+    """Segment-causal masks evaluated inside the streams vs masked oracles."""
+
+    @staticmethod
+    def _ls_ref(q_l, k, v, scale):
+        c, n = q_l.shape[1], k.shape[1]
+        seg = -(-n // c)
+        mask = jnp.arange(n)[None, :] < (jnp.arange(c)[:, None] + 1) * seg
+        s = jnp.einsum("bcd,bnd->bcn", q_l, k) * scale
+        s = jnp.where(mask, s, -1e30)
+        p = jnp.exp(s - jnp.max(s, -1, keepdims=True))
+        p = jnp.where(mask, p, 0.0)
+        p = p / jnp.maximum(jnp.sum(p, -1, keepdims=True), 1e-30)
+        return jnp.einsum("bcn,bnd->bcd", p, v)
+
+    @staticmethod
+    def _qs_ref(q, k_l, m_mat, v, delta, scale):
+        n, c = q.shape[1], k_l.shape[1]
+        seg = -(-n // c)
+        mask = jnp.arange(c)[None, :] <= (jnp.arange(n)[:, None] // seg)
+        s = jnp.einsum("bnd,bcd->bnc", q, k_l) * scale
+        s = jnp.where(mask, s, -1e30)
+        p = jnp.exp(s - jnp.max(s, -1, keepdims=True))
+        p = jnp.where(mask, p, 0.0)
+        p = p / jnp.maximum(jnp.sum(p, -1, keepdims=True), 1e-30)
+        return jnp.einsum("bnc,bcd->bnd", p, m_mat) + delta * v
+
+    @pytest.mark.parametrize("n", [256, 500])  # 500: padded tail
+    def test_landmark_summary_causal(self, n):
+        q, k, v, q_l, _ = _inputs(2, n, 32, 32, 16, jnp.float32, seed=6)
+        scale = 1 / 32**0.5
+        out = landmark_summary(
+            q_l, k, v, scale=scale, block_n=128, causal=True, interpret=True
+        )
+        np.testing.assert_allclose(
+            out, self._ls_ref(q_l, k, v, scale), atol=2e-5, rtol=2e-5
+        )
+
+    @pytest.mark.parametrize("n", [256, 500])
+    def test_query_side_causal(self, n):
+        q, k, v, q_l, k_l = _inputs(2, n, 32, 32, 16, jnp.float32, seed=7)
+        m_mat = jax.random.normal(jax.random.PRNGKey(8), (2, 16, 32))
+        delta = jnp.full((2, 1, 1), 0.25, jnp.float32)
+        scale = 1 / 32**0.5
+        out = query_side(
+            q, k_l, m_mat, v, delta, scale=scale, block_n=128, causal=True,
+            interpret=True,
+        )
+        np.testing.assert_allclose(
+            out, self._qs_ref(q, k_l, m_mat, v, delta, scale),
+            atol=2e-5, rtol=2e-5,
+        )
+
+    @pytest.mark.parametrize("n,c", [(256, 32), (384, 48)])
+    def test_fused_causal_matches_jnp_path(self, n, c):
+        q, k, v, *_ = _inputs(2, n, 32, 32, c, jnp.float32, seed=8)
+        cfg = SSConfig(num_landmarks=c, causal=True)
+        fused = ss_attention_fused(q, k, v, cfg, interpret=True)
+        ref = spectral_shift_attention(q, k, v, cfg)
+        np.testing.assert_allclose(fused, ref, atol=1e-4, rtol=1e-4)
+
+    def test_stats_reconstruct_softmax(self):
+        """(m, l) stats reconstruct the streamed softmax factor exactly."""
+        q, k, v, q_l, _ = _inputs(1, 320, 32, 32, 16, jnp.float32, seed=9)
+        scale = 1 / 32**0.5
+        bv, m, l = landmark_summary(
+            q_l, k, v, scale=scale, block_n=128, interpret=True,
+            return_stats=True,
+        )
+        plain = landmark_summary(
+            q_l, k, v, scale=scale, block_n=128, interpret=True
+        )
+        np.testing.assert_allclose(bv, plain, atol=0, rtol=0)
+        s = jnp.einsum("bcd,bnd->bcn", q_l, k) * scale
+        p = jnp.exp(s - m) / l  # reconstructed from the saved stats
+        np.testing.assert_allclose(
+            jnp.sum(p, -1), jnp.ones_like(l[..., 0]), atol=1e-5, rtol=1e-5
+        )
+        np.testing.assert_allclose(
+            jnp.einsum("bcn,bnd->bcd", p, v), bv, atol=2e-5, rtol=2e-5
+        )
