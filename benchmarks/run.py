@@ -14,6 +14,7 @@ from benchmarks import (
     bench_complexity,
     bench_error_bound,
     bench_serve,
+    bench_sharded_attn,
     bench_spectrum,
     bench_train_step,
     roofline,
@@ -27,6 +28,7 @@ SUITES = {
     "roofline": roofline.run,                # EXPERIMENTS.md §Roofline
     "serve": bench_serve.run,                # paged vs dense serving TTFT
     "train_step": bench_train_step.run,      # fused vs jnp fwd+bwd
+    "sharded_attn": bench_sharded_attn.run,  # context-parallel fused vs jnp
 }
 
 

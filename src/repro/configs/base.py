@@ -47,6 +47,11 @@ class ModelConfig:
                                        # persist to the on-disk cache
     autotune_cache: str = ""           # cache path override ("" = default
                                        # REPRO_AUTOTUNE_CACHE / ~/.cache)
+    seq_shard_fused: bool = True       # context-parallel cells keep the fused
+                                       # Pallas path via the shard_map driver
+                                       # (kernels/sharded.py); False restores
+                                       # the legacy jnp-GSPMD downgrade in
+                                       # apply_seq_sharding_config
 
     # MoE
     moe: bool = False

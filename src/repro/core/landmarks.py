@@ -11,6 +11,29 @@ import jax
 import jax.numpy as jnp
 
 
+def onehot_segment_sums(x: jnp.ndarray, onehot: jnp.ndarray) -> jnp.ndarray:
+    """One-hot segment-sum GEMM with fp32 accumulation: ``onehot`` (m, n) ·
+    ``x`` (..., n, d) -> fp32 (..., m, d). The single formula behind every
+    landmark-sum site (segment_means, masked_segment_means, and the
+    shard-local sums in kernels/sharded.py) so their semantics cannot
+    drift."""
+    sums = jax.lax.dot_general(
+        onehot, x,
+        dimension_numbers=(((1,), (x.ndim - 2,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (m, ..., d)
+    return jnp.moveaxis(sums, 0, -2)
+
+
+def segment_counts(n_valid, num_landmarks: int, seg) -> jnp.ndarray:
+    """True per-segment token counts (m,) fp32 for ``n_valid`` tokens split
+    into segments of length ``seg`` (either may be traced); empty segments
+    clip to 1 so divisions stay finite — matching ``segment_means``."""
+    return jnp.clip(
+        n_valid - jnp.arange(num_landmarks) * seg, 1, seg
+    ).astype(jnp.float32)
+
+
 def segment_means(
     x: jnp.ndarray, num_landmarks: int, via_matmul: bool = False
 ) -> jnp.ndarray:
@@ -35,21 +58,12 @@ def segment_means(
         return x
     seg = -(-n // m)  # ceil(n / m) tokens per segment
     pad = seg * m - n
-    counts = (
-        jnp.clip(n - jnp.arange(m) * seg, 1, seg).astype(jnp.float32)
-        if pad
-        else float(seg)
-    )
+    counts = segment_counts(n, m, seg) if pad else float(seg)
     if via_matmul:
         # (m, n) one-hot segment map, in x's dtype so the GEMM stays on the
         # bf16 MXU path; accumulation forced to fp32.
         onehot = (jnp.arange(n) // seg == jnp.arange(m)[:, None]).astype(x.dtype)
-        sums = jax.lax.dot_general(
-            onehot, x,
-            dimension_numbers=(((1,), (x.ndim - 2,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )  # (m, ..., d)
-        sums = jnp.moveaxis(sums, 0, -2)
+        sums = onehot_segment_sums(x, onehot)
         means = sums / (counts[..., :, None] if pad else counts)
         return means.astype(x.dtype)
     xf = x.astype(jnp.float32)
@@ -60,6 +74,35 @@ def segment_means(
     sums = xf.sum(axis=-2)
     means = sums / (counts[..., :, None] if pad else counts)
     return means.astype(x.dtype)
+
+
+def masked_segment_means(
+    x: jnp.ndarray, num_landmarks: int, n_valid
+) -> jnp.ndarray:
+    """Segment means of ``x[..., :n_valid, :]`` computed on the full padded
+    array, with a *traced* ``n_valid``.
+
+    Matches ``segment_means(x[..., :n_valid, :], m, via_matmul=True)``
+    numerically while keeping every shape static, so bucketed prefill can
+    reuse one XLA program across prompt lengths: positions >= n_valid are
+    excluded from the segment sums and the segment length is the dynamic
+    ``ceil(n_valid / m)`` the unpadded call would use. Requires
+    ``n_valid > m`` (callers keep degenerate prompts on the unpadded exact
+    path)."""
+    n = x.shape[-2]
+    m = int(num_landmarks)
+    if m <= 0:
+        raise ValueError(f"num_landmarks must be positive, got {m}")
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    seg = -(-n_valid // m)  # traced ceil(n_valid / m)
+    pos = jnp.arange(n)
+    onehot = (
+        ((pos // seg)[None, :] == jnp.arange(m)[:, None])
+        & (pos < n_valid)[None, :]
+    ).astype(x.dtype)
+    sums = onehot_segment_sums(x, onehot)
+    counts = segment_counts(n_valid, m, seg)
+    return (sums / counts[:, None]).astype(x.dtype)
 
 
 def segment_of(position: jnp.ndarray, n: int, num_landmarks: int) -> jnp.ndarray:

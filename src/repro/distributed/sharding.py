@@ -73,13 +73,14 @@ def apply_seq_sharding_config(cfg, mesh: Mesh, overrides: Optional[dict] = None,
     kernel route the trainer runs):
 
     * ``landmark_via_matmul=True`` — see ``seq_axis_sharded``;
-    * fused attention falls back to ``attention_backend="jnp"`` — the Pallas
-      kernels stream a single-device n axis; until they are shard_map-wrapped
-      (ROADMAP) only the jnp route partitions under GSPMD;
-    * with that fallback, ``remat="ss_stats"`` becomes ``"full"`` — the jnp
-      route emits no ``ss_bv``/``ss_stats`` checkpoint names, so the
-      save-only-these-names policy would silently save nothing (full remat
-      behavior anyway; make it explicit).
+    * fused attention STAYS fused: seq-sharded cells route through the
+      shard_map context-parallel driver (kernels/sharded.py) via the dispatch
+      registry, so ``attention_backend`` and ``remat="ss_stats"`` are left
+      untouched (the sharded custom-VJP ops emit the same tagged residuals).
+      ``seq_shard_fused=False`` restores the legacy downgrade to the
+      jnp-GSPMD route (with ``remat="ss_stats"`` widened to ``"full"``, since
+      the jnp route emits no tagged residuals and the save-only-these-names
+      policy would silently save nothing).
 
     Returns ``cfg`` unchanged when the sequence axis is not sharded.
     """
@@ -93,8 +94,36 @@ def apply_seq_sharding_config(cfg, mesh: Mesh, overrides: Optional[dict] = None,
         cfg = dataclasses.replace(cfg, landmark_via_matmul=True)
     if (cfg.attention_impl == "spectral_shift_fused"
             and cfg.attention_backend in ("auto", "fused")):
+        if getattr(cfg, "seq_shard_fused", True):
+            if log:
+                log.info(
+                    "sequence axis is sharded: fused attention routes through "
+                    "the shard_map context-parallel kernels"
+                )
+            import jax
+
+            if (cfg.remat == "ss_stats"
+                    and cfg.attention_backend == "auto"
+                    and jax.default_backend() == "cpu"):
+                # The dispatch heuristic routes context-parallel cells to
+                # jnp-GSPMD on CPU, and the jnp route emits no tagged
+                # residuals — the save-only-these-names policy would
+                # silently save nothing. Widen explicitly (as the legacy
+                # downgrade did); a forced fused/interpret/sharded backend
+                # keeps ss_stats.
+                if log:
+                    log.warning(
+                        "remat='ss_stats' has no tagged residuals on the "
+                        "jnp route the CPU heuristic selects; using "
+                        "remat='full'"
+                    )
+                cfg = dataclasses.replace(cfg, remat="full")
+            return cfg
         if log:
-            log.info("sequence axis is sharded: forcing attention_backend=jnp")
+            log.info(
+                "sequence axis is sharded and seq_shard_fused=False: "
+                "forcing attention_backend=jnp"
+            )
         cfg = dataclasses.replace(cfg, attention_backend="jnp")
         if cfg.remat == "ss_stats":
             if log:
@@ -140,6 +169,41 @@ def sharding_rules(mesh: Mesh, overrides: Optional[dict] = None):
     finally:
         _state.rules = None
         _state.mesh = None
+
+
+def active_seq_sharding():
+    """(mesh, seq_axes, lead_axes) for the fused-attention shard_map driver,
+    read from the active ``sharding_rules`` context at trace time.
+
+    ``seq_axes`` is the tuple of mesh axes the "seq" rule maps onto — empty
+    when there is no active context or the axes span <= 1 devices.
+    ``lead_axes`` are the axes for attention's flattened (batch*heads)
+    leading dim: the "batch" + "heads_act" rules minus any axis the sequence
+    already claims (a mesh axis may appear once)."""
+    mesh, rules = _mesh(), _rules()
+    if mesh is None or rules is None:
+        return None, (), ()
+
+    def axes_of(rule):
+        v = rules.get(rule)
+        if v is None:
+            return ()
+        return (v,) if isinstance(v, str) else tuple(v)
+
+    seq_axes = tuple(a for a in axes_of("seq") if a in mesh.axis_names)
+    size = 1
+    for a in seq_axes:
+        size *= mesh.shape[a]
+    if size <= 1:
+        return mesh, (), ()
+    used = set(seq_axes)
+    lead = []
+    for rule in ("batch", "heads_act"):
+        for a in axes_of(rule):
+            if a in mesh.axis_names and a not in used:
+                used.add(a)
+                lead.append(a)
+    return mesh, seq_axes, tuple(lead)
 
 
 def spec_for(axes: tuple) -> P:

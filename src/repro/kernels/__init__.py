@@ -1,8 +1,10 @@
 """Pallas TPU kernels for the paper's O(n) attention hot spots.
 
 ``ss_attention.py`` holds the forward pl.pallas_call kernels (BlockSpec VMEM
-tiling, segment-causal masks, online-softmax stats), ``ss_attention_bwd.py``
-the flash-style backward kernels, ``ops.py`` the jitted custom-VJP wrappers,
+tiling, segment-causal masks, online-softmax stats, dynamic key-validity
+bounds), ``ss_attention_bwd.py`` the flash-style backward kernels,
+``ops.py`` the jitted custom-VJP wrappers, ``sharded.py`` the shard_map
+context-parallel driver (per-shard kernels + landmark-sized collectives),
 ``dispatch.py`` the impl/block-size registry with measured autotune, and
 ``ref.py`` the pure-jnp oracles. Validated in interpret mode on CPU; TPU
 v5e is the compile target.
@@ -24,7 +26,9 @@ from repro.kernels.ops import (
     nystrom_attention_fused,
     query_side_op,
     ss_attention_fused,
+    ss_core_factors,
 )
+from repro.kernels.sharded import ss_attention_fused_sharded
 from repro.kernels.ss_attention import landmark_summary, query_side
 from repro.kernels.ss_attention_bwd import landmark_summary_bwd, query_side_bwd
 
@@ -46,4 +50,6 @@ __all__ = [
     "register_plan",
     "save_cache",
     "ss_attention_fused",
+    "ss_attention_fused_sharded",
+    "ss_core_factors",
 ]

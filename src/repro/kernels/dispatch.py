@@ -4,8 +4,12 @@ One registry answers "which implementation, which block size?" for every
 attention call, replacing ad-hoc ``impl == "spectral_shift_fused"``
 branching in model code:
 
-    key  = (backend, n_bucket, c, d, dtype, causal)
-    plan = Plan(impl = fused | jnp | interpret, block_n, source)
+    key  = (backend, n_bucket, c, d, dtype, causal, family, seq_shards)
+    plan = Plan(impl = fused | jnp | interpret | sharded, block_n, source)
+
+``family="decode"`` keys serving's single-step shape (n = cache horizon);
+``seq_shards`` keys context-parallel cells, whose plans route through the
+shard_map driver in ``kernels/sharded.py``.
 
 Resolution order: in-memory registry -> on-disk autotune cache -> measured
 autotune (only when explicitly enabled) -> backend heuristic. Plans are
@@ -35,7 +39,8 @@ import jax.numpy as jnp
 
 from repro.core.attention import SSConfig, spectral_shift_attention
 
-_IMPLS = ("fused", "jnp", "interpret")
+_IMPLS = ("fused", "jnp", "interpret", "sharded")
+_FAMILIES = ("self", "decode")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,17 +51,36 @@ class PlanKey:
     d: int            # head dim
     dtype: str        # canonical dtype name, e.g. "float32" / "bfloat16"
     causal: bool
+    family: str = "self"   # "self" = full-sequence attention; "decode" =
+                           # one-step query against a cache horizon of n
+    seq_shards: int = 1    # context parallelism: devices the sequence axis
+                           # is sharded over (1 = single-device kernels)
 
     def encode(self) -> str:
         kind = "causal" if self.causal else "bidir"
-        return f"{self.backend}|n{self.n}|c{self.c}|d{self.d}|{self.dtype}|{kind}"
+        s = f"{self.backend}|n{self.n}|c{self.c}|d{self.d}|{self.dtype}|{kind}"
+        if self.family != "self":
+            s += f"|{self.family}"
+        if self.seq_shards > 1:
+            s += f"|sp{self.seq_shards}"
+        return s
 
     @staticmethod
     def decode(s: str) -> "PlanKey":
-        backend, n, c, d, dtype, kind = s.split("|")
+        parts = s.split("|")
+        backend, n, c, d, dtype, kind = parts[:6]
+        family, seq_shards = "self", 1
+        for extra in parts[6:]:  # optional suffixes; legacy keys have none
+            if extra.startswith("sp"):
+                seq_shards = int(extra[2:])
+            elif extra in _FAMILIES:
+                family = extra
+            else:
+                raise ValueError(f"unknown PlanKey suffix {extra!r}")
         return PlanKey(
             backend=backend, n=int(n[1:]), c=int(c[1:]), d=int(d[1:]),
-            dtype=dtype, causal=(kind == "causal"),
+            dtype=dtype, causal=(kind == "causal"), family=family,
+            seq_shards=seq_shards,
         )
 
 
@@ -86,8 +110,14 @@ def _bucket(n: int) -> int:
 
 
 def make_key(
-    n: int, c: int, d: int, dtype, causal: bool, backend: Optional[str] = None
+    n: int, c: int, d: int, dtype, causal: bool, backend: Optional[str] = None,
+    family: str = "self", seq_shards: int = 1,
 ) -> PlanKey:
+    """``family="decode"`` keys a single-step (n_q=1) query against a cache
+    horizon of ``n`` tokens; ``seq_shards`` keys context-parallel cells by
+    how many devices the sequence axis spans."""
+    if family not in _FAMILIES:
+        raise ValueError(f"unknown key family {family!r}; want one of {_FAMILIES}")
     return PlanKey(
         backend=backend or jax.default_backend(),
         n=_bucket(n),
@@ -95,6 +125,8 @@ def make_key(
         d=d,
         dtype=jnp.dtype(dtype).name,
         causal=causal,
+        family=family,
+        seq_shards=max(int(seq_shards), 1),
     )
 
 
@@ -182,17 +214,28 @@ def save_cache(path: Optional[str] = None) -> str:
 
 def heuristic_plan(key: PlanKey) -> Plan:
     """Backend defaults when nothing measured is available."""
+    if key.family == "decode":
+        # Single-query decode math lives on the jnp path (the cache carries
+        # the landmark state; the fused kernels need matching landmark
+        # counts). block_n keyed anyway so a measured decode plan can steer
+        # any blockwise cache scans later.
+        return Plan(impl="jnp", block_n=min(512, key.n), source="heuristic")
     if key.backend == "cpu":
         # Interpret-mode Pallas is an order of magnitude slower than the jnp
-        # reference on CPU; fused only pays off on a real accelerator.
+        # reference on CPU; fused only pays off on a real accelerator. Holds
+        # for context-parallel cells too (the jnp route partitions via GSPMD).
         return Plan(impl="jnp", block_n=min(512, key.n), source="heuristic")
-    if key.n <= 1024:
+    # Block size from the PER-DEVICE stream length: under context
+    # parallelism each shard streams only n / seq_shards keys.
+    n_loc = max(key.n // key.seq_shards, 128)
+    if n_loc <= 1024:
         block = 256
-    elif key.n <= 8192:
+    elif n_loc <= 8192:
         block = 512
     else:
         block = 1024
-    return Plan(impl="fused", block_n=block, source="heuristic")
+    impl = "sharded" if key.seq_shards > 1 else "fused"
+    return Plan(impl=impl, block_n=block, source="heuristic")
 
 
 def get_plan(key: PlanKey, *, autotune_enabled: bool = False,
@@ -209,6 +252,13 @@ def get_plan(key: PlanKey, *, autotune_enabled: bool = False,
         if plan is not None:
             return plan
     if autotune_enabled:
+        if key.seq_shards > 1 or key.family != "self":
+            # Measured autotune only reproduces the single-device self-
+            # attention program; measuring here would register the winner
+            # under a DIFFERENT key (no seq_shards/family) and re-run the
+            # timing sweep on every trace of the requested key. Heuristics
+            # (or pre-registered plans) steer these families.
+            return heuristic_plan(key)
         return (tune_fn or _default_tune)(key)
     return heuristic_plan(key)
 
@@ -302,14 +352,32 @@ def dispatch_ss_attention(
     """Route one attention call through the dispatch registry.
 
     ``backend``: "auto" resolves a plan per shape key; "fused" / "jnp" /
-    "interpret" force that implementation. Shapes (..., n, d) with arbitrary
-    leading dims. Fully differentiable on every route.
+    "interpret" / "sharded" force that implementation. Shapes (..., n, d)
+    with arbitrary leading dims. Fully differentiable on every route.
+
+    Mesh-aware: when the active ``sharding_rules`` context maps the sequence
+    axis onto >1 devices, the shape key carries ``seq_shards`` and every
+    kernel-backed impl routes through the shard_map context-parallel driver
+    (kernels/sharded.py) instead of the single-device kernels — seq-sharded
+    cells keep the fused path rather than falling back to jnp.
     """
+    from repro.distributed.sharding import active_seq_sharding
     from repro.kernels.ops import ss_attention_fused
 
     n, d = q.shape[-2], q.shape[-1]
+    mesh, seq_axes, lead_axes = active_seq_sharding()
+    n_shards = 1
+    if seq_axes:
+        for a in seq_axes:
+            n_shards *= int(mesh.shape[a])
+    # Sharded self-attention only: decode/cross rectangular shapes keep the
+    # single-device routing (their key axis isn't the sharded one).
+    sharded_site = n_shards > 1 and n == k.shape[-2]
     if backend == "auto":
-        key = make_key(n, cfg.num_landmarks, d, q.dtype, cfg.causal)
+        key = make_key(
+            n, cfg.num_landmarks, d, q.dtype, cfg.causal,
+            seq_shards=n_shards if sharded_site else 1,
+        )
         plan = get_plan(key, autotune_enabled=autotune_enabled)
         impl, block_n = plan.impl, plan.block_n
     elif backend in _IMPLS:
@@ -320,6 +388,18 @@ def dispatch_ss_attention(
         )
     if impl == "jnp":
         return spectral_shift_attention(q, k, v, cfg, scale=scale)
+    if sharded_site and impl in ("fused", "interpret", "sharded"):
+        from repro.kernels.sharded import ss_attention_fused_sharded
+
+        return ss_attention_fused_sharded(
+            q, k, v, cfg, mesh=mesh, seq_axes=seq_axes, lead_axes=lead_axes,
+            scale=scale, block_n=block_n,
+            interpret=True if impl == "interpret" else interpret,
+        )
+    if impl == "sharded":
+        # A sharded plan outside a seq-sharded context degenerates to the
+        # single-device kernels (one shard).
+        impl = "fused"
     return ss_attention_fused(
         q, k, v, cfg, scale=scale, block_n=block_n,
         interpret=True if impl == "interpret" else interpret,

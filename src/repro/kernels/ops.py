@@ -25,6 +25,14 @@ the O(n) streams and through ordinary jnp autodiff for the cubic-small
 
 Accepts (..., n, d) with arbitrary leading dims; leading dims are flattened
 into the kernel batch dim.
+
+``kv_valid`` (optional traced scalar) enables bucketed padding: only the
+first ``kv_valid`` keys enter the landmark means and the B-side softmax, so
+one XLA program serves every prompt length in a bucket (serve/prefill.py).
+Maskless callers must pass exact-length windows — padded zero-keys would
+otherwise leak into the softmax normalization. The context-parallel
+(sequence-sharded) driver lives in ``kernels/sharded.py`` and reuses the
+same kernels plus the core helper below.
 """
 from __future__ import annotations
 
@@ -33,13 +41,19 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.ad_checkpoint import checkpoint_name
 
 from repro.core.attention import SSConfig, _softmax, full_attention
-from repro.core.landmarks import segment_means
+from repro.core.landmarks import masked_segment_means, segment_means
 from repro.core.spectral_shift import ss_core
 from repro.kernels.ss_attention import landmark_summary, query_side
 from repro.kernels.ss_attention_bwd import landmark_summary_bwd, query_side_bwd
+
+
+def _float0_like(x):
+    """Cotangent for an integer-typed primal (or None passthrough)."""
+    return None if x is None else np.zeros(jnp.shape(x), jax.dtypes.float0)
 
 
 # --------------------------------------------------------------------------
@@ -47,38 +61,41 @@ from repro.kernels.ss_attention_bwd import landmark_summary_bwd, query_side_bwd
 # custom_vjp treats it as non-differentiable.
 # --------------------------------------------------------------------------
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def landmark_summary_op(meta, q_l, k, v):
+def landmark_summary_op(meta, q_l, k, v, kv_valid=None):
     """Differentiable BV = softmax(Q~ K^T) @ V.  meta = (scale, block_n,
-    causal, interpret)."""
+    causal, interpret). ``kv_valid`` (optional traced scalar) masks keys at
+    positions >= kv_valid out of the softmax (bucketed prefill)."""
     scale, block_n, causal, interpret = meta
     return landmark_summary(
         q_l, k, v, scale=scale, block_n=block_n, causal=causal,
-        interpret=interpret,
+        interpret=interpret, kv_valid=kv_valid,
     )
 
 
-def _landmark_summary_fwd(meta, q_l, k, v):
+def _landmark_summary_fwd(meta, q_l, k, v, kv_valid=None):
     scale, block_n, causal, interpret = meta
     bv, m, l = landmark_summary(
         q_l, k, v, scale=scale, block_n=block_n, causal=causal,
-        interpret=interpret, return_stats=True,
+        interpret=interpret, return_stats=True, kv_valid=kv_valid,
     )
     res = (
         q_l, k, v,
         checkpoint_name(bv, "ss_bv"),
         checkpoint_name(m, "ss_stats"),
         checkpoint_name(l, "ss_stats"),
+        kv_valid,
     )
     return bv, res
 
 
 def _landmark_summary_bwd(meta, res, g):
     scale, block_n, causal, interpret = meta
-    q_l, k, v, bv, m, l = res
-    return landmark_summary_bwd(
+    q_l, k, v, bv, m, l, kv_valid = res
+    dq, dk, dv = landmark_summary_bwd(
         q_l, k, v, bv, m, l, g, scale=scale, block_n=block_n, causal=causal,
-        interpret=interpret,
+        interpret=interpret, kv_valid=kv_valid,
     )
+    return dq, dk, dv, _float0_like(kv_valid)
 
 
 landmark_summary_op.defvjp(_landmark_summary_fwd, _landmark_summary_bwd)
@@ -113,64 +130,31 @@ query_side_op.defvjp(_query_side_fwd, _query_side_bwd)
 
 
 # --------------------------------------------------------------------------
-# Full fused attention.
+# The c x c spectral-shift core (jnp autodiff, replicated under sharding).
 # --------------------------------------------------------------------------
-@functools.partial(
-    jax.jit,
-    static_argnames=("cfg", "scale", "block_n", "interpret"),
-)
-def ss_attention_fused(
-    q: jnp.ndarray,
-    k: jnp.ndarray,
-    v: jnp.ndarray,
-    cfg: SSConfig = SSConfig(),
-    *,
-    scale: Optional[float] = None,
-    block_n: int = 512,
-    interpret: bool = False,
-) -> jnp.ndarray:
-    """Pallas-backed spectral-shifting attention. Shapes (..., n, d).
+def ss_core_factors(q_l, k_l, cfg: SSConfig, scale: float, n_k):
+    """(U, delta) of the c x c core, exactly as the jnp reference computes
+    them: fp32 softmax of the landmark score matrix, Newton–Schulz pinv +
+    shift, the ``delta_scale="corrected"`` rescale, the ``eq10_literal``
+    variant, and the causal lower-triangular projection.
 
-    Differentiable (custom-VJP kernels) and segment-causal capable —
-    ``cfg.causal=True`` applies the same masks as the jnp reference path:
-    the B-/F-side masks stream inside the kernels, the (c, c) core mask and
-    the lower-triangular projection of U stay in jnp.
-    """
-    *lead, n, d = q.shape
-    n_k = k.shape[-2]
-    dv = v.shape[-1]
-    c = cfg.num_landmarks
-    if n <= c and n_k <= c:
-        # Degenerate small-n regime: exact attention, as the jnp path does.
-        return full_attention(q, k, v, causal=cfg.causal, scale=scale)
-    scale = scale if scale is not None else 1.0 / (d**0.5)
-    b = 1
-    for s_ in lead:
-        b *= s_
-    qf = q.reshape(b, n, d)
-    kf = k.reshape(b, n_k, d)
-    vf = v.reshape(b, n_k, dv)
-
-    q_l = segment_means(qf, c, via_matmul=cfg.landmark_via_matmul)  # (b, c, d)
-    k_l = segment_means(kf, c, via_matmul=cfg.landmark_via_matmul)
-    if q_l.shape[-2] != k_l.shape[-2]:
-        # Mirror the jnp path's guard: n_q <= c < n_k degenerates Q~ to
-        # per-token landmarks and the (c, c) core goes rectangular.
-        raise ValueError(
-            "spectral-shift attention needs matching landmark counts for Q~ "
-            f"and K~, got {q_l.shape[-2]} vs {k_l.shape[-2]}. For decode "
-            "(n_q=1) use the jnp path with cached q_landmarks/k_landmarks."
-        )
-
-    # c x c core in jnp (fp32 softmax), causally masked like _ss_factors.
-    c_count = q_l.shape[1]
+    O(c^3)-small and batch-replicated, so the shard_map context-parallel
+    driver (kernels/sharded.py) runs it unchanged per device on the
+    psum-combined landmarks. ``n_k`` is the TRUE key length (may be traced
+    under bucketed padding) — only the "corrected" rescale reads it.
+    Returns fp32 ``u`` (..., c, c) and fp32 ``delta`` (..., 1, 1)."""
+    c_count = q_l.shape[-2]
     a_mask = (
         jnp.arange(c_count)[:, None] >= jnp.arange(c_count)[None, :]
         if cfg.causal
         else None
     )
     a = _softmax(
-        jnp.einsum("bcd,bed->bce", q_l.astype(jnp.float32), k_l.astype(jnp.float32))
+        jnp.einsum(
+            "...cd,...ed->...ce",
+            q_l.astype(jnp.float32),
+            k_l.astype(jnp.float32),
+        )
         * scale,
         a_mask,
     )
@@ -202,9 +186,98 @@ def ss_attention_fused(
         # project the finite Newton–Schulz estimate back (no future leak).
         tril = jnp.tril(jnp.ones((c_count, c_count), bool))
         u = jnp.where(tril, u, 0.0)
+    return u, core.delta
+
+
+# --------------------------------------------------------------------------
+# Full fused attention.
+# --------------------------------------------------------------------------
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "scale", "block_n", "interpret"),
+)
+def ss_attention_fused(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    cfg: SSConfig = SSConfig(),
+    *,
+    scale: Optional[float] = None,
+    block_n: int = 512,
+    interpret: bool = False,
+    kv_valid=None,
+) -> jnp.ndarray:
+    """Pallas-backed spectral-shifting attention. Shapes (..., n, d).
+
+    Differentiable (custom-VJP kernels) and segment-causal capable —
+    ``cfg.causal=True`` applies the same masks as the jnp reference path:
+    the B-/F-side masks stream inside the kernels, the (c, c) core mask and
+    the lower-triangular projection of U stay in jnp.
+
+    ``kv_valid`` (optional traced scalar): treat only the first ``kv_valid``
+    positions as real — landmark means and the B-side softmax mask out the
+    padded tail, so a bucket-padded prompt computes exactly what the
+    unpadded call would (outputs at positions >= kv_valid are garbage the
+    caller discards). Bidirectional self-attention only.
+    """
+    *lead, n, d = q.shape
+    n_k = k.shape[-2]
+    dv = v.shape[-1]
+    c = cfg.num_landmarks
+    if kv_valid is not None:
+        if cfg.causal:
+            raise ValueError(
+                "kv_valid masking supports the bidirectional (prefill) "
+                "variant only; causal bucketing needs dynamic segment masks"
+            )
+        if n != n_k:
+            raise ValueError("kv_valid masking requires self-attention (n == n_k)")
+        if n <= c:
+            # Assert-guard for the exact-attention degenerate path: it has
+            # no key-validity mask, so padded windows would leak — callers
+            # (serve/engine.py) must slice tiny prompts to exact length.
+            raise ValueError(
+                f"kv_valid masking needs padded n ({n}) > num_landmarks "
+                f"({c}); run degenerate prompts unpadded instead"
+            )
+    if n <= c and n_k <= c:
+        # Degenerate small-n regime: exact attention, as the jnp path does.
+        return full_attention(q, k, v, causal=cfg.causal, scale=scale)
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    b = 1
+    for s_ in lead:
+        b *= s_
+    qf = q.reshape(b, n, d)
+    kf = k.reshape(b, n_k, d)
+    vf = v.reshape(b, n_k, dv)
+
+    if kv_valid is not None:
+        kv_valid = jnp.asarray(kv_valid, jnp.int32)
+        # Dynamic-length landmark means: identical to segment_means on the
+        # sliced prompt, but shape-static across the bucket.
+        q_l = masked_segment_means(qf, c, kv_valid)
+        k_l = masked_segment_means(kf, c, kv_valid)
+    else:
+        q_l = segment_means(qf, c, via_matmul=cfg.landmark_via_matmul)  # (b, c, d)
+        k_l = segment_means(kf, c, via_matmul=cfg.landmark_via_matmul)
+    if q_l.shape[-2] != k_l.shape[-2]:
+        # Mirror the jnp path's guard: n_q <= c < n_k degenerates Q~ to
+        # per-token landmarks and the (c, c) core goes rectangular.
+        raise ValueError(
+            "spectral-shift attention needs matching landmark counts for Q~ "
+            f"and K~, got {q_l.shape[-2]} vs {k_l.shape[-2]}. For decode "
+            "(n_q=1) use the jnp path with cached q_landmarks/k_landmarks."
+        )
+
+    # c x c core in jnp (fp32 softmax), causally masked like _ss_factors.
+    # Under bucketed padding the key length the delta_scale="corrected"
+    # rescale sees must be the TRUE prompt length, not the padded shape.
+    u, delta_core = ss_core_factors(
+        q_l, k_l, cfg, scale, n_k if kv_valid is None else kv_valid
+    )
 
     bv = landmark_summary_op(
-        (scale, block_n, cfg.causal, interpret), q_l, kf, vf
+        (scale, block_n, cfg.causal, interpret), q_l, kf, vf, kv_valid
     )  # (b, c, dv)
     m_mat = jnp.matmul(u.astype(jnp.float32), bv.astype(jnp.float32)).astype(
         v.dtype
@@ -213,7 +286,7 @@ def ss_attention_fused(
         # + delta_ss I_n -> + delta_ss * V on the query-aligned rows of V
         # (decode convention: queries are the last n positions of the
         # n_k-long context; self-attention is the n == n_k case).
-        delta = core.delta.astype(jnp.float32)
+        delta = delta_core.astype(jnp.float32)
         v_q = vf if n == n_k else vf[:, n_k - n :]
     else:
         delta = jnp.zeros((b, 1, 1), jnp.float32)

@@ -23,6 +23,18 @@ the segment-causal variant: landmark row r only attends keys in segments
 <= segment_of(p) (F-side) — the same masks ``core.attention._ss_factors``
 applies on the jnp path, evaluated inside the stream.
 
+Dynamic bounds (context parallelism + bucketed prefill): the kernels
+additionally accept *traced* scalar coordinates, shipped to the kernel as a
+tiny SMEM input so no per-length recompilation or (c, n) mask tensor is ever
+needed:
+
+* ``kv_offset`` / ``kv_valid`` (B-side): global position of the first local
+  key and the global end of valid keys. A shard_map shard passes its shard
+  offset (ragged last shards mask the tail); bucketed prefill passes
+  ``kv_valid = n_valid`` so padded zero-keys never enter the softmax.
+* ``q_offset`` (F-side): global position of the first local query row,
+  replacing the static decode-convention ``n_k - n`` offset.
+
 Block shapes default to MXU/VPU-aligned sizes (lane dim = head_dim, ideally
 a multiple of 128; sublane blocks multiples of 8). Kernels are validated on
 CPU in interpret mode against ``ref.py``; TPU is the compile target.
@@ -39,20 +51,35 @@ from jax.experimental.pallas import tpu as pltpu
 _NEG_INF = -1e30
 
 
-def _b_side_mask(shape, i, *, n_valid: int, block_n: int, seg: int):
+def _bounds_array(*vals) -> jnp.ndarray:
+    """Pack scalar coordinates (Python ints or traced scalars) into the
+    (1, len(vals)) int32 SMEM operand the dynamic-bounds kernels read."""
+    return jnp.stack(
+        [jnp.asarray(v, jnp.int32).reshape(()) for v in vals]
+    ).reshape(1, len(vals))
+
+
+def _b_side_mask(shape, i, *, block_n: int, seg: int, kv_offset=0,
+                 kv_valid=None):
     """Key-validity x segment-causal mask for one streamed B-side block
     (shape (c, bn) at block index ``i``), or None when nothing is masked.
-    Shared by the forward step and the backward kernel so the two can never
-    drift apart."""
+    ``kv_offset``/``kv_valid`` are *global* key coordinates and may be
+    Python ints (static path) or traced scalars (dynamic bounds). Shared by
+    the forward step and the backward kernel so the two can never drift
+    apart."""
+    if kv_valid is None and not seg:
+        return None
+    # Global position of each streamed key column.
+    kv_pos = kv_offset + i * block_n + jax.lax.broadcasted_iota(
+        jnp.int32, shape, 1
+    )
     mask = None
-    if n_valid % block_n:
-        # Keys past the true sequence end (zero-padded tail block).
-        kv_pos = i * block_n + jax.lax.broadcasted_iota(jnp.int32, shape, 1)
-        mask = kv_pos < n_valid
+    if kv_valid is not None:
+        # Keys past the valid end (zero-padded tail / bucketed prefill pad).
+        mask = kv_pos < kv_valid
     if seg:
         # Segment-causal: landmark row r (the mean of segment r) attends
         # keys up to the end of its own segment only.
-        kv_pos = i * block_n + jax.lax.broadcasted_iota(jnp.int32, shape, 1)
         row = jax.lax.broadcasted_iota(jnp.int32, shape, 0)
         cmask = kv_pos < (row + 1) * seg
         mask = cmask if mask is None else jnp.logical_and(mask, cmask)
@@ -64,7 +91,7 @@ def _b_side_mask(shape, i, *, n_valid: int, block_n: int, seg: int):
 # --------------------------------------------------------------------------
 def _landmark_summary_step(
     q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr, *,
-    scale: float, n_valid: int, block_n: int, seg: int,
+    scale: float, block_n: int, seg: int, kv_offset, kv_valid,
 ):
     """One online-softmax step over key/value block ``i`` (shared by the
     plain and the stats-emitting kernel)."""
@@ -82,7 +109,10 @@ def _landmark_summary_step(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     ) * scale                                             # (c, bn)
 
-    mask = _b_side_mask(s.shape, i, n_valid=n_valid, block_n=block_n, seg=seg)
+    mask = _b_side_mask(
+        s.shape, i, block_n=block_n, seg=seg, kv_offset=kv_offset,
+        kv_valid=kv_valid,
+    )
     if mask is not None:
         s = jnp.where(mask, s, _NEG_INF)
 
@@ -104,53 +134,49 @@ def _landmark_summary_step(
 
 
 def _landmark_summary_kernel(
-    q_ref,  # (1, c, d)    VMEM
-    k_ref,  # (1, bn, d)   VMEM (streamed)
-    v_ref,  # (1, bn, dv)  VMEM (streamed)
-    o_ref,  # (1, c, dv)   VMEM
-    m_scr,  # (c, 1)       fp32 scratch: running max
-    l_scr,  # (c, 1)       fp32 scratch: running denominator
-    acc_scr,  # (c, dv)    fp32 scratch: running numerator
-    *,
+    *refs,
     scale: float,
     n_valid: int,
     block_n: int,
     seg: int,
+    dyn: bool,
+    stats: bool,
 ):
+    """Shared kernel body. Ref layout (inputs, outputs, scratch):
+
+        [bounds (1,2) SMEM if dyn], q (1,c,d), k (1,bn,d), v (1,bn,dv),
+        o (1,c,dv) [, m_out (1,c,1), l_out (1,c,1) if stats],
+        m_scr (c,1), l_scr (c,1), acc_scr (c,dv)
+    """
+    if dyn:
+        bounds_ref, *refs = refs
+        kv_offset = bounds_ref[0, 0]
+        # Clamp the global bound by the local pre-block-padding length:
+        # keys at local index >= n_valid are the zero tail the wrapper
+        # padded to a block multiple, and their global positions can sit
+        # below the global valid end on non-final shards.
+        kv_valid = jnp.minimum(bounds_ref[0, 1], kv_offset + n_valid)
+    else:
+        kv_offset = 0
+        kv_valid = n_valid if n_valid % block_n else None
+    if stats:
+        q_ref, k_ref, v_ref, o_ref, mo_ref, lo_ref, m_scr, l_scr, acc_scr = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr = refs
+
     _landmark_summary_step(
         q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr,
-        scale=scale, n_valid=n_valid, block_n=block_n, seg=seg,
+        scale=scale, block_n=block_n, seg=seg, kv_offset=kv_offset,
+        kv_valid=kv_valid,
     )
 
     @pl.when(pl.program_id(1) == pl.num_programs(1) - 1)
     def _finalize():
         denom = jnp.maximum(l_scr[...], 1e-30)
         o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
-
-
-def _landmark_summary_stats_kernel(
-    q_ref, k_ref, v_ref,
-    o_ref,      # (1, c, dv)  VMEM
-    mo_ref,     # (1, c, 1)   fp32: final row max
-    lo_ref,     # (1, c, 1)   fp32: final row denominator
-    m_scr, l_scr, acc_scr,
-    *,
-    scale: float,
-    n_valid: int,
-    block_n: int,
-    seg: int,
-):
-    _landmark_summary_step(
-        q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr,
-        scale=scale, n_valid=n_valid, block_n=block_n, seg=seg,
-    )
-
-    @pl.when(pl.program_id(1) == pl.num_programs(1) - 1)
-    def _finalize():
-        denom = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
-        mo_ref[0] = m_scr[...]
-        lo_ref[0] = l_scr[...]
+        if stats:
+            mo_ref[0] = m_scr[...]
+            lo_ref[0] = l_scr[...]
 
 
 def landmark_summary(
@@ -163,17 +189,28 @@ def landmark_summary(
     causal: bool = False,
     interpret: bool = False,
     return_stats: bool = False,
+    kv_offset=None,
+    kv_valid=None,
+    seq_len_k: int = 0,
 ):
     """BV = softmax(Q~ K^T * scale) @ V via a flash-style streamed kernel.
 
     ``causal=True`` applies the segment-causal B-mask (landmark r sees keys
-    < (r+1)*seg with seg = ceil(n/c)). ``return_stats=True`` returns
+    < (r+1)*seg with seg = ceil(seq_len_k/c)). ``return_stats=True`` returns
     ``(bv, m, l)`` with ``m``/``l`` (b, c, 1) fp32 — the online-softmax max
     and denominator, saved as custom-VJP residuals.
+
+    ``kv_offset``/``kv_valid`` (optional, possibly traced scalars) place the
+    local keys in global coordinates: key column j has global position
+    ``kv_offset + j`` and is masked unless it is < ``kv_valid``. A shard_map
+    shard passes its shard offset; bucketed prefill passes the prompt length.
+    ``seq_len_k`` is the *global* key length the causal segment geometry is
+    built from (defaults to the local n).
     """
     b, c, d = q_l.shape
     n, dv = k.shape[1], v.shape[2]
-    seg = -(-n // c) if causal else 0
+    n_k = seq_len_k or n
+    seg = -(-n_k // c) if causal else 0
     block_n = min(block_n, n)
     n_pad = -n % block_n
     if n_pad:
@@ -181,19 +218,32 @@ def landmark_summary(
         v = jnp.pad(v, ((0, 0), (0, n_pad), (0, 0)))
     n_blocks = (n + n_pad) // block_n
 
+    dyn = kv_offset is not None or kv_valid is not None
     in_specs = [
         pl.BlockSpec((1, c, d), lambda bi, i: (bi, 0, 0)),
         pl.BlockSpec((1, block_n, d), lambda bi, i: (bi, i, 0)),
         pl.BlockSpec((1, block_n, dv), lambda bi, i: (bi, i, 0)),
     ]
+    inputs = [q_l, k, v]
+    if dyn:
+        in_specs.insert(0, pl.BlockSpec(memory_space=pltpu.SMEM))
+        off = kv_offset if kv_offset is not None else 0
+        # kv_valid defaults to "all local keys valid" in GLOBAL coordinates
+        # (off + n, not n): the two bounds are independently optional.
+        inputs.insert(
+            0,
+            _bounds_array(off, kv_valid if kv_valid is not None else off + n),
+        )
     scratch_shapes = [
         pltpu.VMEM((c, 1), jnp.float32),
         pltpu.VMEM((c, 1), jnp.float32),
         pltpu.VMEM((c, dv), jnp.float32),
     ]
-    common = dict(scale=scale, n_valid=n, block_n=block_n, seg=seg)
+    kernel = functools.partial(
+        _landmark_summary_kernel, scale=scale, n_valid=n, block_n=block_n,
+        seg=seg, dyn=dyn, stats=return_stats,
+    )
     if not return_stats:
-        kernel = functools.partial(_landmark_summary_kernel, **common)
         return pl.pallas_call(
             kernel,
             grid=(b, n_blocks),
@@ -202,9 +252,8 @@ def landmark_summary(
             out_shape=jax.ShapeDtypeStruct((b, c, dv), v.dtype),
             scratch_shapes=scratch_shapes,
             interpret=interpret,
-        )(q_l, k, v)
+        )(*inputs)
 
-    kernel = functools.partial(_landmark_summary_stats_kernel, **common)
     stat_spec = pl.BlockSpec((1, c, 1), lambda bi, i: (bi, 0, 0))
     return pl.pallas_call(
         kernel,
@@ -222,7 +271,7 @@ def landmark_summary(
         ),
         scratch_shapes=scratch_shapes,
         interpret=interpret,
-    )(q_l, k, v)
+    )(*inputs)
 
 
 # --------------------------------------------------------------------------
@@ -230,7 +279,8 @@ def landmark_summary(
 # --------------------------------------------------------------------------
 def _query_side_probs(q_ref, kl_ref, *, scale, block_n, seg, pos_offset):
     """Block-resident softmax factor P (bn, c), with the segment-causal
-    F-mask applied when ``seg`` is set. Shared with the backward kernel."""
+    F-mask applied when ``seg`` is set. ``pos_offset`` may be a Python int
+    or a traced scalar (dynamic bounds). Shared with the backward kernel."""
     i = pl.program_id(1)
     q = q_ref[0].astype(jnp.float32)                      # (bn, d)
     kl = kl_ref[0].astype(jnp.float32)                    # (c, d)
@@ -256,18 +306,19 @@ def _query_side_probs(q_ref, kl_ref, *, scale, block_n, seg, pos_offset):
 
 
 def _query_side_kernel(
-    q_ref,      # (1, bn, d)   VMEM (streamed)
-    kl_ref,     # (1, c, d)    VMEM
-    m_ref,      # (1, c, dv)   VMEM
-    v_ref,      # (1, bn, dv)  VMEM (streamed)
-    delta_ref,  # (1, 1, 1)    SMEM-ish scalar block
-    o_ref,      # (1, bn, dv)  VMEM
-    *,
+    *refs,
     scale: float,
     block_n: int,
     seg: int,
     pos_offset: int,
+    dyn: bool,
 ):
+    """Ref layout: [bounds (1,1) SMEM if dyn], q (1,bn,d), kl (1,c,d),
+    m (1,c,dv), v (1,bn,dv), delta (1,1,1), o (1,bn,dv)."""
+    if dyn:
+        bounds_ref, *refs = refs
+        pos_offset = bounds_ref[0, 0]
+    q_ref, kl_ref, m_ref, v_ref, delta_ref, o_ref = refs
     p = _query_side_probs(
         q_ref, kl_ref, scale=scale, block_n=block_n, seg=seg,
         pos_offset=pos_offset,
@@ -292,13 +343,16 @@ def query_side(
     causal: bool = False,
     seq_len_k: int = 0,
     interpret: bool = False,
+    q_offset=None,
 ) -> jnp.ndarray:
     """out = softmax(Q K~^T * scale) @ M + delta * V, one HBM pass over Q/V.
 
     ``causal=True`` applies the segment-causal F-mask; ``seq_len_k`` is the
     key-sequence length the landmark segments were built from (defaults to
     n, i.e. self-attention; a longer context puts the queries at its tail,
-    the decode convention).
+    the decode convention). ``q_offset`` (optional, possibly traced scalar)
+    *replaces* the static tail offset with the global position of q row 0 —
+    the shard_map driver passes its shard offset here.
     """
     b, n, d = q.shape
     c, dv = k_l.shape[1], v.shape[2]
@@ -312,22 +366,28 @@ def query_side(
         v = jnp.pad(v, ((0, 0), (0, n_pad), (0, 0)))
     n_blocks = (n + n_pad) // block_n
 
+    dyn = q_offset is not None
+    in_specs = [
+        pl.BlockSpec((1, block_n, d), lambda bi, i: (bi, i, 0)),
+        pl.BlockSpec((1, c, d), lambda bi, i: (bi, 0, 0)),
+        pl.BlockSpec((1, c, dv), lambda bi, i: (bi, 0, 0)),
+        pl.BlockSpec((1, block_n, dv), lambda bi, i: (bi, i, 0)),
+        pl.BlockSpec((1, 1, 1), lambda bi, i: (bi, 0, 0)),
+    ]
+    inputs = [q, k_l, m_mat, v, delta.astype(jnp.float32)]
+    if dyn:
+        in_specs.insert(0, pl.BlockSpec(memory_space=pltpu.SMEM))
+        inputs.insert(0, _bounds_array(q_offset))
     kernel = functools.partial(
         _query_side_kernel, scale=scale, block_n=block_n, seg=seg,
-        pos_offset=pos_offset,
+        pos_offset=pos_offset, dyn=dyn,
     )
     out = pl.pallas_call(
         kernel,
         grid=(b, n_blocks),
-        in_specs=[
-            pl.BlockSpec((1, block_n, d), lambda bi, i: (bi, i, 0)),
-            pl.BlockSpec((1, c, d), lambda bi, i: (bi, 0, 0)),
-            pl.BlockSpec((1, c, dv), lambda bi, i: (bi, 0, 0)),
-            pl.BlockSpec((1, block_n, dv), lambda bi, i: (bi, i, 0)),
-            pl.BlockSpec((1, 1, 1), lambda bi, i: (bi, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_n, dv), lambda bi, i: (bi, i, 0)),
         out_shape=jax.ShapeDtypeStruct((b, n + n_pad, dv), q.dtype),
         interpret=interpret,
-    )(q, k_l, m_mat, v, delta.astype(jnp.float32))
+    )(*inputs)
     return out[:, :n] if n_pad else out

@@ -18,9 +18,12 @@ materializing a (c, n) or (n, c) intermediate:
   recomputed per query block (no stats needed) and dQ/dV stream out while
   dK~ / dM / ddelta accumulate in fp32 VMEM scratch across the grid.
 
-Both kernels accept the same ``seg``-based segment-causal masks as their
-forward counterparts. Grid = (batch, n_blocks), n innermost so scratch
-accumulators persist across the stream.
+Both kernels accept the same ``seg``-based segment-causal masks and dynamic
+``kv_offset``/``kv_valid``/``q_offset`` bounds as their forward counterparts
+(see ss_attention.py): under context parallelism the backward runs per shard
+against the *global* softmax statistics, so reconstruction stays exact. Grid
+= (batch, n_blocks), n innermost so scratch accumulators persist across the
+stream.
 """
 from __future__ import annotations
 
@@ -31,7 +34,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.ss_attention import _b_side_mask, _query_side_probs
+from repro.kernels.ss_attention import (
+    _b_side_mask,
+    _bounds_array,
+    _query_side_probs,
+)
 
 _NEG_INF = -1e30
 
@@ -40,23 +47,28 @@ _NEG_INF = -1e30
 # B-side backward: dQ~, dK, dV of BV = softmax(Q~ K^T * scale) @ V.
 # --------------------------------------------------------------------------
 def _landmark_summary_bwd_kernel(
-    q_ref,      # (1, c, d)    VMEM
-    k_ref,      # (1, bn, d)   VMEM (streamed)
-    v_ref,      # (1, bn, dv)  VMEM (streamed)
-    g_ref,      # (1, c, dv)   VMEM: cotangent of BV
-    m_ref,      # (1, c, 1)    fp32: saved row max
-    l_ref,      # (1, c, 1)    fp32: saved row denominator
-    dcoef_ref,  # (1, c, 1)    fp32: D = rowsum(g * BV)
-    dq_ref,     # (1, c, d)    VMEM out
-    dk_ref,     # (1, bn, d)   VMEM out (streamed)
-    dv_ref,     # (1, bn, dv)  VMEM out (streamed)
-    dq_scr,     # (c, d)       fp32 scratch
-    *,
+    *refs,
     scale: float,
     n_valid: int,
     block_n: int,
     seg: int,
+    dyn: bool,
 ):
+    """Ref layout: [bounds (1,2) SMEM if dyn], q (1,c,d), k (1,bn,d),
+    v (1,bn,dv), g (1,c,dv), m (1,c,1), l (1,c,1), dcoef (1,c,1),
+    dq (1,c,d), dk (1,bn,d), dv (1,bn,dv), dq_scr (c,d)."""
+    if dyn:
+        bounds_ref, *refs = refs
+        kv_offset = bounds_ref[0, 0]
+        # Clamp by the local pre-block-padding length — see the forward
+        # kernel: the zero tail padded to a block multiple can sit below
+        # the global valid end on non-final shards.
+        kv_valid = jnp.minimum(bounds_ref[0, 1], kv_offset + n_valid)
+    else:
+        kv_offset = 0
+        kv_valid = n_valid if n_valid % block_n else None
+    (q_ref, k_ref, v_ref, g_ref, m_ref, l_ref, dcoef_ref,
+     dq_ref, dk_ref, dv_ref, dq_scr) = refs
     i = pl.program_id(1)
 
     @pl.when(i == 0)
@@ -71,7 +83,10 @@ def _landmark_summary_bwd_kernel(
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     ) * scale                                             # (c, bn)
-    mask = _b_side_mask(s.shape, i, n_valid=n_valid, block_n=block_n, seg=seg)
+    mask = _b_side_mask(
+        s.shape, i, block_n=block_n, seg=seg, kv_offset=kv_offset,
+        kv_valid=kv_valid,
+    )
     if mask is not None:
         s = jnp.where(mask, s, _NEG_INF)
 
@@ -112,11 +127,20 @@ def landmark_summary_bwd(
     block_n: int = 512,
     causal: bool = False,
     interpret: bool = False,
+    kv_offset=None,
+    kv_valid=None,
+    seq_len_k: int = 0,
 ):
-    """Backward of ``landmark_summary``: returns ``(dq_l, dk, dv)``."""
+    """Backward of ``landmark_summary``: returns ``(dq_l, dk, dv)``.
+
+    Under context parallelism, pass the shard's ``kv_offset``/``kv_valid``
+    plus the *global* statistics (bv, m, l) — the per-shard reconstruction
+    is then exact and ``dq_l`` is the local partial to psum.
+    """
     b, c, d = q_l.shape
     n, dv = k.shape[1], v.shape[2]
-    seg = -(-n // c) if causal else 0
+    n_k = seq_len_k or n
+    seg = -(-n_k // c) if causal else 0
     block_n = min(block_n, n)
     n_pad = -n % block_n
     if n_pad:
@@ -129,23 +153,34 @@ def landmark_summary_bwd(
         g.astype(jnp.float32) * bv.astype(jnp.float32), axis=-1, keepdims=True
     )
 
+    dyn = kv_offset is not None or kv_valid is not None
     kernel = functools.partial(
         _landmark_summary_bwd_kernel, scale=scale, n_valid=n,
-        block_n=block_n, seg=seg,
+        block_n=block_n, seg=seg, dyn=dyn,
     )
     stat_spec = pl.BlockSpec((1, c, 1), lambda bi, i: (bi, 0, 0))
+    in_specs = [
+        pl.BlockSpec((1, c, d), lambda bi, i: (bi, 0, 0)),
+        pl.BlockSpec((1, block_n, d), lambda bi, i: (bi, i, 0)),
+        pl.BlockSpec((1, block_n, dv), lambda bi, i: (bi, i, 0)),
+        pl.BlockSpec((1, c, dv), lambda bi, i: (bi, 0, 0)),
+        stat_spec,
+        stat_spec,
+        stat_spec,
+    ]
+    inputs = [q_l, k, v, g, m, l, dcoef]
+    if dyn:
+        in_specs.insert(0, pl.BlockSpec(memory_space=pltpu.SMEM))
+        off = kv_offset if kv_offset is not None else 0
+        # Defaults mirror the forward: all local keys valid, globally.
+        inputs.insert(
+            0,
+            _bounds_array(off, kv_valid if kv_valid is not None else off + n),
+        )
     dq, dk, dv_out = pl.pallas_call(
         kernel,
         grid=(b, n_blocks),
-        in_specs=[
-            pl.BlockSpec((1, c, d), lambda bi, i: (bi, 0, 0)),
-            pl.BlockSpec((1, block_n, d), lambda bi, i: (bi, i, 0)),
-            pl.BlockSpec((1, block_n, dv), lambda bi, i: (bi, i, 0)),
-            pl.BlockSpec((1, c, dv), lambda bi, i: (bi, 0, 0)),
-            stat_spec,
-            stat_spec,
-            stat_spec,
-        ],
+        in_specs=in_specs,
         out_specs=(
             pl.BlockSpec((1, c, d), lambda bi, i: (bi, 0, 0)),
             pl.BlockSpec((1, block_n, d), lambda bi, i: (bi, i, 0)),
@@ -158,7 +193,7 @@ def landmark_summary_bwd(
         ),
         scratch_shapes=[pltpu.VMEM((c, d), jnp.float32)],
         interpret=interpret,
-    )(q_l, k, v, g, m, l, dcoef)
+    )(*inputs)
     if n_pad:
         dk, dv_out = dk[:, :n], dv_out[:, :n]
     return dq, dk, dv_out
@@ -169,26 +204,23 @@ def landmark_summary_bwd(
 #   out = softmax(Q K~^T * scale) @ M + delta * V.
 # --------------------------------------------------------------------------
 def _query_side_bwd_kernel(
-    q_ref,      # (1, bn, d)   VMEM (streamed)
-    kl_ref,     # (1, c, d)    VMEM
-    m_ref,      # (1, c, dv)   VMEM
-    v_ref,      # (1, bn, dv)  VMEM (streamed)
-    delta_ref,  # (1, 1, 1)
-    g_ref,      # (1, bn, dv)  VMEM (streamed): cotangent of out
-    dq_ref,     # (1, bn, d)   VMEM out (streamed)
-    dv_ref,     # (1, bn, dv)  VMEM out (streamed)
-    dkl_ref,    # (1, c, d)    VMEM out
-    dm_ref,     # (1, c, dv)   VMEM out
-    dd_ref,     # (1, 1, 1)    VMEM out
-    dkl_scr,    # (c, d)       fp32 scratch
-    dm_scr,     # (c, dv)      fp32 scratch
-    dd_scr,     # (1, 1)       fp32 scratch
-    *,
+    *refs,
     scale: float,
     block_n: int,
     seg: int,
     pos_offset: int,
+    dyn: bool,
 ):
+    """Ref layout: [bounds (1,1) SMEM if dyn], q (1,bn,d), kl (1,c,d),
+    m (1,c,dv), v (1,bn,dv), delta (1,1,1), g (1,bn,dv), dq (1,bn,d),
+    dv (1,bn,dv), dkl (1,c,d), dm (1,c,dv), dd (1,1,1), dkl_scr (c,d),
+    dm_scr (c,dv), dd_scr (1,1)."""
+    if dyn:
+        bounds_ref, *refs = refs
+        pos_offset = bounds_ref[0, 0]
+    (q_ref, kl_ref, m_ref, v_ref, delta_ref, g_ref,
+     dq_ref, dv_ref, dkl_ref, dm_ref, dd_ref,
+     dkl_scr, dm_scr, dd_scr) = refs
     i = pl.program_id(1)
 
     @pl.when(i == 0)
@@ -245,8 +277,12 @@ def query_side_bwd(
     causal: bool = False,
     seq_len_k: int = 0,
     interpret: bool = False,
+    q_offset=None,
 ):
-    """Backward of ``query_side``: returns ``(dq, dk_l, dm, dv, ddelta)``."""
+    """Backward of ``query_side``: returns ``(dq, dk_l, dm, dv, ddelta)``.
+
+    Under context parallelism ``dk_l``/``dm``/``ddelta`` are the local
+    partials to psum (dq/dv stay shard-local)."""
     b, n, d = q.shape
     c, dv = k_l.shape[1], v.shape[2]
     n_k = seq_len_k or n
@@ -262,21 +298,27 @@ def query_side_bwd(
         g = jnp.pad(g, ((0, 0), (0, n_pad), (0, 0)))
     n_blocks = (n + n_pad) // block_n
 
+    dyn = q_offset is not None
     kernel = functools.partial(
         _query_side_bwd_kernel, scale=scale, block_n=block_n, seg=seg,
-        pos_offset=pos_offset,
+        pos_offset=pos_offset, dyn=dyn,
     )
+    in_specs = [
+        pl.BlockSpec((1, block_n, d), lambda bi, i: (bi, i, 0)),
+        pl.BlockSpec((1, c, d), lambda bi, i: (bi, 0, 0)),
+        pl.BlockSpec((1, c, dv), lambda bi, i: (bi, 0, 0)),
+        pl.BlockSpec((1, block_n, dv), lambda bi, i: (bi, i, 0)),
+        pl.BlockSpec((1, 1, 1), lambda bi, i: (bi, 0, 0)),
+        pl.BlockSpec((1, block_n, dv), lambda bi, i: (bi, i, 0)),
+    ]
+    inputs = [q, k_l, m_mat, v, delta.astype(jnp.float32), g]
+    if dyn:
+        in_specs.insert(0, pl.BlockSpec(memory_space=pltpu.SMEM))
+        inputs.insert(0, _bounds_array(q_offset))
     dq, dv_out, dkl, dm, dd = pl.pallas_call(
         kernel,
         grid=(b, n_blocks),
-        in_specs=[
-            pl.BlockSpec((1, block_n, d), lambda bi, i: (bi, i, 0)),
-            pl.BlockSpec((1, c, d), lambda bi, i: (bi, 0, 0)),
-            pl.BlockSpec((1, c, dv), lambda bi, i: (bi, 0, 0)),
-            pl.BlockSpec((1, block_n, dv), lambda bi, i: (bi, i, 0)),
-            pl.BlockSpec((1, 1, 1), lambda bi, i: (bi, 0, 0)),
-            pl.BlockSpec((1, block_n, dv), lambda bi, i: (bi, i, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=(
             pl.BlockSpec((1, block_n, d), lambda bi, i: (bi, i, 0)),
             pl.BlockSpec((1, block_n, dv), lambda bi, i: (bi, i, 0)),
@@ -297,7 +339,7 @@ def query_side_bwd(
             pltpu.VMEM((1, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k_l, m_mat, v, delta.astype(jnp.float32), g)
+    )(*inputs)
     if n_pad:
         dq, dv_out = dq[:, :n], dv_out[:, :n]
     return dq, dkl, dm, dv_out, dd

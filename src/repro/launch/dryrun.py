@@ -191,6 +191,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, attention: str | None 
         # narrower than the model axis).
         overrides.setdefault("cache_seq", "model")
 
+    # Seq-sharded fused cells keep attention_backend intact and lower the
+    # shard_map context-parallel program (kernels/sharded.py), so the
+    # compile-time stats below model the same kernel route the trainer runs.
     cfg = apply_seq_sharding_config(cfg, mesh, overrides)
 
     t0 = time.time()

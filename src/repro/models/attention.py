@@ -55,7 +55,10 @@ def _core_attention(cfg: ModelConfig, impl: str, q, k, v, *, causal: bool):
         # (kernels/dispatch.py): plan = impl + block size per shape key,
         # resolved at trace time. Both the bidirectional and the
         # segment-causal variant run fused; grads flow through the
-        # custom-VJP backward kernels.
+        # custom-VJP backward kernels. When the active sharding rules map
+        # the sequence axis onto >1 devices, dispatch routes through the
+        # shard_map context-parallel driver (kernels/sharded.py) — the key
+        # carries seq_shards, so context-parallel cells keep the fused path.
         from repro.kernels.dispatch import dispatch_ss_attention
 
         return dispatch_ss_attention(

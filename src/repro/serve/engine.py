@@ -111,10 +111,34 @@ class ServeEngine:
         # whole decode tick (gather -> step -> commit) as one XLA program
         self._fused_step = self.kv.make_fused_step(jax.vmap(step))
         self.batched = serve.batched_prefill and prefill_supported(cfg)
+
+        # Warm the dispatch registry for the serving shapes: the decode key
+        # family (n=1 step against the max_seq cache horizon) plus, for
+        # ss_fused prefill, the full-sequence key whose plan picks the
+        # Pallas stream block size. Resolution loads the on-disk autotune
+        # cache — honoring the ModelConfig.autotune_cache override, like
+        # the Trainer does — so a tuned serving deployment skips the
+        # heuristics.
+        from repro.kernels import dispatch
+
+        if cfg.autotune_cache:
+            dispatch.set_cache_path(cfg.autotune_cache)
+            dispatch.load_cache()
+        self.decode_plan = dispatch.get_plan(dispatch.make_key(
+            self.max_seq, cfg.num_landmarks, cfg.resolved_head_dim,
+            cfg.compute_dtype, True, family="decode",
+        ))
+        prefill_block = 512
+        if self.batched and serve.prefill_impl == "ss_fused":
+            plan = dispatch.get_plan(dispatch.make_key(
+                self.max_seq, cfg.num_landmarks, cfg.resolved_head_dim,
+                cfg.compute_dtype, False,
+            ))
+            prefill_block = plan.block_n
         if self.batched:
             self._prefill = make_prefill_fn(
                 params, cfg, seq_max=self.max_seq,
-                prefill_impl=serve.prefill_impl,
+                prefill_impl=serve.prefill_impl, block_n=prefill_block,
             )
         # bucket rounded up to a block multiple so prefill writes whole blocks
         b = serve.prefill_bucket
@@ -153,11 +177,15 @@ class ServeEngine:
     def _run_prefill(self, i: int, req: Request) -> None:
         lane = self.lanes[i]
         n = len(req.prompt)
-        if self.serve.prefill_impl == "ss_fused":
-            # The fused kernels have no key-validity mask: run unpadded
-            # (one XLA program per distinct prompt length).
+        if (self.serve.prefill_impl == "ss_fused"
+                and n <= self.cfg.num_landmarks):
+            # Degenerate tiny prompt: the exact-attention path has no
+            # key-validity mask, so run unpadded (cheap recompiles; the
+            # kernels assert-guard padded callers).
             n_pad = n
         else:
+            # Bucketed padding in both modes; ss_fused masks the pad out of
+            # the softmax via the dynamic kv_valid bound.
             n_pad = min(-(-n // self._bucket) * self._bucket, self.max_seq)
         tokens = np.zeros((1, n_pad), np.int32)
         tokens[0, :n] = req.prompt
@@ -273,5 +301,9 @@ class ServeEngine:
         st["mode"] = (
             f"{'paged' if self.kv.has_paged_leaves else 'dense'}"
             f"+{'batched' if self.batched else 'replay'}-prefill"
+        )
+        st["decode_plan"] = (
+            f"{self.decode_plan.impl}/b{self.decode_plan.block_n}"
+            f"/{self.decode_plan.source}"
         )
         return st

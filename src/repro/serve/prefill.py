@@ -22,12 +22,16 @@ the cache seeded directly:
       formulation, approximate for causal prompts (landmarks see the full
       prompt) but the cache it leaves behind is still exact.
 
-In ``replay`` mode prompts are right-padded to a bucket multiple so only a
-handful of XLA programs ever compile; all padded positions are masked out
-of cache writes and landmark sums. ``ss_fused`` runs unpadded (the Pallas
-kernels carry no key-validity mask, so padding would leak into the softmax
-normalization) — one XLA program per distinct prompt length, the tradeoff
-for the ~12x faster prefill.
+Both modes right-pad prompts to a bucket multiple so only a handful of XLA
+programs ever compile; all padded positions are masked out of cache writes
+and landmark sums. In ``ss_fused`` mode the prompt length rides into the
+kernels as a dynamic key-validity bound (``kv_valid``), so padded zero-keys
+never enter the softmax normalization or the landmark means — the bucketed
+program is numerically the unpadded one. The only exception is degenerate
+prompts of <= num_landmarks tokens: they hit the exact-attention path, which
+carries no key mask, so the engine slices them to exact length (tiny
+programs, cheap recompiles; ``ss_attention_fused`` assert-guards padded
+callers).
 
 Supported for the attention-cache families (dense / moe / vlm, GQA or MLA).
 Hybrid and SSM stacks keep token replay (their recurrent state is inherently
@@ -93,22 +97,35 @@ def _prefix_sums(oh: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
 def _attend_prefill(
     cfg: ModelConfig, impl: str, prefill_impl: str,
     q, k_b, v_b, q_sums, k_sums_b, scale, seq_max: int, t_mask,
+    n_valid=None, block_n: int = 512,
 ):
     """Per-position attention over the prompt window.
 
     q (B,H,n,d); k_b/v_b (B,H,n,d) kv-broadcast and pad-masked;
-    q_sums/k_sums_b (n,B,H,c,d) landmark prefixes. Returns (B,H,n,dv)."""
+    q_sums/k_sums_b (n,B,H,c,d) landmark prefixes; ``n_valid`` the true
+    prompt length (traced). Returns (B,H,n,dv)."""
     n = q.shape[2]
     if prefill_impl == "ss_fused" and impl == "spectral_shift":
+        from repro.core.attention import full_attention
         from repro.kernels.ops import ss_attention_fused
 
-        # The fused kernels carry no key-validity mask, so this branch must
-        # only ever see unpadded prompts (the engine passes exact-length
-        # windows for ss_fused); padded zero-keys would otherwise leak into
-        # the softmax normalization and landmark means.
+        if n <= cfg.num_landmarks:
+            # Degenerate window: this is the exact-attention regime the
+            # unpadded call would hit (n <= c), computed here with the
+            # key-validity mask applied directly so a bucket-padded tiny
+            # prompt stays exact too (the fused degenerate path carries no
+            # mask; the window is <= c tokens, so O(n^2) is trivial).
+            key_mask = (jnp.arange(n) < n_valid)[None, None, None, :]
+            return full_attention(q, k_b, v_b, mask=key_mask, scale=scale)
+        # Bucketed padding: kv_valid masks padded zero-keys out of the
+        # softmax normalization and the landmark means, so this computes
+        # exactly what the unpadded call would. Contract: n_valid must
+        # exceed num_landmarks here (the engine slices shorter prompts to
+        # exact-length windows, taking the branch above).
         return ss_attention_fused(
             q, k_b, v_b, ss_config_from(cfg, causal=False), scale=scale,
-            interpret=cfg.kernels_interpret,
+            interpret=cfg.kernels_interpret, block_n=block_n,
+            kv_valid=n_valid,
         )
     qs = jnp.moveaxis(q, 2, 0)[:, :, :, None, :]  # (n, B, H, 1, d)
     pos_t = jnp.arange(n)
@@ -129,7 +146,7 @@ def _attend_prefill(
 # per-layer prefill (mirrors gqa_decode / mla_decode, vectorized over n)
 # --------------------------------------------------------------------------
 def _gqa_prefill(p, cfg: ModelConfig, x, sin, cos, t_mask, oh, seq_max, impl,
-                 prefill_impl):
+                 prefill_impl, n_valid, block_n):
     dt = x.dtype
     q = jnp.einsum("bsd,dhe->bhse", x, p["w_q"].astype(dt))
     k = jnp.einsum("bsd,dhe->bhse", x, p["w_k"].astype(dt))
@@ -154,7 +171,7 @@ def _gqa_prefill(p, cfg: ModelConfig, x, sin, cos, t_mask, oh, seq_max, impl,
 
     out = _attend_prefill(
         cfg, impl, prefill_impl, q, kb, vb, q_sums, k_sums_b,
-        cfg.resolved_head_dim ** -0.5, seq_max, t_mask,
+        cfg.resolved_head_dim ** -0.5, seq_max, t_mask, n_valid, block_n,
     )
     new_cache = {
         "k": k_m, "v": v_m,
@@ -166,7 +183,7 @@ def _gqa_prefill(p, cfg: ModelConfig, x, sin, cos, t_mask, oh, seq_max, impl,
 
 
 def _mla_prefill(p, cfg: ModelConfig, x, sin, cos, t_mask, oh, seq_max, impl,
-                 prefill_impl):
+                 prefill_impl, n_valid, block_n):
     dt = x.dtype
     dh, dr = cfg.resolved_head_dim, cfg.rope_head_dim
     c_kv = rms_norm(x @ p["w_dkv"].astype(dt), p["norm_kv"], cfg.norm_eps)
@@ -199,7 +216,7 @@ def _mla_prefill(p, cfg: ModelConfig, x, sin, cos, t_mask, oh, seq_max, impl,
     )
     out_lat = _attend_prefill(
         cfg, impl, prefill_impl, q_eff, k_eff_b, lat_b, q_sums, k_sums_b,
-        (dh + dr) ** -0.5, seq_max, t_mask,
+        (dh + dr) ** -0.5, seq_max, t_mask, n_valid, block_n,
     )
     out = jnp.einsum("bhsr,rhe->bhse", out_lat.astype(dt), p["w_uv"].astype(dt))
     attn = jnp.einsum("bhse,hed->bsd", out, p["w_o"].astype(dt))
@@ -212,11 +229,12 @@ def _mla_prefill(p, cfg: ModelConfig, x, sin, cos, t_mask, oh, seq_max, impl,
 
 
 def _dense_layer_prefill(lp, cfg: ModelConfig, x, sin, cos, t_mask, oh,
-                         seq_max, impl, prefill_impl):
+                         seq_max, impl, prefill_impl, n_valid, block_n):
     h = rms_norm(x, lp["norm_attn"], cfg.norm_eps)
     fn = _mla_prefill if cfg.mla else _gqa_prefill
     attn, new_cache = fn(
-        lp["attn"], cfg, h, sin, cos, t_mask, oh, seq_max, impl, prefill_impl
+        lp["attn"], cfg, h, sin, cos, t_mask, oh, seq_max, impl, prefill_impl,
+        n_valid, block_n,
     )
     x = x + attn
     h = rms_norm(x, lp["norm_mlp"], cfg.norm_eps)
@@ -232,7 +250,7 @@ def _dense_layer_prefill(lp, cfg: ModelConfig, x, sin, cos, t_mask, oh,
 # --------------------------------------------------------------------------
 def batched_prefill(
     params, cfg: ModelConfig, tokens: jnp.ndarray, n_valid: jnp.ndarray,
-    *, seq_max: int, prefill_impl: str = "replay",
+    *, seq_max: int, prefill_impl: str = "replay", block_n: int = 512,
 ):
     """Run a whole (padded) prompt through the model in one pass.
 
@@ -242,9 +260,27 @@ def batched_prefill(
     < n_valid (zeros elsewhere), landmark running sums accumulated over the
     first n_valid tokens with ``seq_max`` segment routing, pos = n_valid.
     The next-token logits live at index ``n_valid - 1``.
+
+    ``prefill_impl="ss_fused"`` contract: when the padded window exceeds
+    ``cfg.num_landmarks``, ``n_valid`` must too — the masked kernels model
+    the unpadded >c regime, while a <=c prompt belongs on the exact path
+    (the engine slices such prompts to windows <= num_landmarks, where the
+    masked exact branch handles any ``n_valid``).
     """
     if not prefill_supported(cfg):
         raise ValueError(f"batched prefill unsupported for family {cfg.family}")
+    if (prefill_impl == "ss_fused"
+            and tokens.shape[1] > cfg.num_landmarks
+            and not isinstance(n_valid, jax.core.Tracer)
+            and int(n_valid) <= cfg.num_landmarks):
+        # Concrete (eager) callers get the contract enforced loudly; under
+        # jit n_valid is a tracer and the engine's window slicing upholds it.
+        raise ValueError(
+            f"ss_fused prefill: prompt length {int(n_valid)} <= "
+            f"num_landmarks {cfg.num_landmarks} must run in a window of at "
+            f"most num_landmarks tokens (the engine slices such prompts) — "
+            f"the masked kernels model the > num_landmarks regime only"
+        )
     params = working_params(params, cfg)
     cache = _zero_cache(cfg, tokens.shape[1])
     dt = jnp.dtype(cfg.compute_dtype)
@@ -262,6 +298,7 @@ def batched_prefill(
     layer_fn = functools.partial(
         _dense_layer_prefill, cfg=cfg, sin=sin, cos=cos, t_mask=t_mask,
         oh=oh, seq_max=seq_max, impl=impl, prefill_impl=prefill_impl,
+        n_valid=jnp.asarray(n_valid, jnp.int32), block_n=block_n,
     )
     if cfg.scan_layers and not isinstance(params["layers"], list):
         def body(y, lp):
@@ -284,13 +321,15 @@ def batched_prefill(
 
 
 def make_prefill_fn(params, cfg: ModelConfig, *, seq_max: int,
-                    prefill_impl: str = "replay"):
+                    prefill_impl: str = "replay", block_n: int = 512):
     """Jitted prefill closure ``fn(tokens, n_valid)``; jax.jit specializes
-    one XLA program per padded prompt length (per bucket in ``replay``
-    mode, per exact length in ``ss_fused`` mode — the engine slices
-    accordingly)."""
+    one XLA program per padded prompt length — per bucket in both modes
+    (``ss_fused`` masks the pad via ``kv_valid``), plus one exact-length
+    program per degenerate <= num_landmarks prompt in ``ss_fused`` mode.
+    ``block_n`` is the Pallas stream block (dispatch plan for the serve
+    shape)."""
     fn = functools.partial(
         batched_prefill, params, cfg, seq_max=seq_max,
-        prefill_impl=prefill_impl,
+        prefill_impl=prefill_impl, block_n=block_n,
     )
     return jax.jit(fn)

@@ -154,6 +154,15 @@ class Trainer:
             # A forced backend never consults the registry — measuring
             # would be pure wasted startup time.
             return
+        from repro.distributed.sharding import seq_axis_sharded
+
+        if seq_axis_sharded(self.mesh, self.rule_overrides):
+            # Context-parallel cells resolve a seq_shards key and route
+            # through the shard_map driver; the single-device autotune
+            # harness cannot reproduce that program, so leave the heuristic
+            # (or a pre-registered sharded plan) in charge.
+            log.info("sequence axis is sharded: skipping autotune warmup")
+            return
         from repro.kernels import dispatch
 
         if cfg.autotune_cache:

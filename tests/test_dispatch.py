@@ -173,3 +173,85 @@ class TestDispatchRouting:
         )
         ref = _core_attention(cfg, "spectral_shift", q, q, q, causal=True)
         np.testing.assert_allclose(fused, ref, atol=1e-4, rtol=1e-4)
+
+
+class TestKeyFamilies:
+    """decode / seq_shards key families (serving + context parallelism)."""
+
+    def test_decode_key_roundtrip_and_heuristic(self):
+        key = dispatch.make_key(
+            32768, 64, 128, jnp.bfloat16, True, backend="tpu", family="decode"
+        )
+        assert dispatch.PlanKey.decode(key.encode()) == key
+        assert key != dispatch.make_key(
+            32768, 64, 128, jnp.bfloat16, True, backend="tpu"
+        )
+        plan = dispatch.heuristic_plan(key)
+        assert plan.impl == "jnp"  # decode math lives on the jnp path
+
+    def test_seq_shards_key_roundtrip_and_heuristic(self):
+        key = dispatch.make_key(
+            524288, 64, 128, jnp.bfloat16, True, backend="tpu", seq_shards=16
+        )
+        assert dispatch.PlanKey.decode(key.encode()) == key
+        plan = dispatch.heuristic_plan(key)
+        assert plan.impl == "sharded"
+        # Block size follows the per-shard stream length (n / seq_shards).
+        unsharded = dispatch.heuristic_plan(dispatch.make_key(
+            524288, 64, 128, jnp.bfloat16, True, backend="tpu"))
+        assert plan.block_n <= unsharded.block_n
+        # CPU keeps routing context-parallel cells to jnp-GSPMD.
+        cpu = dispatch.make_key(
+            4096, 64, 64, jnp.float32, False, backend="cpu", seq_shards=4)
+        assert dispatch.heuristic_plan(cpu).impl == "jnp"
+
+    def test_legacy_cache_keys_still_decode(self):
+        """Pre-family on-disk cache entries (6-field keys) keep parsing."""
+        key = dispatch.PlanKey.decode("tpu|n4096|c64|d128|bfloat16|causal")
+        assert key.family == "self" and key.seq_shards == 1
+        assert key.encode() == "tpu|n4096|c64|d128|bfloat16|causal"
+
+    def test_unknown_family_rejected(self):
+        with pytest.raises(ValueError, match="family"):
+            dispatch.make_key(128, 16, 16, jnp.float32, False, family="wat")
+
+    def test_sharded_plans_persist(self):
+        key = dispatch.make_key(
+            8192, 64, 64, jnp.bfloat16, True, backend="tpu", seq_shards=8)
+        dispatch.register_plan(
+            key, dispatch.Plan(impl="sharded", block_n=256, source="autotuned"))
+        dispatch.save_cache()
+        dispatch.clear_registry()
+        assert dispatch.load_cache() == 1
+        got = dispatch.get_plan(key)
+        assert (got.impl, got.block_n) == ("sharded", 256)
+
+    def test_sharded_plan_without_mesh_degenerates_to_fused(self):
+        """A registered sharded plan outside any mesh context still routes
+        (single shard == the plain fused kernels)."""
+        q = jax.random.normal(jax.random.PRNGKey(0), (1, 96, 16)) * 0.5
+        cfg = SSConfig(num_landmarks=8)
+        out = dispatch.dispatch_ss_attention(
+            q, q, q, cfg, backend="sharded", interpret=True
+        )
+        ref = spectral_shift_attention(q, q, q, cfg)
+        np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
+
+    def test_autotune_not_measured_for_mesh_or_decode_keys(self):
+        """Regression: get_plan(autotune_enabled=True) must not run the
+        measured sweep for seq_shards/decode keys — the harness measures
+        the single-device self-attention program and would register the
+        winner under a different key, re-tuning on every trace."""
+        calls = []
+
+        def boom(key):
+            calls.append(key)
+            raise AssertionError("measured autotune ran for a mesh key")
+
+        for key in (
+            dispatch.make_key(1024, 16, 16, jnp.float32, False, seq_shards=4),
+            dispatch.make_key(1024, 16, 16, jnp.float32, True, family="decode"),
+        ):
+            plan = dispatch.get_plan(key, autotune_enabled=True, tune_fn=boom)
+            assert plan.source == "heuristic"
+        assert not calls

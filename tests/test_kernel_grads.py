@@ -165,3 +165,108 @@ class TestSSStatsRemat:
             # Remat re-fuses the recomputed forward, so float association
             # differs slightly from the no-remat program.
             np.testing.assert_allclose(a, b, atol=5e-4, rtol=5e-3)
+
+
+class TestBF16GradParity:
+    """bf16 backward sweep vs the fp32 jnp oracle on IDENTICAL bf16 inputs
+    (isolates kernel-vs-oracle error from input quantization). Tolerances
+    are pinned from measured maxima over 4 seeds (ROADMAP item "bf16 bwd
+    tolerances unmeasured"): per-op max rel err <= 8e-3 for every cotangent
+    (measured; floor 1e-2); pinned at 2e-2 for headroom. The end-to-end
+    bound is looser because the jnp path casts intermediates (landmark
+    means, softmax factors) through bf16 at different points than the
+    kernels do."""
+
+    @staticmethod
+    def _rel(a, b):
+        a = np.asarray(a, np.float32)
+        b = np.asarray(b, np.float32)
+        return float(np.max(np.abs(a - b) / np.maximum(np.abs(b), 1e-2)))
+
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_landmark_summary_op_bf16(self, seed):
+        from repro.kernels.ref import ref_landmark_summary
+
+        b, c, n, d = 2, 16, 256, 32
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        q_l = (jax.random.normal(ks[0], (b, c, d)) * 0.5).astype(jnp.bfloat16)
+        k = (jax.random.normal(ks[1], (b, n, d)) * 0.5).astype(jnp.bfloat16)
+        v = jax.random.normal(ks[2], (b, n, d)).astype(jnp.bfloat16)
+        w = jax.random.normal(ks[3], (b, c, d))
+        meta = (d**-0.5, 128, False, True)
+        g16 = jax.grad(
+            lambda *a: jnp.sum(
+                landmark_summary_op(meta, *a).astype(jnp.float32) * w
+            ),
+            argnums=(0, 1, 2),
+        )(q_l, k, v)
+        g32 = jax.grad(
+            lambda *a: jnp.sum(
+                ref_landmark_summary(*a, d**-0.5).astype(jnp.float32) * w
+            ),
+            argnums=(0, 1, 2),
+        )(q_l, k, v)
+        for name, a, b_ in zip(("dq_l", "dk", "dv"), g16, g32):
+            r = self._rel(a, b_)
+            assert r < 2e-2, f"{name} bf16 rel err {r} (measured max 8e-3)"
+
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_query_side_op_bf16(self, seed):
+        from repro.kernels.ref import ref_query_side
+
+        b, c, n, d = 2, 16, 256, 32
+        ks = jax.random.split(jax.random.PRNGKey(seed + 10), 5)
+        q = (jax.random.normal(ks[0], (b, n, d)) * 0.5).astype(jnp.bfloat16)
+        k_l = (jax.random.normal(ks[1], (b, c, d)) * 0.5).astype(jnp.bfloat16)
+        m_mat = jax.random.normal(ks[2], (b, c, d)).astype(jnp.bfloat16)
+        v = jax.random.normal(ks[3], (b, n, d)).astype(jnp.bfloat16)
+        delta = jnp.full((b, 1, 1), 0.3, jnp.float32)
+        w = jax.random.normal(ks[4], (b, n, d))
+        meta = (d**-0.5, 128, False, n, True)
+        g16 = jax.grad(
+            lambda *a: jnp.sum(
+                query_side_op(meta, *a, delta).astype(jnp.float32) * w
+            ),
+            argnums=(0, 1, 2, 3),
+        )(q, k_l, m_mat, v)
+        g32 = jax.grad(
+            lambda *a: jnp.sum(
+                ref_query_side(*a, delta, d**-0.5).astype(jnp.float32) * w
+            ),
+            argnums=(0, 1, 2, 3),
+        )(q, k_l, m_mat, v)
+        for name, a, b_ in zip(("dq", "dk_l", "dm", "dv"), g16, g32):
+            r = self._rel(a, b_)
+            assert r < 2e-2, f"{name} bf16 rel err {r} (measured max 8e-3)"
+
+    @pytest.mark.parametrize("causal", [False, True])
+    def test_fused_end_to_end_bf16(self, causal):
+        b, c, n, d = 2, 16, 256, 32
+        ks = jax.random.split(jax.random.PRNGKey(3), 4)
+        q = (jax.random.normal(ks[0], (b, n, d)) * 0.5).astype(jnp.bfloat16)
+        k = (jax.random.normal(ks[1], (b, n, d)) * 0.5).astype(jnp.bfloat16)
+        v = jax.random.normal(ks[2], (b, n, d)).astype(jnp.bfloat16)
+        w = jax.random.normal(ks[3], (b, n, d))
+        cfg = SSConfig(num_landmarks=c, causal=causal)
+        ge = jax.grad(
+            lambda q, k, v: jnp.sum(
+                ss_attention_fused(q, k, v, cfg, interpret=True).astype(
+                    jnp.float32
+                ) * w
+            ),
+            argnums=(0, 1, 2),
+        )(q, k, v)
+        gj = jax.grad(
+            lambda q, k, v: jnp.sum(
+                spectral_shift_attention(q, k, v, cfg).astype(jnp.float32) * w
+            ),
+            argnums=(0, 1, 2),
+        )(q, k, v)
+        for name, a, b_ in zip("qkv", ge, gj):
+            r = self._rel(a.astype(jnp.float32), b_.astype(jnp.float32))
+            # Measured maxima over seeds: 0.20 (bidir dq/dk), 0.18 (causal
+            # dv); both paths re-quantize different intermediates to bf16.
+            assert r < 0.35, f"d{name} bf16 e2e rel err {r} (causal={causal})"
+        assert all(
+            bool(jnp.all(jnp.isfinite(x.astype(jnp.float32)))) for x in ge
+        )

@@ -206,3 +206,188 @@ class TestCausalKernels:
         np.testing.assert_allclose(
             jnp.einsum("bcn,bnd->bcd", p, v), bv, atol=2e-5, rtol=2e-5
         )
+
+
+class TestDynamicBounds:
+    """Traced kv_offset/kv_valid/q_offset bounds: the SMEM-scalar plumbing
+    the shard_map driver and bucketed prefill share."""
+
+    def test_kv_valid_masks_padded_keys(self):
+        """Padded-key softmax with a traced kv_valid == unpadded kernel."""
+        q, k, v, q_l, _ = _inputs(2, 192, 32, 32, 16, jnp.float32, seed=10)
+        n_valid = 160
+        scale = 1 / 32**0.5
+        out = landmark_summary(
+            q_l, k, v, scale=scale, block_n=64, interpret=True,
+            kv_valid=jnp.int32(n_valid),
+        )
+        ref = ref_landmark_summary(q_l, k[:, :n_valid], v[:, :n_valid], scale)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    def test_two_shard_merge_equals_full_stream(self):
+        """Manual two-shard flash merge (the shard_map combine) == one full
+        stream: per-shard kernels with kv_offset plus (m, l)-weighted psum."""
+        q, k, v, q_l, _ = _inputs(2, 256, 32, 32, 16, jnp.float32, seed=11)
+        scale = 1 / 32**0.5
+        full = landmark_summary(
+            q_l, k, v, scale=scale, block_n=64, causal=True, interpret=True
+        )
+        half = 128
+        parts = []
+        for off in (0, half):
+            parts.append(landmark_summary(
+                q_l, k[:, off : off + half], v[:, off : off + half],
+                scale=scale, block_n=64, causal=True, interpret=True,
+                return_stats=True, kv_offset=jnp.int32(off),
+                kv_valid=jnp.int32(256), seq_len_k=256,
+            ))
+        m_g = jnp.maximum(parts[0][1], parts[1][1])
+        corrs = [l * jnp.exp(m - m_g) for _, m, l in parts]
+        l_g = corrs[0] + corrs[1]
+        bv_g = (parts[0][0] * corrs[0] + parts[1][0] * corrs[1]) / jnp.maximum(
+            l_g, 1e-30
+        )
+        np.testing.assert_allclose(bv_g, full, atol=2e-5, rtol=2e-5)
+
+    def test_shard_merge_with_internal_block_padding(self):
+        """Regression: a shard whose length is not a block_n multiple pads
+        zero keys inside the kernel; their GLOBAL positions sit below the
+        global valid end on non-final shards, so the kernel must clamp the
+        bound by the local length or the pad leaks into the softmax."""
+        q, k, v, q_l, _ = _inputs(2, 192, 32, 32, 16, jnp.float32, seed=20)
+        scale = 1 / 32**0.5
+        full = landmark_summary(
+            q_l, k, v, scale=scale, block_n=64, interpret=True
+        )
+        half = 96  # 96 % 64 != 0 -> 32 zero-padded keys per shard
+        parts = [
+            landmark_summary(
+                q_l, k[:, off : off + half], v[:, off : off + half],
+                scale=scale, block_n=64, interpret=True, return_stats=True,
+                kv_offset=jnp.int32(off), kv_valid=jnp.int32(192),
+                seq_len_k=192,
+            )
+            for off in (0, half)
+        ]
+        m_g = jnp.maximum(parts[0][1], parts[1][1])
+        corrs = [l * jnp.exp(m - m_g) for _, m, l in parts]
+        l_g = corrs[0] + corrs[1]
+        bv_g = (parts[0][0] * corrs[0] + parts[1][0] * corrs[1]) / jnp.maximum(
+            l_g, 1e-30
+        )
+        np.testing.assert_allclose(bv_g, full, atol=2e-5, rtol=2e-5)
+
+    def test_kv_offset_alone_keeps_all_local_keys(self):
+        """Regression: kv_offset without kv_valid must default the bound to
+        offset + n (all local keys valid in global coordinates), not the
+        local length n."""
+        q, k, v, q_l, _ = _inputs(1, 128, 32, 32, 16, jnp.float32, seed=21)
+        scale = 1 / 32**0.5
+        plain = landmark_summary(
+            q_l, k, v, scale=scale, block_n=64, interpret=True
+        )
+        offset = landmark_summary(
+            q_l, k, v, scale=scale, block_n=64, interpret=True,
+            kv_offset=jnp.int32(128),  # bidir: offset alone changes nothing
+        )
+        np.testing.assert_allclose(offset, plain, atol=2e-5, rtol=2e-5)
+
+    def test_query_side_dynamic_offset(self):
+        """A traced q_offset reproduces the static decode-convention mask."""
+        q, k, v, q_l, k_l = _inputs(2, 128, 32, 32, 16, jnp.float32, seed=12)
+        m_mat = jax.random.normal(jax.random.PRNGKey(13), (2, 16, 32))
+        delta = jnp.full((2, 1, 1), 0.2, jnp.float32)
+        scale = 1 / 32**0.5
+        n_k = 256  # queries are the last 128 rows of a 256-token context
+        static = query_side(
+            q, k_l, m_mat, v, delta, scale=scale, block_n=64, causal=True,
+            seq_len_k=n_k, interpret=True,
+        )
+        dyn = query_side(
+            q, k_l, m_mat, v, delta, scale=scale, block_n=64, causal=True,
+            seq_len_k=n_k, interpret=True, q_offset=jnp.int32(n_k - 128),
+        )
+        np.testing.assert_allclose(dyn, static, atol=0, rtol=0)
+
+    def test_bwd_kernels_accept_bounds(self):
+        """Backward kernels under dynamic bounds == slicing by hand."""
+        from repro.kernels.ss_attention_bwd import landmark_summary_bwd
+
+        q, k, v, q_l, _ = _inputs(1, 160, 32, 32, 16, jnp.float32, seed=14)
+        scale = 1 / 32**0.5
+        n_valid = 130
+        bv, m, l = landmark_summary(
+            q_l, k, v, scale=scale, block_n=64, interpret=True,
+            return_stats=True, kv_valid=jnp.int32(n_valid),
+        )
+        g = jax.random.normal(jax.random.PRNGKey(15), bv.shape)
+        dq, dk, dv = landmark_summary_bwd(
+            q_l, k, v, bv, m, l, g, scale=scale, block_n=64, interpret=True,
+            kv_valid=jnp.int32(n_valid),
+        )
+        dq_r, dk_r, dv_r = landmark_summary_bwd(
+            q_l, k[:, :n_valid], v[:, :n_valid], bv, m, l, g, scale=scale,
+            block_n=64, interpret=True,
+        )
+        np.testing.assert_allclose(dq, dq_r, atol=2e-5, rtol=2e-5)
+        np.testing.assert_allclose(dk[:, :n_valid], dk_r, atol=2e-5, rtol=2e-5)
+        np.testing.assert_allclose(dv[:, :n_valid], dv_r, atol=2e-5, rtol=2e-5)
+        assert float(jnp.max(jnp.abs(dk[:, n_valid:]))) == 0.0
+        assert float(jnp.max(jnp.abs(dv[:, n_valid:]))) == 0.0
+
+
+class TestMaskedFusedAttention:
+    """ss_attention_fused(kv_valid=...): the bucketed-prefill contract."""
+
+    def test_padded_equals_unpadded(self):
+        q, k, v, *_ = _inputs(2, 96, 32, 32, 16, jnp.float32, seed=16)
+        cfg = SSConfig(num_landmarks=16)
+        for n_valid in (50, 77, 96):
+            ref = ss_attention_fused(
+                q[:, :n_valid], k[:, :n_valid], v[:, :n_valid], cfg,
+                interpret=True,
+            )
+            out = ss_attention_fused(
+                q, k, v, cfg, interpret=True, kv_valid=jnp.int32(n_valid)
+            )
+            np.testing.assert_allclose(
+                out[:, :n_valid], ref, atol=1e-5, rtol=1e-5
+            )
+
+    def test_padded_equals_unpadded_corrected_delta(self):
+        """Regression: the delta_scale="corrected" rescale (delta * c/n)
+        must read the TRUE prompt length, not the padded shape."""
+        q, k, v, *_ = _inputs(2, 96, 32, 32, 16, jnp.float32, seed=22)
+        cfg = SSConfig(num_landmarks=16, delta_scale="corrected")
+        n_valid = 50
+        ref = ss_attention_fused(
+            q[:, :n_valid], k[:, :n_valid], v[:, :n_valid], cfg,
+            interpret=True,
+        )
+        out = ss_attention_fused(
+            q, k, v, cfg, interpret=True, kv_valid=jnp.int32(n_valid)
+        )
+        np.testing.assert_allclose(out[:, :n_valid], ref, atol=1e-5, rtol=1e-5)
+
+    def test_masked_landmarks_match_segment_means(self):
+        from repro.core.landmarks import masked_segment_means
+
+        x = jax.random.normal(jax.random.PRNGKey(17), (2, 80, 8))
+        for n_valid in (33, 64, 80):
+            got = masked_segment_means(x, 16, jnp.int32(n_valid))
+            want = segment_means(x[:, :n_valid], 16, via_matmul=True)
+            np.testing.assert_allclose(got, want, atol=1e-6, rtol=1e-6)
+
+    def test_guards(self):
+        q, k, v, *_ = _inputs(1, 64, 16, 16, 16, jnp.float32)
+        with pytest.raises(ValueError, match="num_landmarks"):
+            # Padded degenerate prompt: exact path has no mask (assert-guard).
+            ss_attention_fused(
+                q, k, v, SSConfig(num_landmarks=64), interpret=True,
+                kv_valid=jnp.int32(10),
+            )
+        with pytest.raises(ValueError, match="bidirectional"):
+            ss_attention_fused(
+                q, k, v, SSConfig(num_landmarks=8, causal=True),
+                interpret=True, kv_valid=jnp.int32(40),
+            )

@@ -290,3 +290,144 @@ def test_ss_fused_prefill_runs(qwen):
     out, eng = _run(cfg, params, reqs, serve)
     assert eng.stats()["finished"] == 3
     assert all(len(v) > 0 for v in out.values())
+
+
+# ==========================================================================
+# Bucketed ss_fused prefill (key-validity masked kernels)
+# ==========================================================================
+def test_ss_fused_prefill_padding_invariant(qwen):
+    """Bucket-padded ss_fused prefill == unpadded ss_fused prefill: the
+    dynamic kv_valid bound keeps padded zero-keys out of the softmax, so
+    logits at valid positions and the cache state are identical."""
+    cfg, params = qwen
+    s_max = 64
+    rng = np.random.default_rng(11)
+    n = 21  # > num_landmarks (16): the masked fused path
+    prompt = rng.integers(3, cfg.vocab_size, n)
+
+    def run(n_pad):
+        tokens = np.zeros((1, n_pad), np.int32)
+        tokens[0, :n] = prompt
+        return batched_prefill(
+            params, cfg, jnp.asarray(tokens), jnp.asarray(n, jnp.int32),
+            seq_max=s_max, prefill_impl="ss_fused",
+        )
+
+    logits_u, cache_u = run(n)       # unpadded reference
+    logits_p, cache_p = run(32)      # bucket-padded
+    np.testing.assert_allclose(
+        np.asarray(logits_p[0, :n], np.float32),
+        np.asarray(logits_u[0], np.float32), atol=1e-4, rtol=1e-4,
+    )
+    assert int(np.argmax(logits_p[0, n - 1])) == int(np.argmax(logits_u[0, n - 1]))
+    get = (lambda t, k: jnp.stack([la[k] for la in t])) if isinstance(
+        cache_u["layers"], list) else (lambda t, k: t[k])
+    for key in ("q_lmk", "k_lmk"):
+        np.testing.assert_allclose(
+            np.asarray(get(cache_p["layers"], key), np.float32),
+            np.asarray(get(cache_u["layers"], key), np.float32),
+            atol=1e-4, rtol=1e-4,
+        )
+    np.testing.assert_allclose(
+        np.asarray(get(cache_p["layers"], "k"))[..., :n, :],
+        np.asarray(get(cache_u["layers"], "k"))[..., :n, :],
+        atol=1e-4, rtol=1e-4,
+    )
+
+
+def test_ss_fused_bucket_size_token_identical(qwen):
+    """Greedy engine outputs are invariant to the bucket size in ss_fused
+    mode — padding is invisible end to end (prompts > num_landmarks so the
+    masked kernels, not the degenerate exact path, are exercised)."""
+    cfg, params = qwen
+    reqs = _requests(cfg, 4, seed=9, lo=18, hi=30)
+    outs = []
+    for bucket in (8, 32):
+        serve = dataclasses.replace(
+            BASE, prefill_impl="ss_fused", prefill_bucket=bucket)
+        out, eng = _run(cfg, params, reqs, serve)
+        assert eng.stats()["finished"] == 4
+        outs.append(out)
+    assert outs[0] == outs[1]
+
+
+def test_ss_fused_degenerate_prompt_unpadded(qwen):
+    """Prompts of <= num_landmarks tokens take the exact-attention path and
+    still serve correctly (the engine slices them to exact length)."""
+    cfg, params = qwen
+    reqs = _requests(cfg, 3, seed=10, lo=4, hi=16)  # all <= 16 landmarks
+    serve = dataclasses.replace(BASE, prefill_impl="ss_fused")
+    out, eng = _run(cfg, params, reqs, serve)
+    assert eng.stats()["finished"] == 3
+    assert all(len(v) > 0 for v in out.values())
+
+
+def test_engine_warms_decode_plan(qwen):
+    """ServeEngine resolves the decode-shape dispatch key at construction
+    and surfaces the plan in stats()."""
+    from repro.kernels import dispatch
+
+    cfg, params = qwen
+    eng = ServeEngine(cfg, params, serve=BASE)
+    assert eng.decode_plan.impl in ("jnp", "fused", "interpret", "sharded")
+    key = dispatch.make_key(
+        BASE.max_seq, cfg.num_landmarks, cfg.resolved_head_dim,
+        cfg.compute_dtype, True, family="decode",
+    )
+    assert key.family == "decode"
+    # The heuristic decode plan routes to the jnp decode math.
+    assert eng.decode_plan.impl == "jnp"
+    assert eng.stats()["decode_plan"].startswith("jnp/")
+
+
+def test_ss_fused_degenerate_padded_prompt_exact(qwen):
+    """Regression: a bucket-padded window of <= num_landmarks tokens takes
+    the exact path WITH the key-validity mask applied — padded zero-keys
+    must not shift the logits or the next token."""
+    cfg, params = qwen
+    rng = np.random.default_rng(13)
+    n = 5  # << num_landmarks (16)
+    prompt = rng.integers(3, cfg.vocab_size, n)
+
+    def run(n_pad):
+        tokens = np.zeros((1, n_pad), np.int32)
+        tokens[0, :n] = prompt
+        return batched_prefill(
+            params, cfg, jnp.asarray(tokens), jnp.asarray(n, jnp.int32),
+            seq_max=64, prefill_impl="ss_fused",
+        )
+
+    logits_u, _ = run(n)
+    logits_p, _ = run(8)
+    np.testing.assert_allclose(
+        np.asarray(logits_p[0, :n], np.float32),
+        np.asarray(logits_u[0], np.float32), atol=1e-4, rtol=1e-4,
+    )
+    assert int(np.argmax(logits_p[0, n - 1])) == int(np.argmax(logits_u[0, n - 1]))
+
+
+def test_engine_honors_autotune_cache_override(qwen, tmp_path):
+    """Regression: ServeEngine's dispatch warm-up loads plans from
+    ModelConfig.autotune_cache, like the Trainer does."""
+    from repro.kernels import dispatch
+
+    cfg, params = qwen
+    cache = tmp_path / "tuned.json"
+    key = dispatch.make_key(
+        BASE.max_seq, cfg.num_landmarks, cfg.resolved_head_dim,
+        cfg.compute_dtype, True, family="decode",
+    )
+    dispatch.clear_registry()
+    dispatch.register_plan(
+        key, dispatch.Plan(impl="jnp", block_n=64, source="autotuned"))
+    dispatch.save_cache(str(cache))
+    dispatch.clear_registry()
+    try:
+        eng = ServeEngine(
+            dataclasses.replace(cfg, autotune_cache=str(cache)), params,
+            serve=BASE,
+        )
+        assert eng.decode_plan.block_n == 64
+        assert eng.decode_plan.source == "cache"
+    finally:
+        dispatch.clear_registry()  # drop the process-wide cache override
