@@ -1,0 +1,244 @@
+"""Per-token decode latency vs cache horizon: recompute vs streaming state.
+
+The legacy spectral-shift decode rebuilds the landmark-to-key softmax
+``B = softmax(Q~ K^T)`` and its value summary ``B V`` over the whole cache
+horizon every tick — O(c*S*d) per token, linear in S with slope c. The
+streaming decode state (serve/decode_state.py) carries per-landmark
+online-softmax partials in the cache instead:
+
+    exact   — flash-append + ONE row recomputed per tick: O(S*d + c*d),
+              linear with slope 1 (a c-fold cut), token-identical greedy;
+    frozen  — fully streamed O(c*d) per tick (near-flat in S) plus an
+              amortized two-row rebase at segment boundaries.
+
+Cells: ``dense`` drives a donated jitted ``decode_step`` on a lane-dense
+cache (pure decode-math cost); ``paged`` drives the block-pool fused tick
+(gather -> step -> scatter), whose gather adds an O(S)-bytes term in every
+mode. Caches are seeded synthetically (random K/V + consistent landmark
+sums + exact streaming stats) so the 32k cell doesn't need a 32k-token
+prefill. Frozen-mode per-token numbers charge the boundary rebase at its
+amortized steady-state rate: the rebase program is timed separately and
+one rebase per ``seg = ceil(S/c)`` tokens is added (the engine fires it
+exactly once per segment), reported alongside as ``rebase_ms``.
+
+    PYTHONPATH=src python -m benchmarks.run --only decode
+    REPRO_BENCH_SMOKE=1 ... (one tiny horizon for CI)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ServeConfig, reduced
+from repro.configs.registry import get_config
+from repro.models.attention import _broadcast_kv
+from repro.models.model import model_specs
+from repro.models.params import init_params
+from repro.serve.decode import decode_step
+from repro.serve.decode_state import (
+    landmark_counts,
+    landmark_means,
+    make_rebase_fn,
+    recompute_stats,
+    segment_len,
+)
+from repro.serve.paged import BlockAllocator, PagedKVCache, ZERO_BLOCK
+
+MODES = ("recompute", "exact", "frozen")
+
+
+def _smoke() -> bool:
+    return os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+
+
+def _setup():
+    # scan_layers=False: per-layer cache leaves are separate donated jit
+    # arguments, so the K/V updates alias in place — a layer scan routes
+    # the cache through scan outputs, which forces an O(S) copy per tick
+    # that would mask the attention-cost differences this bench measures.
+    cfg = dataclasses.replace(
+        reduced(get_config("qwen2-7b")), capacity_factor=100.0,
+        decode_attention_impl="spectral_shift", scan_layers=False,
+    )
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "s_max", "pos"))
+def _synthetic_cache(cfg, s_max: int, pos: int, key):
+    """B=1 decode cache at write position ``pos+1``: random K/V, landmark
+    sums consistent with them, and exact streaming stats — everything a
+    decode tick reads, without paying an O(S) prefill at bench setup."""
+    h, hkv, dh, c = (
+        cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim,
+        cfg.num_landmarks,
+    )
+    seg = segment_len(s_max, c)
+    t = jnp.arange(s_max)
+    t_mask = (t <= pos).astype(jnp.float32)
+    oh = (
+        ((t // seg)[None, :] == jnp.arange(c)[:, None]).astype(jnp.float32)
+        * t_mask[None, :]
+    )  # (c, S)
+    counts = landmark_counts(jnp.asarray(pos), s_max, c)
+    scale = dh ** -0.5
+
+    def layer(key):
+        ks = jax.random.split(key, 3)
+        kk = jax.random.normal(ks[0], (1, hkv, s_max, dh)) * 0.5 * t_mask[:, None]
+        vv = jax.random.normal(ks[1], (1, hkv, s_max, dh)) * t_mask[:, None]
+        qq = jax.random.normal(ks[2], (1, h, s_max, dh)) * 0.5 * t_mask[:, None]
+        q_lmk = jnp.einsum("cs,bhsd->bhcd", oh, qq)
+        k_lmk = jnp.einsum("cs,bhsd->bhcd", oh, kk)
+        kb = _broadcast_kv(kk, h)
+        vb = _broadcast_kv(vv, h)
+        m, l, acc = recompute_stats(
+            landmark_means(q_lmk, counts), kb, vb, pos, scale,
+            row_valid=counts > 0,
+        )
+        return {
+            "k": kk, "v": vv, "q_lmk": q_lmk, "k_lmk": k_lmk,
+            "bv_m": m, "bv_l": l, "bv_acc": acc,
+        }
+
+    keys = jax.random.split(key, cfg.num_layers)
+    if cfg.scan_layers:
+        layers = jax.vmap(layer)(keys)
+    else:
+        layers = [layer(k) for k in keys]
+    return {"pos": jnp.asarray(pos + 1, jnp.int32), "layers": layers}
+
+
+def _dense_cell(rows, cfg, params, horizon: int, mode: str, tokens: int):
+    mcfg = dataclasses.replace(cfg, decode_streaming=mode)
+    seg = segment_len(horizon, mcfg.num_landmarks)
+    pos0 = horizon - tokens - 2
+    cache = _synthetic_cache(mcfg, horizon, pos0, jax.random.PRNGKey(1))
+    step = jax.jit(
+        lambda c, t: decode_step(params, mcfg, c, t), donate_argnums=(0,)
+    )
+    tok = jnp.ones((1, 1), jnp.int32)
+    _, cache = step(cache, tok)  # compile + warmup (advances pos by 1)
+    rebase_ms = 0.0
+    if mode == "frozen":
+        # Time the boundary-rebase program on its own; the steady-state
+        # per-token cost charges one rebase per segment (seg tokens).
+        rebase = jax.jit(make_rebase_fn(mcfg, horizon), donate_argnums=(0,))
+        cache = rebase(cache, jnp.asarray(pos0 + 1))  # compile
+        jax.block_until_ready(jax.tree.leaves(cache)[0])
+        t0 = time.perf_counter()
+        for _ in range(2):
+            cache = rebase(cache, jnp.asarray(pos0 + 1))
+        jax.block_until_ready(jax.tree.leaves(cache)[0])
+        rebase_ms = (time.perf_counter() - t0) / 2 * 1e3
+        rows.append(
+            f"decode,dense_h{horizon}_{mode},rebase_ms,{rebase_ms:.3f}"
+        )
+    jax.block_until_ready(jax.tree.leaves(cache)[0])
+    t0 = time.perf_counter()
+    for _ in range(tokens):
+        logits, cache = step(cache, tok)
+    jax.block_until_ready(logits)
+    ms = (time.perf_counter() - t0) / tokens * 1e3 + rebase_ms / seg
+    rows.append(f"decode,dense_h{horizon}_{mode},per_token_ms,{ms:.3f}")
+    return ms
+
+
+def _paged_cell(rows, cfg, params, horizon: int, mode: str, tokens: int):
+    mcfg = dataclasses.replace(cfg, decode_streaming=mode)
+    seg = segment_len(horizon, mcfg.num_landmarks)
+    block = max(horizon // 64, 16)
+    serve = ServeConfig(max_lanes=1, max_seq=horizon, block_size=block)
+    kv = PagedKVCache(mcfg, serve)
+    alloc = BlockAllocator(serve.resolved_num_blocks, serve.block_size)
+    pos0 = horizon - tokens - 2
+    alloc.alloc(0, alloc.blocks_for_tokens(pos0 + 1))
+    tables = np.full((1, serve.blocks_per_lane), ZERO_BLOCK, np.int32)
+    row = alloc.tables[0]
+    tables[0, : len(row)] = row
+    cache = _synthetic_cache(mcfg, horizon, pos0, jax.random.PRNGKey(1))
+    kv.write_prefill(0, cache, tables[0], n_tokens=pos0 + 1)
+    step = functools.partial(decode_step, params, mcfg, seq_max=horizon)
+    fused = kv.make_fused_step(jax.vmap(step))
+    nb = kv.view_blocks_needed(np.asarray([horizon - 1]), [0])
+    tok = np.ones((1, 1, 1), np.int32)
+    active = np.asarray([True])
+
+    def tick(pos):
+        nonlocal tables
+        need = pos // block
+        if need >= len(alloc.tables[0]):
+            alloc.alloc(0, 1)
+            tables = np.full((1, serve.blocks_per_lane), ZERO_BLOCK, np.int32)
+            tables[0, : len(alloc.tables[0])] = alloc.tables[0]
+        logits, new_storage = fused(
+            kv._storage, jnp.asarray(tables), jnp.asarray(tok),
+            jnp.asarray([pos], np.int32), jnp.asarray(active), nb,
+        )
+        kv._storage = list(new_storage)
+        return logits
+
+    lg = tick(pos0 + 1)  # compile + warmup
+    rebase_ms = 0.0
+    if mode == "frozen":
+        rebase = kv.make_rebase_step(jax.vmap(make_rebase_fn(mcfg, horizon)))
+
+        def run_rebase(pos):
+            kv._storage = list(rebase(
+                kv._storage, jnp.asarray(tables),
+                jnp.asarray([pos], np.int32), jnp.asarray(active), nb,
+            ))
+
+        run_rebase(pos0 + 1)  # compile
+        jax.block_until_ready(kv._storage[0])
+        t0 = time.perf_counter()
+        for _ in range(2):
+            run_rebase(pos0 + 1)
+        jax.block_until_ready(kv._storage[0])
+        rebase_ms = (time.perf_counter() - t0) / 2 * 1e3
+        rows.append(
+            f"decode,paged_h{horizon}_{mode},rebase_ms,{rebase_ms:.3f}"
+        )
+    jax.block_until_ready(lg)
+    t0 = time.perf_counter()
+    for i in range(tokens):
+        lg = tick(pos0 + 2 + i)
+    jax.block_until_ready(lg)
+    ms = (time.perf_counter() - t0) / tokens * 1e3 + rebase_ms / seg
+    rows.append(f"decode,paged_h{horizon}_{mode},per_token_ms,{ms:.3f}")
+    return ms
+
+
+def run(rows: list[str]) -> None:
+    cfg, params = _setup()
+    if _smoke():
+        horizons, tokens = (512,), 4
+    else:
+        horizons, tokens = (1024, 8192, 32768), 8
+    for h in horizons:
+        ms = {}
+        for mode in MODES:
+            ms[mode] = _dense_cell(rows, cfg, params, h, mode, tokens)
+        for mode in MODES:
+            _paged_cell(rows, cfg, params, h, mode, tokens)
+        rows.append(
+            f"decode,dense_h{h},exact_speedup_vs_recompute,"
+            f"{ms['recompute'] / max(ms['exact'], 1e-9):.2f}"
+        )
+        rows.append(
+            f"decode,dense_h{h},frozen_speedup_vs_recompute,"
+            f"{ms['recompute'] / max(ms['frozen'], 1e-9):.2f}"
+        )
+
+
+if __name__ == "__main__":
+    out: list[str] = []
+    run(out)
+    print("name,case,metric,value")
+    print("\n".join(out))

@@ -1,0 +1,112 @@
+"""Remat-policy study: ``full`` vs ``dots`` vs ``ss_stats`` on the train
+cells, pinning the per-arch defaults in ``configs/base.py::REMAT_DEFAULTS``.
+
+Measures, per (seq_len, attention route, remat policy), on the reduced
+dense decoder (the cells scale the 4k/32k train shapes down to what a CI
+host executes; the *relative* ordering is the deliverable):
+
+    fwdbwd_ms     best wall-clock of a jitted grad step (executed cells)
+    peak_temp_mb  XLA CompiledMemoryStats.temp_size_in_bytes — the fwd->bwd
+                  residual + workspace footprint (AOT, no execution, so the
+                  32k cell is measured even where running it is impractical)
+
+Routes: ``interpret`` forces the Pallas kernels (the only route that emits
+the tagged ``ss_bv``/``ss_stats`` residuals — on CPU it measures interpreter
+overhead, wall-clock there is NOT kernel-representative); ``jnp`` is the
+route the dispatch heuristic actually picks on CPU.
+
+    PYTHONPATH=src python -m benchmarks.remat_study [--quick]
+
+Writes results/remat_study.json.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+
+from repro.configs.base import reduced
+from repro.configs.registry import get_config
+from repro.models.model import model_specs
+from repro.models.params import init_params
+from repro.train.train_step import make_grad_step
+
+POLICIES = ("full", "dots", "ss_stats")
+
+
+def _measure_ms(fn, args, reps: int) -> float:
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+def _cell(base, params, seq_len: int, backend: str, remat: str,
+          run_wall: bool, reps: int) -> dict:
+    cfg = dataclasses.replace(
+        base, attention_backend=backend, remat=remat,
+        attention_impl="spectral_shift_fused",
+    )
+    tokens = jax.random.randint(
+        jax.random.PRNGKey(1), (1, seq_len), 0, cfg.vocab_size
+    )
+    batch = {"tokens": tokens}
+    fn = jax.jit(make_grad_step(cfg))
+    out: dict = {"seq": seq_len, "backend": backend, "remat": remat}
+    try:
+        stats = fn.lower(params, batch).compile().memory_analysis()
+        out["peak_temp_mb"] = round(stats.temp_size_in_bytes / 2**20, 2)
+    except Exception as e:  # pragma: no cover - backend-dependent
+        out["peak_temp_mb"] = None
+        out["error"] = f"{type(e).__name__}: {e}"
+    if run_wall and "error" not in out:
+        out["fwdbwd_ms"] = round(_measure_ms(fn, (params, batch), reps), 1)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small seqs only (smoke)")
+    args = ap.parse_args()
+
+    base = reduced(get_config("qwen2-7b"), num_landmarks=32)
+    params = init_params(model_specs(base), jax.random.PRNGKey(0))
+    cells = []
+    seqs = (512,) if args.quick else (4096, 32768)
+    for seq in seqs:
+        for backend in ("interpret", "jnp"):
+            # wall-clock only where a run is practical on the host: the
+            # interpret route at 32k is compile-only (AOT memory numbers).
+            run_wall = seq <= 4096 and not (backend == "interpret" and seq > 4096)
+            for remat in POLICIES:
+                cells.append(_cell(base, params, seq, backend, remat,
+                                   run_wall, reps=2))
+                print(cells[-1], flush=True)
+
+    payload = {
+        "config": "reduced(qwen2-7b, num_landmarks=32), batch 1, "
+                  "attention_impl=spectral_shift_fused",
+        "host_backend": jax.default_backend(),
+        "note": "interpret = forced Pallas kernels (tagged ss_stats "
+                "residuals; CPU wall-clock measures interpreter overhead); "
+                "jnp = the route the CPU heuristic picks (no tagged "
+                "residuals, ss_stats degenerates to full recompute).",
+        "cells": cells,
+    }
+    path = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "remat_study.json")
+    with open(os.path.abspath(path), "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {os.path.abspath(path)}")
+
+
+if __name__ == "__main__":
+    main()

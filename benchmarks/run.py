@@ -12,6 +12,7 @@ import time
 from benchmarks import (
     bench_accuracy,
     bench_complexity,
+    bench_decode,
     bench_error_bound,
     bench_serve,
     bench_sharded_attn,
@@ -27,6 +28,7 @@ SUITES = {
     "error_bound": bench_error_bound.run,    # paper §7 eq. (12)
     "roofline": roofline.run,                # EXPERIMENTS.md §Roofline
     "serve": bench_serve.run,                # paged vs dense serving TTFT
+    "decode": bench_decode.run,              # streaming vs recompute decode
     "train_step": bench_train_step.run,      # fused vs jnp fwd+bwd
     "sharded_attn": bench_sharded_attn.run,  # context-parallel fused vs jnp
 }

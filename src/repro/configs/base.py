@@ -29,6 +29,20 @@ class ModelConfig:
     attention_impl: str = "full"             # training-time self-attention
     decode_attention_impl: str = "spectral_shift"  # KV-cache decode path
     encoder_attention_impl: str = "spectral_shift"  # bidirectional sites
+    decode_streaming: str = "exact"    # spectral-shift decode state policy:
+                                       # recompute = rebuild B/BV over the
+                                       #   whole cache horizon every token
+                                       #   (O(c*S*d)/token, the legacy path)
+                                       # exact = stream (m, l, BV) stats in
+                                       #   the cache; frozen landmark rows
+                                       #   flash-append the new key, only the
+                                       #   active segment's row is recomputed
+                                       #   (O(S*d + c*d)/token, token-
+                                       #   identical to recompute on greedy)
+                                       # frozen = active row streams too and
+                                       #   is rebased lazily at segment
+                                       #   boundaries (amortized O(c*d)/token,
+                                       #   bounded drift within a segment)
     num_landmarks: int = 64
     ss_method: str = "iterative"
     pinv_iters: int = 6
@@ -88,7 +102,8 @@ class ModelConfig:
     compute_dtype: str = "bfloat16"
     scan_layers: bool = True
     remat: str = "full"          # none | full | dots | ss_stats (save only
-                                 # the fused-attention (m, l)/BV residuals)
+                                 # the fused-attention (m, l)/BV residuals) |
+                                 # auto (per-backend default, REMAT_DEFAULTS)
     unroll_scans: bool = False   # probe mode: unroll chunk scans so XLA
                                  # cost_analysis sees every body (math-identical)
 
@@ -104,6 +119,37 @@ class ModelConfig:
     @property
     def is_decoder_only(self) -> bool:
         return self.encoder_layers == 0
+
+
+# Per-arch remat defaults for ``remat="auto"``, pinned from the measured
+# study in results/remat_study.json (benchmarks/remat_study.py; reduced
+# dense decoder scaled from the 4k/32k train cells). Measured: ``dots``
+# carries the largest fwd->bwd footprint at every cell (+26-38% XLA temp vs
+# full at 4k/32k on both routes); ``ss_stats`` matches ``full``'s footprint
+# while additionally keeping only the tagged (m, l)/BV attention residuals
+# on the kernel route (bench_train_step: ~2.1x smaller vjp residuals at
+# 4k), which is the profile that matters on real accelerators — so
+# TPU/GPU pin ``ss_stats``. On CPU the dispatch heuristic routes attention
+# to jnp (no tagged residuals; ss_stats degenerates to recompute-all) and
+# ``full`` is fastest-or-equal at every measured cell, so CPU pins
+# ``full``.
+REMAT_DEFAULTS: dict[str, str] = {
+    "tpu": "ss_stats",
+    "gpu": "ss_stats",
+    "cpu": "full",
+}
+
+
+def resolve_remat(remat: str, backend: Optional[str] = None) -> str:
+    """Map ``remat="auto"`` to the pinned per-arch default (identity for
+    every explicit policy)."""
+    if remat != "auto":
+        return remat
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    return REMAT_DEFAULTS.get(backend, "full")
 
 
 @dataclasses.dataclass(frozen=True)

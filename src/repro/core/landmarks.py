@@ -25,12 +25,14 @@ def onehot_segment_sums(x: jnp.ndarray, onehot: jnp.ndarray) -> jnp.ndarray:
     return jnp.moveaxis(sums, 0, -2)
 
 
-def segment_counts(n_valid, num_landmarks: int, seg) -> jnp.ndarray:
+def segment_counts(n_valid, num_landmarks: int, seg, floor: int = 1) -> jnp.ndarray:
     """True per-segment token counts (m,) fp32 for ``n_valid`` tokens split
-    into segments of length ``seg`` (either may be traced); empty segments
-    clip to 1 so divisions stay finite — matching ``segment_means``."""
+    into segments of length ``seg`` (either may be traced). With the default
+    ``floor=1`` empty segments clip to 1 so divisions stay finite — matching
+    ``segment_means``; ``floor=0`` keeps the raw counts so callers can
+    derive segment validity (the decode path's landmark bookkeeping)."""
     return jnp.clip(
-        n_valid - jnp.arange(num_landmarks) * seg, 1, seg
+        n_valid - jnp.arange(num_landmarks) * seg, floor, seg
     ).astype(jnp.float32)
 
 

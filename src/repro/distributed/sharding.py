@@ -102,7 +102,9 @@ def apply_seq_sharding_config(cfg, mesh: Mesh, overrides: Optional[dict] = None,
                 )
             import jax
 
-            if (cfg.remat == "ss_stats"
+            from repro.configs.base import resolve_remat
+
+            if (resolve_remat(cfg.remat) == "ss_stats"
                     and cfg.attention_backend == "auto"
                     and jax.default_backend() == "cpu"):
                 # The dispatch heuristic routes context-parallel cells to
@@ -125,7 +127,11 @@ def apply_seq_sharding_config(cfg, mesh: Mesh, overrides: Optional[dict] = None,
                 "forcing attention_backend=jnp"
             )
         cfg = dataclasses.replace(cfg, attention_backend="jnp")
-        if cfg.remat == "ss_stats":
+        from repro.configs.base import resolve_remat
+
+        # Resolve "auto" before the guard: REMAT_DEFAULTS maps TPU/GPU to
+        # ss_stats, which has no tagged residuals on this forced-jnp route.
+        if resolve_remat(cfg.remat) == "ss_stats":
             if log:
                 log.warning(
                     "remat='ss_stats' has no tagged residuals on the jnp "

@@ -22,6 +22,8 @@ from repro.kernels.dispatch import (
     save_cache,
 )
 from repro.kernels.ops import (
+    flash_merge,
+    flash_rescale,
     landmark_summary_op,
     nystrom_attention_fused,
     query_side_op,
@@ -37,6 +39,8 @@ __all__ = [
     "PlanKey",
     "autotune",
     "dispatch_ss_attention",
+    "flash_merge",
+    "flash_rescale",
     "get_plan",
     "landmark_summary",
     "landmark_summary_bwd",

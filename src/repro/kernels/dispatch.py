@@ -5,7 +5,8 @@ attention call, replacing ad-hoc ``impl == "spectral_shift_fused"``
 branching in model code:
 
     key  = (backend, n_bucket, c, d, dtype, causal, family, seq_shards)
-    plan = Plan(impl = fused | jnp | interpret | sharded, block_n, source)
+    plan = Plan(impl = fused | jnp | interpret | sharded, block_n, block_c,
+                source)
 
 ``family="decode"`` keys serving's single-step shape (n = cache horizon);
 ``seq_shards`` keys context-parallel cells, whose plans route through the
@@ -18,11 +19,14 @@ step consults the registry once per compiled shape and bakes the winning
 kernel in.
 
 The measured-autotune mode times real candidate executions (jnp reference
-vs fused kernels across block sizes) on synthetic data of the exact shape
-and persists winners to a JSON cache (``REPRO_AUTOTUNE_CACHE`` or
-``~/.cache/repro/ss_autotune.json``) so subsequent processes skip the
-measurement. ``n`` is bucketed to the next power of two to keep the cache
-dense across nearby sequence lengths.
+vs fused kernels across the (block_n, block_c) grid — ``block_c`` tiles the
+B-side kernel's landmark rows, see kernels/ss_attention.py) on synthetic
+data of the exact shape and persists winners to a JSON cache
+(``REPRO_AUTOTUNE_CACHE`` or ``~/.cache/repro/ss_autotune.json``) so
+subsequent processes skip the measurement. ``n`` is bucketed to the next
+power of two to keep the cache dense across nearby sequence lengths. Cache
+payloads are written at version 2 (plans carry ``block_c``); version-1
+caches load unchanged with ``block_c=0`` (untiled — the former behavior).
 """
 from __future__ import annotations
 
@@ -88,6 +92,8 @@ class PlanKey:
 class Plan:
     impl: str            # "fused" | "jnp" | "interpret"
     block_n: int = 512
+    block_c: int = 0     # landmark-row tile for the B-side kernel (0 = all
+                         # rows resident; only honored when it divides c)
     source: str = "heuristic"  # heuristic | registered | cache | autotuned
 
     def __post_init__(self):
@@ -178,7 +184,9 @@ def load_cache(path: Optional[str] = None) -> int:
             try:
                 key = PlanKey.decode(ks)
                 plan = Plan(
-                    impl=pd["impl"], block_n=int(pd["block_n"]), source="cache"
+                    impl=pd["impl"], block_n=int(pd["block_n"]),
+                    # Version-1 caches predate block_c; absent means untiled.
+                    block_c=int(pd.get("block_c", 0)), source="cache",
                 )
             except (ValueError, KeyError):
                 continue
@@ -204,10 +212,15 @@ def save_cache(path: Optional[str] = None) -> str:
         for key, plan in _REGISTRY.items():
             if plan.source == "heuristic":
                 continue
-            existing[key.encode()] = {"impl": plan.impl, "block_n": plan.block_n}
+            existing[key.encode()] = {
+                "impl": plan.impl, "block_n": plan.block_n,
+                "block_c": plan.block_c,
+            }
     tmp = f"{path}.tmp.{os.getpid()}"
+    # Version 2: plans carry block_c. Readers accept both versions (block_c
+    # defaults to 0 on legacy entries), so old caches stay usable in place.
     with open(tmp, "w") as f:
-        json.dump({"version": 1, "plans": existing}, f, indent=2, sort_keys=True)
+        json.dump({"version": 2, "plans": existing}, f, indent=2, sort_keys=True)
     os.replace(tmp, path)
     return path
 
@@ -285,18 +298,26 @@ def autotune(
     *,
     backend: Optional[str] = None,
     block_candidates: tuple[int, ...] = (256, 512, 1024),
+    block_c_candidates: Optional[tuple[int, ...]] = None,
     reps: int = 2,
     save: bool = True,
     cache_file: Optional[str] = None,
     interpret: Optional[bool] = None,
 ) -> Plan:
-    """Measure jnp vs fused (across block sizes) on synthetic data of the
-    exact shape; register and (optionally) persist the winner."""
+    """Measure jnp vs fused across the (block_n, block_c) candidate grid on
+    synthetic data of the exact shape; register and (optionally) persist the
+    winner. ``block_c_candidates`` defaults to the untiled kernel plus the
+    divisor tiles c/2 and c/4 (when whole) — tiling trades smaller VMEM
+    accumulators for re-streaming K/V per landmark tile."""
     from repro.kernels.ops import ss_attention_fused
 
     key = make_key(n, c, d, dtype, causal, backend=backend)
     if interpret is None:
         interpret = key.backend == "cpu"
+    if block_c_candidates is None:
+        block_c_candidates = (0,) + tuple(
+            c // f for f in (2, 4) if c % f == 0 and c // f >= 8
+        )
     cfg = SSConfig(num_landmarks=c, causal=causal)
     rng = jax.random.PRNGKey(0)
     kq, kk, kv = jax.random.split(rng, 3)
@@ -311,16 +332,20 @@ def autotune(
     ]
     fused_impl = "interpret" if interpret else "fused"
     for block in dict.fromkeys(min(bc, n) for bc in block_candidates):
-        fn = functools.partial(
-            ss_attention_fused, cfg=cfg, block_n=block, interpret=interpret
-        )
-        try:
-            t = _time_call(fn, q, k, v, reps=reps)
-        except Exception:
-            continue  # candidate doesn't lower on this backend/shape
-        results.append(
-            (t, Plan(impl=fused_impl, block_n=block, source="autotuned"))
-        )
+        for bc_c in dict.fromkeys(block_c_candidates):
+            fn = functools.partial(
+                ss_attention_fused, cfg=cfg, block_n=block, block_c=bc_c,
+                interpret=interpret,
+            )
+            try:
+                t = _time_call(fn, q, k, v, reps=reps)
+            except Exception:
+                continue  # candidate doesn't lower on this backend/shape
+            results.append((
+                t,
+                Plan(impl=fused_impl, block_n=block, block_c=bc_c,
+                     source="autotuned"),
+            ))
     _, plan = min(results, key=lambda r: r[0])
     register_plan(key, plan)
     if save:
@@ -379,9 +404,9 @@ def dispatch_ss_attention(
             seq_shards=n_shards if sharded_site else 1,
         )
         plan = get_plan(key, autotune_enabled=autotune_enabled)
-        impl, block_n = plan.impl, plan.block_n
+        impl, block_n, block_c = plan.impl, plan.block_n, plan.block_c
     elif backend in _IMPLS:
-        impl, block_n = backend, 512
+        impl, block_n, block_c = backend, 512, 0
     else:
         raise ValueError(
             f"unknown attention backend {backend!r}; want 'auto' or one of {_IMPLS}"
@@ -401,6 +426,6 @@ def dispatch_ss_attention(
         # single-device kernels (one shard).
         impl = "fused"
     return ss_attention_fused(
-        q, k, v, cfg, scale=scale, block_n=block_n,
+        q, k, v, cfg, scale=scale, block_n=block_n, block_c=block_c,
         interpret=True if impl == "interpret" else interpret,
     )

@@ -57,26 +57,55 @@ def _float0_like(x):
 
 
 # --------------------------------------------------------------------------
+# Online-softmax (flash) partial-state algebra, shared by every merge site:
+# the context-parallel cross-shard combine (kernels/sharded.py) and the
+# streaming decode state's per-token append (serve/decode_state.py).
+#
+# A partial state (m, l, acc) represents sum_j exp(s_j - m) for row max
+# anchor m (l) and sum_j exp(s_j - m) * v_j (acc); the softmax output is
+# acc / l. ``m`` need not be the true row max — any finite anchor gives the
+# same normalized result — which is what makes the zeros-initialized empty
+# state (m=0, l=0, acc=0) a valid identity element for ``flash_merge``.
+# --------------------------------------------------------------------------
+def flash_rescale(m, l, acc, m_new):
+    """Re-anchor a partial state to ``m_new`` (>= m for stability).
+    Returns the rescaled ``(l, acc)``; the new anchor is ``m_new``."""
+    corr = jnp.exp(m - m_new)
+    return l * corr, acc * corr
+
+
+def flash_merge(m_a, l_a, acc_a, m_b, l_b, acc_b):
+    """Merge two online-softmax partial states into one. Shapes broadcast;
+    ``m``/``l`` carry a trailing singleton axis so the correction factors
+    broadcast against ``acc`` (..., rows, dv)."""
+    m = jnp.maximum(m_a, m_b)
+    l_ar, acc_ar = flash_rescale(m_a, l_a, acc_a, m)
+    l_br, acc_br = flash_rescale(m_b, l_b, acc_b, m)
+    return m, l_ar + l_br, acc_ar + acc_br
+
+
+# --------------------------------------------------------------------------
 # Differentiable kernel ops. ``meta`` is a hashable tuple of static config;
 # custom_vjp treats it as non-differentiable.
 # --------------------------------------------------------------------------
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def landmark_summary_op(meta, q_l, k, v, kv_valid=None):
     """Differentiable BV = softmax(Q~ K^T) @ V.  meta = (scale, block_n,
-    causal, interpret). ``kv_valid`` (optional traced scalar) masks keys at
-    positions >= kv_valid out of the softmax (bucketed prefill)."""
-    scale, block_n, causal, interpret = meta
+    block_c, causal, interpret). ``kv_valid`` (optional traced scalar) masks
+    keys at positions >= kv_valid out of the softmax (bucketed prefill)."""
+    scale, block_n, block_c, causal, interpret = meta
     return landmark_summary(
-        q_l, k, v, scale=scale, block_n=block_n, causal=causal,
-        interpret=interpret, kv_valid=kv_valid,
+        q_l, k, v, scale=scale, block_n=block_n, block_c=block_c,
+        causal=causal, interpret=interpret, kv_valid=kv_valid,
     )
 
 
 def _landmark_summary_fwd(meta, q_l, k, v, kv_valid=None):
-    scale, block_n, causal, interpret = meta
+    scale, block_n, block_c, causal, interpret = meta
     bv, m, l = landmark_summary(
-        q_l, k, v, scale=scale, block_n=block_n, causal=causal,
-        interpret=interpret, return_stats=True, kv_valid=kv_valid,
+        q_l, k, v, scale=scale, block_n=block_n, block_c=block_c,
+        causal=causal, interpret=interpret, return_stats=True,
+        kv_valid=kv_valid,
     )
     res = (
         q_l, k, v,
@@ -89,7 +118,9 @@ def _landmark_summary_fwd(meta, q_l, k, v, kv_valid=None):
 
 
 def _landmark_summary_bwd(meta, res, g):
-    scale, block_n, causal, interpret = meta
+    # block_c tiles the forward stream only; the backward kernel reconstructs
+    # the softmax from the (m, l) stats with its own (full-c) block geometry.
+    scale, block_n, _block_c, causal, interpret = meta
     q_l, k, v, bv, m, l, kv_valid = res
     dq, dk, dv = landmark_summary_bwd(
         q_l, k, v, bv, m, l, g, scale=scale, block_n=block_n, causal=causal,
@@ -194,7 +225,7 @@ def ss_core_factors(q_l, k_l, cfg: SSConfig, scale: float, n_k):
 # --------------------------------------------------------------------------
 @functools.partial(
     jax.jit,
-    static_argnames=("cfg", "scale", "block_n", "interpret"),
+    static_argnames=("cfg", "scale", "block_n", "block_c", "interpret"),
 )
 def ss_attention_fused(
     q: jnp.ndarray,
@@ -204,6 +235,7 @@ def ss_attention_fused(
     *,
     scale: Optional[float] = None,
     block_n: int = 512,
+    block_c: int = 0,
     interpret: bool = False,
     kv_valid=None,
 ) -> jnp.ndarray:
@@ -219,6 +251,10 @@ def ss_attention_fused(
     padded tail, so a bucket-padded prompt computes exactly what the
     unpadded call would (outputs at positions >= kv_valid are garbage the
     caller discards). Bidirectional self-attention only.
+
+    ``block_c`` (0 = all landmarks resident) tiles the B-side kernel's
+    landmark rows across an extra grid axis — an autotune degree of freedom
+    for large c * dv VMEM footprints (kernels/dispatch.py sweeps it).
     """
     *lead, n, d = q.shape
     n_k = k.shape[-2]
@@ -277,7 +313,8 @@ def ss_attention_fused(
     )
 
     bv = landmark_summary_op(
-        (scale, block_n, cfg.causal, interpret), q_l, kf, vf, kv_valid
+        (scale, block_n, block_c, cfg.causal, interpret), q_l, kf, vf,
+        kv_valid,
     )  # (b, c, dv)
     m_mat = jnp.matmul(u.astype(jnp.float32), bv.astype(jnp.float32)).astype(
         v.dtype

@@ -57,7 +57,7 @@ except ImportError:  # pragma: no cover - version-dependent import
 
 from repro.core.attention import SSConfig
 from repro.core.landmarks import onehot_segment_sums, segment_counts
-from repro.kernels.ops import _float0_like, ss_core_factors
+from repro.kernels.ops import _float0_like, flash_rescale, ss_core_factors
 from repro.kernels.ss_attention import landmark_summary, query_side
 from repro.kernels.ss_attention_bwd import landmark_summary_bwd, query_side_bwd
 
@@ -73,12 +73,14 @@ def _landmark_summary_sp_merge(meta, q_l, k, v, off):
         interpret=interpret, return_stats=True, kv_offset=off,
         kv_valid=n_glob, seq_len_k=n_glob,
     )
-    # Flash merge of the per-shard online-softmax partials. ``bv`` is the
-    # locally-normalized numerator (acc / l), so acc = bv * l.
+    # Flash merge of the per-shard online-softmax partials: re-anchor every
+    # shard's (l, acc) to the global row max (shared ops.flash_rescale —
+    # the same algebra the streaming decode state appends with), then psum.
+    # ``bv`` is the locally-normalized numerator (acc / l), so acc = bv * l.
     m_g = jax.lax.pmax(m, axes)
-    corr = l * jnp.exp(m - m_g)                        # (b, c, 1)
-    l_g = jax.lax.psum(corr, axes)
-    acc_g = jax.lax.psum(bv.astype(jnp.float32) * corr, axes)
+    l_r, acc_r = flash_rescale(m, l, bv.astype(jnp.float32) * l, m_g)
+    l_g = jax.lax.psum(l_r, axes)
+    acc_g = jax.lax.psum(acc_r, axes)
     bv_g = (acc_g / jnp.maximum(l_g, 1e-30)).astype(v.dtype)
     return bv_g, m_g, l_g
 

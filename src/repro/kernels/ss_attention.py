@@ -60,11 +60,13 @@ def _bounds_array(*vals) -> jnp.ndarray:
 
 
 def _b_side_mask(shape, i, *, block_n: int, seg: int, kv_offset=0,
-                 kv_valid=None):
+                 kv_valid=None, row_offset=0):
     """Key-validity x segment-causal mask for one streamed B-side block
     (shape (c, bn) at block index ``i``), or None when nothing is masked.
     ``kv_offset``/``kv_valid`` are *global* key coordinates and may be
-    Python ints (static path) or traced scalars (dynamic bounds). Shared by
+    Python ints (static path) or traced scalars (dynamic bounds);
+    ``row_offset`` is the global landmark index of the block's first row
+    (non-zero when the c axis is grid-tiled via ``block_c``). Shared by
     the forward step and the backward kernel so the two can never drift
     apart."""
     if kv_valid is None and not seg:
@@ -80,7 +82,7 @@ def _b_side_mask(shape, i, *, block_n: int, seg: int, kv_offset=0,
     if seg:
         # Segment-causal: landmark row r (the mean of segment r) attends
         # keys up to the end of its own segment only.
-        row = jax.lax.broadcasted_iota(jnp.int32, shape, 0)
+        row = jax.lax.broadcasted_iota(jnp.int32, shape, 0) + row_offset
         cmask = kv_pos < (row + 1) * seg
         mask = cmask if mask is None else jnp.logical_and(mask, cmask)
     return mask
@@ -92,10 +94,12 @@ def _b_side_mask(shape, i, *, block_n: int, seg: int, kv_offset=0,
 def _landmark_summary_step(
     q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr, *,
     scale: float, block_n: int, seg: int, kv_offset, kv_valid,
+    n_index, row_offset,
 ):
-    """One online-softmax step over key/value block ``i`` (shared by the
-    plain and the stats-emitting kernel)."""
-    i = pl.program_id(1)
+    """One online-softmax step over key/value block ``n_index`` (shared by
+    the plain and the stats-emitting kernel). ``row_offset`` is the global
+    landmark index of q_ref's first row (c-tiled grids)."""
+    i = n_index
 
     @pl.when(i == 0)
     def _init():
@@ -111,7 +115,7 @@ def _landmark_summary_step(
 
     mask = _b_side_mask(
         s.shape, i, block_n=block_n, seg=seg, kv_offset=kv_offset,
-        kv_valid=kv_valid,
+        kv_valid=kv_valid, row_offset=row_offset,
     )
     if mask is not None:
         s = jnp.where(mask, s, _NEG_INF)
@@ -138,16 +142,25 @@ def _landmark_summary_kernel(
     scale: float,
     n_valid: int,
     block_n: int,
+    block_c: int,
     seg: int,
     dyn: bool,
     stats: bool,
 ):
     """Shared kernel body. Ref layout (inputs, outputs, scratch):
 
-        [bounds (1,2) SMEM if dyn], q (1,c,d), k (1,bn,d), v (1,bn,dv),
-        o (1,c,dv) [, m_out (1,c,1), l_out (1,c,1) if stats],
-        m_scr (c,1), l_scr (c,1), acc_scr (c,dv)
+        [bounds (1,2) SMEM if dyn], q (1,bc,d), k (1,bn,d), v (1,bn,dv),
+        o (1,bc,dv) [, m_out (1,bc,1), l_out (1,bc,1) if stats],
+        m_scr (bc,1), l_scr (bc,1), acc_scr (bc,dv)
+
+    ``block_c`` > 0 means the landmark axis is grid-tiled: the grid is
+    (b, c_tiles, n_blocks) with the streamed n axis innermost (scratch
+    re-inits per tile at n block 0), otherwise (b, n_blocks).
     """
+    c_tiled = block_c > 0
+    n_ax = 2 if c_tiled else 1
+    n_index = pl.program_id(n_ax)
+    row_offset = pl.program_id(1) * block_c if c_tiled else 0
     if dyn:
         bounds_ref, *refs = refs
         kv_offset = bounds_ref[0, 0]
@@ -167,10 +180,10 @@ def _landmark_summary_kernel(
     _landmark_summary_step(
         q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr,
         scale=scale, block_n=block_n, seg=seg, kv_offset=kv_offset,
-        kv_valid=kv_valid,
+        kv_valid=kv_valid, n_index=n_index, row_offset=row_offset,
     )
 
-    @pl.when(pl.program_id(1) == pl.num_programs(1) - 1)
+    @pl.when(n_index == pl.num_programs(n_ax) - 1)
     def _finalize():
         denom = jnp.maximum(l_scr[...], 1e-30)
         o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
@@ -186,6 +199,7 @@ def landmark_summary(
     *,
     scale: float,
     block_n: int = 512,
+    block_c: int = 0,
     causal: bool = False,
     interpret: bool = False,
     return_stats: bool = False,
@@ -206,6 +220,12 @@ def landmark_summary(
     shard passes its shard offset; bucketed prefill passes the prompt length.
     ``seq_len_k`` is the *global* key length the causal segment geometry is
     built from (defaults to the local n).
+
+    ``block_c`` (0 = disabled) tiles the landmark rows over an extra grid
+    axis: rows are independent online-softmax streams, so each (1, block_c)
+    tile re-runs the n stream with a block_c-row scratch — smaller VMEM
+    accumulators at the price of re-reading K/V per tile. Only used when it
+    divides c; an autotune candidate, not a default.
     """
     b, c, d = q_l.shape
     n, dv = k.shape[1], v.shape[2]
@@ -218,11 +238,22 @@ def landmark_summary(
         v = jnp.pad(v, ((0, 0), (0, n_pad), (0, 0)))
     n_blocks = (n + n_pad) // block_n
 
+    c_tiled = 0 < block_c < c and c % block_c == 0
+    bc = block_c if c_tiled else c
+    if c_tiled:
+        grid = (b, c // bc, n_blocks)
+        q_idx = lambda bi, ci, i: (bi, ci, 0)      # noqa: E731
+        kv_idx = lambda bi, ci, i: (bi, i, 0)      # noqa: E731
+    else:
+        grid = (b, n_blocks)
+        q_idx = lambda bi, i: (bi, 0, 0)           # noqa: E731
+        kv_idx = lambda bi, i: (bi, i, 0)          # noqa: E731
+
     dyn = kv_offset is not None or kv_valid is not None
     in_specs = [
-        pl.BlockSpec((1, c, d), lambda bi, i: (bi, 0, 0)),
-        pl.BlockSpec((1, block_n, d), lambda bi, i: (bi, i, 0)),
-        pl.BlockSpec((1, block_n, dv), lambda bi, i: (bi, i, 0)),
+        pl.BlockSpec((1, bc, d), q_idx),
+        pl.BlockSpec((1, block_n, d), kv_idx),
+        pl.BlockSpec((1, block_n, dv), kv_idx),
     ]
     inputs = [q_l, k, v]
     if dyn:
@@ -235,32 +266,32 @@ def landmark_summary(
             _bounds_array(off, kv_valid if kv_valid is not None else off + n),
         )
     scratch_shapes = [
-        pltpu.VMEM((c, 1), jnp.float32),
-        pltpu.VMEM((c, 1), jnp.float32),
-        pltpu.VMEM((c, dv), jnp.float32),
+        pltpu.VMEM((bc, 1), jnp.float32),
+        pltpu.VMEM((bc, 1), jnp.float32),
+        pltpu.VMEM((bc, dv), jnp.float32),
     ]
     kernel = functools.partial(
         _landmark_summary_kernel, scale=scale, n_valid=n, block_n=block_n,
-        seg=seg, dyn=dyn, stats=return_stats,
+        block_c=bc if c_tiled else 0, seg=seg, dyn=dyn, stats=return_stats,
     )
     if not return_stats:
         return pl.pallas_call(
             kernel,
-            grid=(b, n_blocks),
+            grid=grid,
             in_specs=in_specs,
-            out_specs=pl.BlockSpec((1, c, dv), lambda bi, i: (bi, 0, 0)),
+            out_specs=pl.BlockSpec((1, bc, dv), q_idx),
             out_shape=jax.ShapeDtypeStruct((b, c, dv), v.dtype),
             scratch_shapes=scratch_shapes,
             interpret=interpret,
         )(*inputs)
 
-    stat_spec = pl.BlockSpec((1, c, 1), lambda bi, i: (bi, 0, 0))
+    stat_spec = pl.BlockSpec((1, bc, 1), q_idx)
     return pl.pallas_call(
         kernel,
-        grid=(b, n_blocks),
+        grid=grid,
         in_specs=in_specs,
         out_specs=(
-            pl.BlockSpec((1, c, dv), lambda bi, i: (bi, 0, 0)),
+            pl.BlockSpec((1, bc, dv), q_idx),
             stat_spec,
             stat_spec,
         ),

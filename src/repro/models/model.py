@@ -340,14 +340,19 @@ def _run_trunk(params, cfg: ModelConfig, x, positions, impl, mode):
         "hybrid": hymba_layer_forward,
     }[cfg.family]
     layer_fn = functools.partial(fwd, cfg=cfg, positions=positions, impl=impl, mode=mode)
-    if cfg.remat == "full":
+    # "auto" resolves to the per-arch default pinned from the remat study
+    # (configs/base.py REMAT_DEFAULTS, results/remat_study.json).
+    from repro.configs.base import resolve_remat
+
+    remat = resolve_remat(cfg.remat)
+    if remat == "full":
         layer_fn = jax.checkpoint(layer_fn)
-    elif cfg.remat == "dots":
+    elif remat == "dots":
         layer_fn = jax.checkpoint(
             layer_fn,
             policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
         )
-    elif cfg.remat == "ss_stats":
+    elif remat == "ss_stats":
         # Fused-attention training profile: across the layer boundary keep
         # only the (c, dv) landmark summary BV and the (c, 1) online-softmax
         # stats the custom-VJP kernels named in kernels/ops.py — everything

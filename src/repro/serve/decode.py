@@ -15,6 +15,12 @@ For each layer the spectral-shift decode computes
 
 Empty landmarks (segments not yet reached) are masked out of F/B and pinned
 to identity rows/cols of A so the pseudoinverse is well-posed.
+
+``ModelConfig.decode_streaming`` selects how the linear term is obtained:
+``"recompute"`` is the O(c*S*d)-per-token path above; ``"exact"``/``"frozen"``
+stream per-landmark online-softmax stats carried in the cache instead
+(serve/decode_state.py) — same output formula, the B/BV rebuild replaced by
+an O(c*d) flash-append plus (exact mode) a single-row recompute.
 """
 from __future__ import annotations
 
@@ -38,37 +44,24 @@ from repro.models.model import _embed_tokens, _unembed
 from repro.models.moe import moe_forward
 from repro.models.ssm import mlstm_step
 from repro.models.attention import _broadcast_kv
+from repro.serve.decode_state import (
+    STREAM_LEAVES,
+    landmark_counts,
+    landmark_means,
+    lmk_add,
+    masked_softmax as _masked_softmax,
+    segment_len,
+    ss_decode_attention_streaming,
+)
 
 Cache = Any
 
-
-# --------------------------------------------------------------------------
-# landmark bookkeeping
-# --------------------------------------------------------------------------
-def _segment_len(seq_max: int, c: int) -> int:
-    return -(-seq_max // c)
-
-
-def _landmark_counts(pos: jnp.ndarray, seq_max: int, c: int) -> jnp.ndarray:
-    """Tokens accumulated per landmark after ``pos+1`` tokens. (c,) int32."""
-    seg = _segment_len(seq_max, c)
-    return jnp.clip(pos + 1 - jnp.arange(c) * seg, 0, seg)
-
-
-def _lmk_add(sums: jnp.ndarray, value: jnp.ndarray, pos: jnp.ndarray, seq_max: int):
-    """sums (..., c, d) += value (..., d) routed to segment(pos)."""
-    c = sums.shape[-2]
-    seg = pos // _segment_len(seq_max, c)
-    onehot = jax.nn.one_hot(seg, c, dtype=sums.dtype)  # (c,)
-    return sums + onehot[..., :, None] * value[..., None, :]
-
-
-def _masked_softmax(scores, mask):
-    scores = scores.astype(jnp.float32)
-    scores = jnp.where(mask, scores, -1e30)
-    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
-    p = jnp.where(mask, p, 0.0)
-    return p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+# Landmark bookkeeping now lives in serve/decode_state.py (backed by the
+# shared core/landmarks helpers); these aliases keep the historical import
+# surface of this module intact.
+_segment_len = segment_len
+_landmark_counts = landmark_counts
+_lmk_add = lmk_add
 
 
 def ss_decode_attention(
@@ -86,12 +79,13 @@ def ss_decode_attention(
                                  # routing matches later decode steps even
                                  # though its K/V view is only prompt-long.
 ) -> jnp.ndarray:
-    s_max = k_cache.shape[2]
+    s_max = k_cache.shape[2]  # view length; the landmark horizon may differ
     c = q_lmk_sum.shape[2]
-    counts = _landmark_counts(pos, seq_max or s_max, c).astype(jnp.float32)  # (c,)
+    horizon = s_max if seq_max is None else seq_max
+    counts = _landmark_counts(pos, horizon, c)  # (c,) fp32
     valid = counts > 0
-    q_l = q_lmk_sum.astype(jnp.float32) / jnp.maximum(counts, 1.0)[:, None]
-    k_l = k_lmk_sum.astype(jnp.float32) / jnp.maximum(counts, 1.0)[:, None]
+    q_l = landmark_means(q_lmk_sum, counts)
+    k_l = landmark_means(k_lmk_sum, counts)
 
     f = _masked_softmax(
         jnp.einsum("bhqd,bhcd->bhqc", q.astype(jnp.float32), k_l) * scale,
@@ -166,7 +160,7 @@ def gqa_decode(p, cfg: ModelConfig, x, cache, pos, impl, seq_max=None):
         q = apply_rotary(q, sin[None], cos[None])
         k = apply_rotary(k, sin[None], cos[None])
 
-    s_max = seq_max or cache["k"].shape[2]
+    s_max = cache["k"].shape[2] if seq_max is None else seq_max
     new_cache = dict(cache)
     new_cache["k"] = _update_seq(cache["k"], k, pos)
     new_cache["v"] = _update_seq(cache["v"], v, pos)
@@ -178,10 +172,21 @@ def gqa_decode(p, cfg: ModelConfig, x, cache, pos, impl, seq_max=None):
     scale = dh**-0.5
     if impl == "spectral_shift":
         k_lmk = _broadcast_kv(new_cache["k_lmk"], cfg.num_heads)
-        out = ss_decode_attention(
-            q, kb, vb, new_cache["q_lmk"], k_lmk, pos, cfg, scale,
-            seq_max=s_max,
-        )
+        if cfg.decode_streaming == "recompute":
+            out = ss_decode_attention(
+                q, kb, vb, new_cache["q_lmk"], k_lmk, pos, cfg, scale,
+                seq_max=s_max,
+            )
+        else:
+            k_new = _broadcast_kv(k, cfg.num_heads)[:, :, 0]  # (B, H, d)
+            v_new = _broadcast_kv(v, cfg.num_heads)[:, :, 0]
+            stats = tuple(cache[name] for name in STREAM_LEAVES)
+            out, new_stats = ss_decode_attention_streaming(
+                q, k_new, v_new, new_cache["k"], new_cache["v"],
+                new_cache["q_lmk"], k_lmk, stats,
+                pos, cfg, scale, seq_max=s_max, mode=cfg.decode_streaming,
+            )
+            new_cache.update(dict(zip(STREAM_LEAVES, new_stats)))
     else:
         out = full_decode_attention(q, kb, vb, pos, scale)
     return jnp.einsum("bhse,hed->bsd", out, p["w_o"].astype(dt)), new_cache
@@ -210,7 +215,7 @@ def mla_decode(p, cfg: ModelConfig, x, cache, pos, impl, seq_max=None):
     new_cache["rope"] = jax.lax.dynamic_update_slice(
         cache["rope"], k_rope.astype(cache["rope"].dtype), (0, pos, 0)
     )
-    s_max = seq_max or cache["latent"].shape[1]
+    s_max = cache["latent"].shape[1] if seq_max is None else seq_max
     k_eff_new = jnp.concatenate([c_kv, k_rope], axis=-1)[:, 0]  # (B, r+dr)
     new_cache["k_lmk"] = _lmk_add(cache["k_lmk"], k_eff_new, pos, s_max)
     new_cache["q_lmk"] = _lmk_add(cache["q_lmk"], q_eff[:, :, 0], pos, s_max)
@@ -227,10 +232,24 @@ def mla_decode(p, cfg: ModelConfig, x, cache, pos, impl, seq_max=None):
         k_lmk = jnp.broadcast_to(
             new_cache["k_lmk"][:, None], new_cache["q_lmk"].shape[:2] + new_cache["k_lmk"].shape[1:]
         )
-        out_lat = ss_decode_attention(
-            q_eff, k_eff_b, lat_b, new_cache["q_lmk"], k_lmk, pos, cfg, scale,
-            seq_max=s_max,
-        )
+        if cfg.decode_streaming == "recompute":
+            out_lat = ss_decode_attention(
+                q_eff, k_eff_b, lat_b, new_cache["q_lmk"], k_lmk, pos, cfg,
+                scale, seq_max=s_max,
+            )
+        else:
+            b = x.shape[0]
+            k_new = jnp.broadcast_to(
+                k_eff_new[:, None], (b, h, k_eff_new.shape[-1])
+            )
+            v_new = jnp.broadcast_to(c_kv[:, 0][:, None], (b, h, r))
+            stats = tuple(cache[name] for name in STREAM_LEAVES)
+            out_lat, new_stats = ss_decode_attention_streaming(
+                q_eff, k_new, v_new, k_eff, lat, new_cache["q_lmk"],
+                k_lmk, stats, pos, cfg, scale, seq_max=s_max,
+                mode=cfg.decode_streaming,
+            )
+            new_cache.update(dict(zip(STREAM_LEAVES, new_stats)))
     else:
         out_lat = full_decode_attention(q_eff, k_eff_b, lat_b, pos, scale)
     out = jnp.einsum("bhsr,rhe->bhse", out_lat, p["w_uv"].astype(dt))

@@ -17,7 +17,15 @@ vLLM-style serving on top of ``decode_step``:
   allocated blocks and seeding the landmark sums — first-token latency is
   one tick instead of O(prompt_len) ticks of token replay;
 * every engine tick advances ALL decoding lanes with one jitted batched
-  step — admission/retirement never stalls other lanes.
+  step — admission/retirement never stalls other lanes;
+* decode attention state is **streamed** (serve/decode_state.py): the cache
+  carries per-landmark online-softmax (m, l, BV) partials that prefill
+  seeds in one shot and each decode tick extends in O(c*d), instead of
+  rebuilding the landmark-to-key softmax over the whole horizon per token.
+  ``ModelConfig.decode_streaming`` picks exact (token-identical, one-row
+  recompute per tick) / frozen (fully streamed; the engine runs a lazy
+  two-row rebase program when a lane crosses a segment boundary) /
+  recompute (the legacy O(c*S*d) path, kept as baseline).
 
 ``ServeConfig(paged=False, batched_prefill=False)`` reproduces the seed
 engine (dense per-lane caches, token-replay prefill) — kept as the
@@ -111,6 +119,27 @@ class ServeEngine:
         # whole decode tick (gather -> step -> commit) as one XLA program
         self._fused_step = self.kv.make_fused_step(jax.vmap(step))
         self.batched = serve.batched_prefill and prefill_supported(cfg)
+
+        # decode_streaming="frozen": the active landmark row streams with a
+        # drifting mean and is rebased lazily when a lane's write position
+        # crosses a segment boundary — a second jitted program (gather ->
+        # two-row recompute -> commit dense stats leaves), run only on
+        # boundary ticks (amortized O(c*d)/token; serve/decode_state.py).
+        from repro.serve.decode_state import segment_len
+
+        self._seg = segment_len(self.max_seq, cfg.num_landmarks)
+        self._rebases = 0
+        self._frozen_rebase = (
+            cfg.decode_streaming == "frozen"
+            and cfg.decode_attention_impl == "spectral_shift"
+            and cfg.family != "ssm"
+        )
+        if self._frozen_rebase:
+            from repro.serve.decode_state import make_rebase_fn
+
+            self._rebase_step = self.kv.make_rebase_step(
+                jax.vmap(make_rebase_fn(cfg, self.max_seq))
+            )
 
         # Warm the dispatch registry for the serving shapes: the decode key
         # family (n=1 step against the max_seq cache horizon) plus, for
@@ -283,6 +312,34 @@ class ServeEngine:
                 continue
             self._emit_token(i, logits[i, : self.cfg.vocab_size])
 
+        if self._frozen_rebase:
+            # Lanes whose just-written position starts a new landmark
+            # segment: rebase the newly-frozen row exactly and found the
+            # new active row over the horizon (skips lanes retired above).
+            hits = [
+                i for i in active
+                if not self.lanes[i].free
+                and (self.lanes[i].pos - 1) > 0
+                and (self.lanes[i].pos - 1) % self._seg == 0
+            ]
+            if hits:
+                self._run_rebase(hits)
+
+    def _run_rebase(self, hits: list[int]) -> None:
+        """Frozen-mode segment-boundary rebase for the given lanes."""
+        positions = np.zeros(self.max_lanes, np.int32)
+        flags = np.zeros(self.max_lanes, bool)
+        for i in hits:
+            positions[i] = self.lanes[i].pos - 1
+            flags[i] = True
+        tables = self.sched.tables()  # fresh: retirements freed blocks
+        nb_view = self.kv.view_blocks_needed(positions, hits)
+        self.kv._storage = list(self._rebase_step(
+            self.kv._storage, jnp.asarray(tables), jnp.asarray(positions),
+            jnp.asarray(flags), nb_view,
+        ))
+        self._rebases += len(hits)
+
     # -- maintenance -----------------------------------------------------------
     def defragment(self) -> int:
         """Compact live blocks onto the lowest pool ids (e.g. before
@@ -306,4 +363,7 @@ class ServeEngine:
             f"{self.decode_plan.impl}/b{self.decode_plan.block_n}"
             f"/{self.decode_plan.source}"
         )
+        st["decode_streaming"] = self.cfg.decode_streaming
+        if self._frozen_rebase:
+            st["rebases"] = self._rebases
         return st

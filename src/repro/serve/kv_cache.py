@@ -9,6 +9,13 @@ lower them abstractly and the sharding rules apply uniformly:
 * landmark state: the paper-technique addition — running segment SUMS of the
   query/key projections, (L, B, H, c, Dh). Counts are derived from ``pos``
   (segment j holds clip(pos+1 - j*l, 0, l) tokens), so means never go stale.
+* streaming B-side state (serve/decode_state.py): per-landmark online-
+  softmax partials ``bv_m``/``bv_l`` (L, B, H, c, 1) and the running BV
+  numerator ``bv_acc`` (L, B, H, c, Dv). Lane-dense like the landmark sums
+  (fixed size, no ``cache_seq`` axis); zeros is their valid empty state, so
+  they share the init/reset/prefill-overwrite machinery of the other dense
+  leaves. Ignored (carried through untouched) by the legacy
+  ``decode_streaming="recompute"`` path and by ``full`` decode attention.
 * ssm/hybrid states: mLSTM (C, n, m), mamba (h, conv tail) per layer.
 """
 from __future__ import annotations
@@ -29,22 +36,31 @@ def _gqa_cache(cfg: ModelConfig, b: int, s: int) -> dict:
         cfg.resolved_head_dim,
         cfg.num_landmarks,
     )
+    f32 = jnp.float32
     return {
         "k": ParamSpec((b, hkv, s, dh), (BATCH, "kv_heads", SEQ, None), init="zeros"),
         "v": ParamSpec((b, hkv, s, dh), (BATCH, "kv_heads", SEQ, None), init="zeros"),
         "q_lmk": ParamSpec((b, h, c, dh), (BATCH, "heads", None, None), init="zeros"),
         "k_lmk": ParamSpec((b, hkv, c, dh), (BATCH, "kv_heads", None, None), init="zeros"),
+        "bv_m": ParamSpec((b, h, c, 1), (BATCH, "heads", None, None), init="zeros", dtype=f32),
+        "bv_l": ParamSpec((b, h, c, 1), (BATCH, "heads", None, None), init="zeros", dtype=f32),
+        "bv_acc": ParamSpec((b, h, c, dh), (BATCH, "heads", None, None), init="zeros", dtype=f32),
     }
 
 
 def _mla_cache(cfg: ModelConfig, b: int, s: int) -> dict:
     r, dr, c, h = cfg.kv_lora_rank, cfg.rope_head_dim, cfg.num_landmarks, cfg.num_heads
     de = r + dr  # effective (absorbed) key dim
+    f32 = jnp.float32
     return {
         "latent": ParamSpec((b, s, r), (BATCH, SEQ, None), init="zeros"),
         "rope": ParamSpec((b, s, dr), (BATCH, SEQ, None), init="zeros"),
         "q_lmk": ParamSpec((b, h, c, de), (BATCH, "heads", None, None), init="zeros"),
         "k_lmk": ParamSpec((b, c, de), (BATCH, None, None), init="zeros"),
+        "bv_m": ParamSpec((b, h, c, 1), (BATCH, "heads", None, None), init="zeros", dtype=f32),
+        "bv_l": ParamSpec((b, h, c, 1), (BATCH, "heads", None, None), init="zeros", dtype=f32),
+        # values are the kv_lora latents in absorbed MLA decode
+        "bv_acc": ParamSpec((b, h, c, r), (BATCH, "heads", None, None), init="zeros", dtype=f32),
     }
 
 

@@ -294,6 +294,47 @@ class PagedKVCache:
 
         return call
 
+    def make_rebase_step(self, vmapped_rebase):
+        """Jitted frozen-mode boundary rebase (serve/decode_state.py):
+        gather lane views from the pool -> vmapped ``rebase_streaming`` ->
+        commit the lane-dense streaming-stat leaves of flagged lanes. The
+        paged K/V pool is read (the rebase recomputes two landmark rows over
+        the horizon) but never written, so only dense leaves commit.
+
+        Returns ``fn(storage, tables, positions, flags, n_view_blocks) ->
+        new_storage``; like ``make_fused_step``, one XLA program compiles
+        per distinct ``n_view_blocks`` and pool buffers are donated."""
+        infos, treedef = self.infos, self.treedef
+        paged = self.paged
+        n_lanes = self.max_lanes
+
+        def fused(storage, tables, positions, flags):
+            views = [
+                arr if (not paged or info.seq_axis is None)
+                else self._gather_leaf(arr, info, tables)
+                for arr, info in zip(storage, infos)
+            ]
+            cache = jax.tree_util.tree_unflatten(treedef, views)
+            new_cache = vmapped_rebase(cache, positions)
+            new_leaves = jax.tree_util.tree_leaves(new_cache)
+            out = []
+            for arr, new, info in zip(storage, new_leaves, infos):
+                if not paged or info.seq_axis is None:
+                    mask = flags.reshape((n_lanes,) + (1,) * (arr.ndim - 1))
+                    out.append(jnp.where(mask, new.astype(arr.dtype), arr))
+                else:
+                    out.append(arr)
+            return out
+
+        jitted = jax.jit(fused, donate_argnums=(0,))
+
+        def call(storage, tables, positions, flags, n_view_blocks):
+            if self.paged:
+                tables = tables[:, :n_view_blocks]
+            return jitted(storage, tables, positions, flags)
+
+        return call
+
     def view_blocks_needed(self, positions, lanes) -> int:
         """Bucketed (next power of two) block count covering the deepest
         active position; a handful of tick programs total."""

@@ -10,6 +10,14 @@ the cache seeded directly:
 * K/V (or MLA latent/rope) for all prompt positions in one projection;
 * ``q_lmk``/``k_lmk`` running sums as masked segment sums over the prompt
   (exactly what per-token ``_lmk_add`` would have accumulated);
+* the streaming B-side decode state ``bv_m``/``bv_l``/``bv_acc``
+  (serve/decode_state.py), seeded exactly for every reached landmark row:
+  ``ss_fused`` streams the prompt through the ``landmark_summary`` kernel
+  once and its online-softmax (m, l, BV) land directly in the cache;
+  ``replay`` uses the jnp recompute. Decode then *appends* to this state
+  instead of rebuilding B over the horizon each tick — and because
+  scheduler preemption recomputes through this same prefill path on
+  re-admission, a preempted request's streaming state is rebuilt exactly;
 * per-position attention outputs, three ways (``prefill_impl``):
     - ``replay``  — the decode-path attention math vmapped over positions
       (per-position landmark prefixes), numerically equivalent to feeding
@@ -55,6 +63,13 @@ from repro.serve.decode import (
     _segment_len,
     full_decode_attention,
     ss_decode_attention,
+)
+from repro.serve.decode_state import (
+    landmark_counts,
+    landmark_means,
+    mask_stats_rows,
+    recompute_stats,
+    segment_len,
 )
 from repro.serve.kv_cache import cache_specs
 
@@ -142,6 +157,45 @@ def _attend_prefill(
     return jnp.moveaxis(outs[:, :, :, 0, :], 0, 2)      # (B, H, n, dv)
 
 
+def _seed_stream_stats(cfg: ModelConfig, prefill_impl: str, q_l, kb, vb,
+                       n_valid, scale, seq_max: int, block_n: int):
+    """Streaming decode state (serve/decode_state.py) for one layer, seeded
+    in one shot from the whole prompt: per-landmark online-softmax partials
+    (m, l, acc) over keys 0..n_valid-1, keyed by the cache's horizon-
+    segmented landmark means ``q_l`` (B, H, c, d).
+
+    ``ss_fused`` prefill streams the prompt through the ``landmark_summary``
+    Pallas kernel once (kv_valid-masked, so bucket padding stays invisible)
+    and hands the kernel's (m, l, BV) directly into the cache — the
+    prefill->decode handoff costs one O(n) kernel pass. Other modes (replay,
+    degenerate <= c windows) use the jnp ``recompute_stats``. Rows past the
+    active segment are zeroed (the streaming invariant)."""
+    c = cfg.num_landmarks
+    pos_last = n_valid - 1
+    if cfg.decode_attention_impl != "spectral_shift":
+        z = jnp.zeros((*q_l.shape[:3], 1), jnp.float32)
+        return z, z, jnp.zeros((*q_l.shape[:3], vb.shape[-1]), jnp.float32)
+    if prefill_impl == "ss_fused" and kb.shape[2] > c:
+        from repro.kernels.ss_attention import landmark_summary
+
+        b, h, n, d = kb.shape
+        dv = vb.shape[-1]
+        bv, m, l = landmark_summary(
+            q_l.reshape(b * h, c, d),
+            kb.reshape(b * h, n, d),
+            vb.reshape(b * h, n, dv),
+            scale=scale, block_n=block_n, interpret=cfg.kernels_interpret,
+            return_stats=True, kv_valid=n_valid,
+        )
+        m = m.reshape(b, h, c, 1)
+        l = l.reshape(b, h, c, 1)
+        acc = bv.astype(jnp.float32).reshape(b, h, c, dv) * l
+    else:
+        m, l, acc = recompute_stats(q_l, kb, vb, pos_last, scale)
+    keep = jnp.arange(c) <= pos_last // segment_len(seq_max, c)
+    return mask_stats_rows((m, l, acc), keep)
+
+
 # --------------------------------------------------------------------------
 # per-layer prefill (mirrors gqa_decode / mla_decode, vectorized over n)
 # --------------------------------------------------------------------------
@@ -169,14 +223,22 @@ def _gqa_prefill(p, cfg: ModelConfig, x, sin, cos, t_mask, oh, seq_max, impl,
     vb = _broadcast_kv(v_m, cfg.num_heads)
     k_sums_b = jax.vmap(_broadcast_kv, (0, None))(k_sums, cfg.num_heads)
 
+    scale = cfg.resolved_head_dim ** -0.5
     out = _attend_prefill(
         cfg, impl, prefill_impl, q, kb, vb, q_sums, k_sums_b,
-        cfg.resolved_head_dim ** -0.5, seq_max, t_mask, n_valid, block_n,
+        scale, seq_max, t_mask, n_valid, block_n,
+    )
+    c = cfg.num_landmarks
+    counts = landmark_counts(n_valid - 1, seq_max, c)
+    bv_m, bv_l, bv_acc = _seed_stream_stats(
+        cfg, prefill_impl, landmark_means(q_sums[-1], counts), kb, vb,
+        n_valid, scale, seq_max, block_n,
     )
     new_cache = {
         "k": k_m, "v": v_m,
         "q_lmk": q_sums[-1].astype(jnp.float32),
         "k_lmk": k_sums[-1].astype(jnp.float32),
+        "bv_m": bv_m, "bv_l": bv_l, "bv_acc": bv_acc,
     }
     attn = jnp.einsum("bhse,hed->bsd", out.astype(dt), p["w_o"].astype(dt))
     return attn, new_cache
@@ -214,16 +276,24 @@ def _mla_prefill(p, cfg: ModelConfig, x, sin, cos, t_mask, oh, seq_max, impl,
     k_sums_b = jnp.broadcast_to(
         k_sums[:, :, None], (*k_sums.shape[:2], h, *k_sums.shape[2:])
     )
+    scale = (dh + dr) ** -0.5
     out_lat = _attend_prefill(
         cfg, impl, prefill_impl, q_eff, k_eff_b, lat_b, q_sums, k_sums_b,
-        (dh + dr) ** -0.5, seq_max, t_mask, n_valid, block_n,
+        scale, seq_max, t_mask, n_valid, block_n,
     )
     out = jnp.einsum("bhsr,rhe->bhse", out_lat.astype(dt), p["w_uv"].astype(dt))
     attn = jnp.einsum("bhse,hed->bsd", out, p["w_o"].astype(dt))
+    c = cfg.num_landmarks
+    counts = landmark_counts(n_valid - 1, seq_max, c)
+    bv_m, bv_l, bv_acc = _seed_stream_stats(
+        cfg, prefill_impl, landmark_means(q_sums[-1], counts), k_eff_b,
+        lat_b, n_valid, scale, seq_max, block_n,
+    )
     new_cache = {
         "latent": c_kv_m, "rope": k_rope_m,
         "q_lmk": q_sums[-1].astype(jnp.float32),
         "k_lmk": k_sums[-1].astype(jnp.float32),
+        "bv_m": bv_m, "bv_l": bv_l, "bv_acc": bv_acc,
     }
     return attn, new_cache
 

@@ -255,3 +255,50 @@ class TestKeyFamilies:
             plan = dispatch.get_plan(key, autotune_enabled=True, tune_fn=boom)
             assert plan.source == "heuristic"
         assert not calls
+
+
+class TestBlockCPlans:
+    """block_c in the Plan/value layer: v2 cache round-trip, legacy v1
+    caches stay readable, and the measured sweep covers the tile grid."""
+
+    def test_cache_v2_round_trip_with_block_c(self):
+        key = dispatch.make_key(8192, 64, 128, jnp.bfloat16, True, backend="tpu")
+        plan = dispatch.Plan(
+            impl="fused", block_n=1024, block_c=32, source="autotuned"
+        )
+        dispatch.register_plan(key, plan)
+        path = dispatch.save_cache()
+        with open(path) as f:
+            payload = json.load(f)
+        assert payload["version"] == 2
+        assert payload["plans"][key.encode()]["block_c"] == 32
+        dispatch.clear_registry()
+        dispatch.load_cache()
+        got = dispatch.get_plan(key)
+        assert (got.impl, got.block_n, got.block_c) == ("fused", 1024, 32)
+
+    def test_legacy_v1_cache_readable(self):
+        key = dispatch.make_key(4096, 64, 64, jnp.float32, False, backend="tpu")
+        payload = {
+            "version": 1,
+            "plans": {key.encode(): {"impl": "fused", "block_n": 256}},
+        }
+        with open(dispatch.cache_path(), "w") as f:
+            json.dump(payload, f)
+        assert dispatch.load_cache() == 1
+        got = dispatch.get_plan(key)
+        assert (got.impl, got.block_n, got.block_c) == ("fused", 256, 0)
+        assert got.source == "cache"
+
+    def test_autotune_sweeps_block_c_grid(self):
+        plan = dispatch.autotune(
+            128, 16, 16, causal=False, block_candidates=(64,),
+            block_c_candidates=(0, 8), reps=1,
+        )
+        assert plan.source == "autotuned"
+        assert plan.block_c in (0, 8)
+        # Winner round-trips through the on-disk cache with its tile size.
+        key = dispatch.make_key(128, 16, 16, jnp.float32, False)
+        dispatch.clear_registry()
+        dispatch.load_cache()
+        assert dispatch.get_plan(key).block_c == plan.block_c

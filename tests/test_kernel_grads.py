@@ -84,7 +84,8 @@ class TestFiniteDifferences:
         q_l = jax.random.normal(jax.random.PRNGKey(0), (b, c, d)) * 0.5
         k = jax.random.normal(jax.random.PRNGKey(1), (b, n, d)) * 0.5
         v = jax.random.normal(jax.random.PRNGKey(2), (b, n, d))
-        meta = (d**-0.5, 16, causal, True)  # (scale, block_n, causal, interpret)
+        # (scale, block_n, block_c, causal, interpret)
+        meta = (d**-0.5, 16, 0, causal, True)
         jax.test_util.check_grads(
             lambda *a: landmark_summary_op(meta, *a),
             (q_l, k, v),
@@ -193,7 +194,7 @@ class TestBF16GradParity:
         k = (jax.random.normal(ks[1], (b, n, d)) * 0.5).astype(jnp.bfloat16)
         v = jax.random.normal(ks[2], (b, n, d)).astype(jnp.bfloat16)
         w = jax.random.normal(ks[3], (b, c, d))
-        meta = (d**-0.5, 128, False, True)
+        meta = (d**-0.5, 128, 0, False, True)
         g16 = jax.grad(
             lambda *a: jnp.sum(
                 landmark_summary_op(meta, *a).astype(jnp.float32) * w

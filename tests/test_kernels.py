@@ -391,3 +391,56 @@ class TestMaskedFusedAttention:
                 q, k, v, SSConfig(num_landmarks=8, causal=True),
                 interpret=True, kv_valid=jnp.int32(40),
             )
+
+
+class TestBlockCTiling:
+    """block_c grid tiling of the B-side kernel (autotune candidate): each
+    landmark-row tile re-runs the key stream with its own scratch — results
+    must be bit-comparable to the untiled kernel."""
+
+    @pytest.mark.parametrize("block_c", [4, 8])
+    @pytest.mark.parametrize("causal", [False, True])
+    def test_tiled_matches_untiled(self, block_c, causal):
+        q, k, v, q_l, _ = _inputs(2, 200, 32, 32, 16, jnp.float32, seed=30)
+        scale = 1 / 32**0.5
+        ref = landmark_summary(
+            q_l, k, v, scale=scale, block_n=64, causal=causal, interpret=True
+        )
+        out, m, l = landmark_summary(
+            q_l, k, v, scale=scale, block_n=64, block_c=block_c,
+            causal=causal, interpret=True, return_stats=True,
+        )
+        np.testing.assert_allclose(out, ref, atol=1e-6, rtol=1e-6)
+        _, m_ref, l_ref = landmark_summary(
+            q_l, k, v, scale=scale, block_n=64, causal=causal,
+            interpret=True, return_stats=True,
+        )
+        np.testing.assert_allclose(m, m_ref, atol=1e-6, rtol=1e-6)
+        np.testing.assert_allclose(l, l_ref, atol=1e-6, rtol=1e-6)
+
+    def test_non_divisor_block_c_ignored(self):
+        q, k, v, q_l, _ = _inputs(1, 128, 32, 32, 16, jnp.float32, seed=31)
+        scale = 1 / 32**0.5
+        ref = landmark_summary(q_l, k, v, scale=scale, block_n=64, interpret=True)
+        out = landmark_summary(
+            q_l, k, v, scale=scale, block_n=64, block_c=5, interpret=True
+        )
+        np.testing.assert_allclose(out, ref, atol=0, rtol=0)
+
+    def test_tiled_with_kv_valid(self):
+        q, k, v, q_l, _ = _inputs(2, 192, 32, 32, 16, jnp.float32, seed=32)
+        scale = 1 / 32**0.5
+        n_valid = 150
+        ref = ref_landmark_summary(q_l, k[:, :n_valid], v[:, :n_valid], scale)
+        out = landmark_summary(
+            q_l, k, v, scale=scale, block_n=64, block_c=8, interpret=True,
+            kv_valid=jnp.int32(n_valid),
+        )
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    def test_fused_attention_block_c_parity(self):
+        q, k, v, *_ = _inputs(2, 256, 32, 32, 16, jnp.float32, seed=33)
+        cfg = SSConfig(num_landmarks=16)
+        ref = ss_attention_fused(q, k, v, cfg, interpret=True)
+        out = ss_attention_fused(q, k, v, cfg, block_c=8, interpret=True)
+        np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)

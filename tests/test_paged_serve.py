@@ -431,3 +431,283 @@ def test_engine_honors_autotune_cache_override(qwen, tmp_path):
         assert eng.decode_plan.source == "cache"
     finally:
         dispatch.clear_registry()  # drop the process-wide cache override
+
+
+# ==========================================================================
+# Streaming decode state (serve/decode_state.py)
+# ==========================================================================
+def _stats_logmass(lc):
+    """Anchor-invariant total softmax mass per row: log(l) + m."""
+    return np.log(np.maximum(np.asarray(lc["bv_l"], np.float64), 1e-300)) \
+        + np.asarray(lc["bv_m"], np.float64)
+
+
+def _layer0(cache):
+    layers = cache["layers"]
+    if isinstance(layers, list):
+        return layers[0]
+    return jax.tree.map(lambda a: a[0], layers)
+
+
+class TestStreamingDecode:
+    def test_exact_token_identical_dense_and_paged(self, qwen):
+        """decode_streaming="exact" produces greedy outputs token-identical
+        to the legacy recompute path, on both engines."""
+        cfg, params = qwen
+        reqs = _requests(cfg, 5, seed=21)
+        outs = {}
+        for mode in ("recompute", "exact"):
+            mcfg = dataclasses.replace(cfg, decode_streaming=mode)
+            ref, _ = _run(mcfg, params, reqs, DENSE, stagger=2)
+            out, eng = _run(mcfg, params, reqs, BASE, stagger=2)
+            assert ref == out, f"paged != dense under {mode}"
+            assert eng.stats()["decode_streaming"] == mode
+            outs[mode] = ref
+        assert outs["recompute"] == outs["exact"]
+
+    def test_exact_stats_match_recompute_invariant(self, qwen):
+        """After token-by-token decode in exact mode, every reached row's
+        (m, l, acc) equals the one-shot exact recompute (same softmax, fp
+        reassociation only); unreached rows hold the zero state."""
+        from repro.models.attention import _broadcast_kv
+        from repro.serve.decode_state import (
+            landmark_counts, landmark_means, recompute_stats, segment_len,
+        )
+
+        cfg, params = qwen
+        s_max = 64
+        rng = np.random.default_rng(22)
+        n = 23
+        prompt = rng.integers(3, cfg.vocab_size, n)
+        cache = init_params(cache_specs(cfg, 1, s_max), jax.random.PRNGKey(1))
+        step = jax.jit(lambda c, t: decode_step(params, cfg, c, t,
+                                                seq_max=s_max))
+        for i in range(n):
+            _, cache = step(cache, jnp.asarray(prompt[None, i:i+1], jnp.int32))
+        lc = _layer0(cache)
+        pos = n - 1
+        c = cfg.num_landmarks
+        counts = landmark_counts(jnp.asarray(pos), s_max, c)
+        q_l = landmark_means(lc["q_lmk"], counts)
+        kb = _broadcast_kv(lc["k"], cfg.num_heads)
+        vb = _broadcast_kv(lc["v"], cfg.num_heads)
+        m, l, acc = recompute_stats(
+            q_l, kb, vb, pos, cfg.resolved_head_dim ** -0.5,
+            row_valid=counts > 0,
+        )
+        active = pos // segment_len(s_max, c)
+        bv_ref = np.asarray(acc / jnp.maximum(l, 1e-30))
+        bv_got = np.asarray(lc["bv_acc"] / jnp.maximum(lc["bv_l"], 1e-30))
+        np.testing.assert_allclose(
+            bv_got[..., : active + 1, :], bv_ref[..., : active + 1, :],
+            atol=2e-4, rtol=2e-4,
+        )
+        # anchor-invariant mass agrees on reached rows
+        mass_ref = np.log(np.maximum(np.asarray(l, np.float64), 1e-300)) \
+            + np.asarray(m, np.float64)
+        np.testing.assert_allclose(
+            _stats_logmass(lc)[..., : active + 1, :],
+            mass_ref[..., : active + 1, :], atol=1e-4, rtol=1e-4,
+        )
+        # unreached rows: exact zero state
+        for name in ("bv_m", "bv_l", "bv_acc"):
+            assert np.all(np.asarray(lc[name])[..., active + 1:, :] == 0)
+
+    def test_prefill_rebuilds_streaming_state(self, qwen):
+        """The preemption-recompute path (batched prefill on re-admission)
+        rebuilds the same streaming stats token-by-token decode had
+        accumulated: normalized BV and total mass agree row-for-row."""
+        cfg, params = qwen
+        s_max = 64
+        rng = np.random.default_rng(23)
+        n = 21
+        prompt = rng.integers(3, cfg.vocab_size, n)
+        cache = init_params(cache_specs(cfg, 1, s_max), jax.random.PRNGKey(1))
+        step = jax.jit(lambda c, t: decode_step(params, cfg, c, t,
+                                                seq_max=s_max))
+        for i in range(n):
+            _, cache = step(cache, jnp.asarray(prompt[None, i:i+1], jnp.int32))
+        tokens = np.zeros((1, 32), np.int32)
+        tokens[0, :n] = prompt
+        _, pcache = batched_prefill(
+            params, cfg, jnp.asarray(tokens), jnp.asarray(n, jnp.int32),
+            seq_max=s_max,
+        )
+        lc_d, lc_p = _layer0(cache), _layer0(pcache)
+        bv_d = np.asarray(lc_d["bv_acc"] / jnp.maximum(lc_d["bv_l"], 1e-30))
+        bv_p = np.asarray(lc_p["bv_acc"] / jnp.maximum(lc_p["bv_l"], 1e-30))
+        np.testing.assert_allclose(bv_p, bv_d, atol=2e-4, rtol=2e-4)
+        np.testing.assert_allclose(
+            _stats_logmass(lc_p), _stats_logmass(lc_d), atol=1e-4, rtol=1e-4,
+        )
+
+    def test_preemption_roundtrip_streaming_engine(self, qwen):
+        """Pool pressure forces preemption; the preempted request recomputes
+        through prefill and the streaming state survives the round trip. In
+        exact mode that means token-identity with the dense reference; in
+        frozen mode (approximate by design, and prefill-path dependent) the
+        preempting run must be deterministic and complete."""
+        cfg, params = qwen
+        serve = dataclasses.replace(BASE, max_lanes=3, num_blocks=12)
+
+        mcfg = dataclasses.replace(cfg, decode_streaming="exact")
+        reqs = _requests(mcfg, 4, seed=24, lo=20, hi=21, max_new=30)
+        ref, _ = _run(mcfg, params, reqs,
+                      dataclasses.replace(DENSE, max_lanes=3))
+        out, eng = _run(mcfg, params, reqs, serve)
+        assert eng.stats()["preemptions"] > 0
+        assert ref == out
+
+        fcfg = dataclasses.replace(cfg, decode_streaming="frozen")
+        out1, eng1 = _run(fcfg, params, reqs, serve)
+        out2, eng2 = _run(fcfg, params, reqs, serve)
+        assert eng1.stats()["preemptions"] > 0
+        assert eng1.stats()["finished"] == 4
+        assert out1 == out2
+
+    def test_frozen_boundary_rebase_correctness(self, qwen):
+        """Frozen mode with boundary rebases: every frozen row's stats equal
+        the exact recompute (the drift its active phase accumulated is
+        cleared by the lazy rebase); only the active row may drift."""
+        from repro.models.attention import _broadcast_kv
+        from repro.serve.decode_state import (
+            landmark_counts, landmark_means, make_rebase_fn,
+            recompute_stats, segment_len,
+        )
+
+        cfg, params = qwen
+        mcfg = dataclasses.replace(cfg, decode_streaming="frozen")
+        s_max = 48
+        c = mcfg.num_landmarks
+        seg = segment_len(s_max, c)  # 3 tokens per segment
+        rng = np.random.default_rng(25)
+        n = 20
+        prompt = rng.integers(3, mcfg.vocab_size, n)
+        cache = init_params(cache_specs(mcfg, 1, s_max), jax.random.PRNGKey(1))
+        step = jax.jit(lambda ca, t: decode_step(params, mcfg, ca, t,
+                                                 seq_max=s_max))
+        rebase = jax.jit(make_rebase_fn(mcfg, s_max))
+        for i in range(n):
+            _, cache = step(cache, jnp.asarray(prompt[None, i:i+1], jnp.int32))
+            if i > 0 and i % seg == 0:  # the engine's boundary trigger
+                cache = rebase(cache, jnp.asarray(i))
+        lc = _layer0(cache)
+        pos = n - 1
+        counts = landmark_counts(jnp.asarray(pos), s_max, c)
+        q_l = landmark_means(lc["q_lmk"], counts)
+        kb = _broadcast_kv(lc["k"], mcfg.num_heads)
+        vb = _broadcast_kv(lc["v"], mcfg.num_heads)
+        m, l, acc = recompute_stats(
+            q_l, kb, vb, pos, mcfg.resolved_head_dim ** -0.5,
+            row_valid=counts > 0,
+        )
+        active = pos // seg
+        assert active >= 2, "test needs several frozen segments"
+        bv_ref = np.asarray(acc / jnp.maximum(l, 1e-30))
+        bv_got = np.asarray(lc["bv_acc"] / jnp.maximum(lc["bv_l"], 1e-30))
+        np.testing.assert_allclose(  # frozen rows: exact after rebases
+            bv_got[..., :active, :], bv_ref[..., :active, :],
+            atol=2e-4, rtol=2e-4,
+        )
+
+    def test_frozen_engine_paged_matches_dense(self, qwen):
+        """Frozen mode end to end: with the prefill strategy held fixed
+        (frozen state is prefill-path dependent by design — batched prefill
+        seeds exact stats, replay accumulates bounded drift), paged and
+        dense storage agree token-for-token and rebases fire in both."""
+        cfg, params = qwen
+        mcfg = dataclasses.replace(cfg, decode_streaming="frozen")
+        reqs = _requests(mcfg, 4, seed=26, max_new=16)
+        dense_batched = dataclasses.replace(BASE, paged=False)
+        ref, eng_d = _run(mcfg, params, reqs, dense_batched)
+        out, eng_p = _run(mcfg, params, reqs, BASE)
+        assert ref == out
+        assert eng_p.stats()["rebases"] > 0
+        assert eng_d.stats()["rebases"] > 0
+
+    def test_ss_fused_prefill_stats_handoff(self, qwen):
+        """ss_fused prefill hands the landmark_summary kernel's (m, l, BV)
+        into the cache: equivalent to the jnp recompute on reached rows,
+        zero elsewhere — and greedy decode continues identically from it."""
+        from repro.models.attention import _broadcast_kv
+        from repro.serve.decode_state import (
+            landmark_counts, landmark_means, mask_stats_rows,
+            recompute_stats, segment_len,
+        )
+
+        cfg, params = qwen
+        s_max = 64
+        rng = np.random.default_rng(27)
+        n = 21  # > num_landmarks: the masked-kernel regime
+        prompt = rng.integers(3, cfg.vocab_size, n)
+        tokens = np.zeros((1, 32), np.int32)
+        tokens[0, :n] = prompt
+        _, pc = batched_prefill(
+            params, cfg, jnp.asarray(tokens), jnp.asarray(n, jnp.int32),
+            seq_max=s_max, prefill_impl="ss_fused",
+        )
+        lc = _layer0(pc)
+        c = cfg.num_landmarks
+        counts = landmark_counts(jnp.asarray(n - 1), s_max, c)
+        q_l = landmark_means(lc["q_lmk"], counts)
+        kb = _broadcast_kv(lc["k"], cfg.num_heads)
+        vb = _broadcast_kv(lc["v"], cfg.num_heads)
+        keep = jnp.arange(c) <= (n - 1) // segment_len(s_max, c)
+        m, l, acc = mask_stats_rows(
+            recompute_stats(q_l, kb, vb, n - 1,
+                            cfg.resolved_head_dim ** -0.5),
+            keep,
+        )
+        bv_ref = np.asarray(acc / jnp.maximum(l, 1e-30))
+        bv_got = np.asarray(lc["bv_acc"] / jnp.maximum(lc["bv_l"], 1e-30))
+        np.testing.assert_allclose(bv_got, bv_ref, atol=1e-4, rtol=1e-4)
+        for name in ("bv_m", "bv_l", "bv_acc"):
+            assert np.all(
+                np.asarray(lc[name])[..., int(np.sum(keep)):, :] == 0
+            )
+        # greedy continuation from the kernel-seeded cache == from the
+        # jnp-recomputed stats (exact mode overwrites only the active row)
+        lc_fix = dict(lc, bv_m=m, bv_l=l, bv_acc=acc)
+        if isinstance(pc["layers"], list):
+            pc_fix = dict(pc, layers=[lc_fix] + pc["layers"][1:])
+        else:
+            pc_fix = dict(pc, layers=jax.tree.map(
+                lambda full, one: full.at[0].set(one), pc["layers"], lc_fix))
+        step = jax.jit(lambda ca, t: decode_step(params, cfg, ca, t,
+                                                 seq_max=s_max))
+        tok = jnp.asarray([[prompt[-1]]], jnp.int32)
+        outs = []
+        for start in (pc, pc_fix):
+            ca, t = start, tok
+            toks = []
+            for _ in range(6):
+                lg, ca = step(ca, t)
+                t = jnp.argmax(lg[:, :, : cfg.vocab_size], -1).astype(jnp.int32)
+                toks.append(int(t[0, 0]))
+            outs.append(toks)
+        assert outs[0] == outs[1]
+
+    def test_stream_append_chain_equals_recompute(self):
+        """decode_state unit: a chain of flash-appends from the zero state
+        equals the one-shot exact stats (the algebra the whole subsystem
+        rests on), including the zeros-as-empty anchor convention."""
+        from repro.serve.decode_state import recompute_stats, stream_append
+
+        rng = np.random.default_rng(28)
+        B, H, c, d, S = 1, 2, 4, 8, 12
+        q_l = jnp.asarray(rng.normal(size=(B, H, c, d)), jnp.float32)
+        ks = jnp.asarray(rng.normal(size=(B, H, S, d)), jnp.float32)
+        vs = jnp.asarray(rng.normal(size=(B, H, S, d)), jnp.float32)
+        scale = 0.5
+        stats = (jnp.zeros((B, H, c, 1)), jnp.zeros((B, H, c, 1)),
+                 jnp.zeros((B, H, c, d)))
+        for t in range(S):
+            stats = stream_append(stats, q_l, ks[:, :, t], vs[:, :, t], scale)
+        m_r, l_r, acc_r = recompute_stats(q_l, ks, vs, S - 1, scale)
+        bv_stream = stats[2] / jnp.maximum(stats[1], 1e-30)
+        bv_ref = acc_r / jnp.maximum(l_r, 1e-30)
+        np.testing.assert_allclose(bv_stream, bv_ref, atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(jnp.log(stats[1]) + stats[0]),
+            np.asarray(jnp.log(l_r) + m_r), atol=1e-5, rtol=1e-5,
+        )
