@@ -1,4 +1,5 @@
-"""Per-token decode latency vs cache horizon: recompute vs streaming state.
+"""Per-token decode latency and HBM traffic vs cache horizon:
+recompute vs streaming state x gather vs gather-free paged ticks.
 
 The legacy spectral-shift decode rebuilds the landmark-to-key softmax
 ``B = softmax(Q~ K^T)`` and its value summary ``B V`` over the whole cache
@@ -11,15 +12,39 @@ online-softmax partials in the cache instead:
     frozen  — fully streamed O(c*d) per tick (near-flat in S) plus an
               amortized two-row rebase at segment boundaries.
 
-Cells: ``dense`` drives a donated jitted ``decode_step`` on a lane-dense
-cache (pure decode-math cost); ``paged`` drives the block-pool fused tick
-(gather -> step -> scatter), whose gather adds an O(S)-bytes term in every
-mode. Caches are seeded synthetically (random K/V + consistent landmark
-sums + exact streaming stats) so the 32k cell doesn't need a 32k-token
-prefill. Frozen-mode per-token numbers charge the boundary rebase at its
-amortized steady-state rate: the rebase program is timed separately and
-one rebase per ``seg = ceil(S/c)`` tokens is added (the engine fires it
-exactly once per segment), reported alongside as ``rebase_ms``.
+Storage/tick-program cells (``impl``):
+
+    dense   — donated jitted ``decode_step`` on a lane-dense cache (pure
+              decode-math cost, no paging at all);
+    gather  — block-pool storage, legacy tick: gather a transient dense
+              view -> batched step -> scatter the touched block
+              (``PagedKVCache.make_fused_step``). O(S) HBM bytes per tick
+              in EVERY mode (this was called "paged" in pre-PR5 CSVs);
+    paged   — gather-free tick (``make_paged_step`` +
+              ``ServeConfig.decode_impl="paged"``): the block-table Pallas
+              kernel streams K/V straight from the pools, the new token
+              commits via a single-block scatter. Frozen-mode ticks touch
+              O(c*d) dense state plus ONE block — per-token bytes
+              independent of the horizon. (No ``recompute`` cell: that
+              mode needs the dense B rebuild and stays on gather.)
+
+Each cell reports measured ``per_token_ms`` and modelled ``per_token_bytes``
+— an analytic per-tick HBM-traffic account (view assembles, horizon reads,
+block commits, dense-leaf read+write) computed from the storage layout;
+XLA cost analysis is useless here because scatter/dynamic-update ops are
+charged at full-operand size regardless of in-place aliasing. On CPU the
+paged kernel runs in interpret mode, so its measured exact-mode wall-clock
+carries interpreter overhead by design (TPU is the compile target); the
+frozen-mode cells and every bytes column are layout facts, not interpreter
+artifacts. Caches are seeded synthetically (random K/V + consistent
+landmark sums + exact streaming stats) so the 32k cell doesn't need a
+32k-token prefill. Frozen per-token numbers charge the boundary rebase at
+its amortized steady-state rate (one rebase per ``seg = ceil(S/c)``
+tokens), reported alongside as ``rebase_ms``.
+
+Besides CSV rows, ``run`` writes a machine-readable perf trajectory to the
+repo-level ``BENCH_decode.json`` (mode x horizon x impl -> ms/token,
+bytes/token) so future PRs can diff serving perf without re-parsing CSVs.
 
     PYTHONPATH=src python -m benchmarks.run --only decode
     REPRO_BENCH_SMOKE=1 ... (one tiny horizon for CI)
@@ -28,6 +53,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import json
 import os
 import time
 
@@ -51,10 +77,18 @@ from repro.serve.decode_state import (
 from repro.serve.paged import BlockAllocator, PagedKVCache, ZERO_BLOCK
 
 MODES = ("recompute", "exact", "frozen")
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_decode.json")
+
+_cells: dict[str, dict] = {}
 
 
 def _smoke() -> bool:
     return os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+
+
+def _record(rows, impl, horizon, mode, metric, value):
+    rows.append(f"decode,{impl}_h{horizon}_{mode},{metric},{value:.3f}")
+    _cells.setdefault(f"{impl}|{mode}|{horizon}", {})[metric] = round(value, 4)
 
 
 def _setup():
@@ -115,6 +149,53 @@ def _synthetic_cache(cfg, s_max: int, pos: int, key):
     return {"pos": jnp.asarray(pos + 1, jnp.int32), "layers": layers}
 
 
+# --------------------------------------------------------------------------
+# Analytic per-tick HBM-bytes accounting (per lane; the cells run 1 lane).
+# --------------------------------------------------------------------------
+def _tick_bytes(kv: PagedKVCache, mode: str, impl: str, nb_view: int) -> float:
+    """Modelled HBM traffic of one decode tick, from the storage layout.
+
+    seq-leaf token row = bytes of one token across a leaf's non-seq dims;
+    ``view`` = nb_view blocks of that; ``block`` = one block. Both pool
+    ticks additionally re-zero the reserved ZERO_BLOCK every tick (the
+    inactive-lane dump target) — one more block write each.
+
+    dense  : horizon read (mode-dependent) + in-place token write + dense 2x
+    gather : 2x view (pool read + dense-view write) + horizon read +
+             2x block (commit read+write) + 1x block (ZERO_BLOCK re-zero)
+             + dense 2x
+    paged  : horizon read via the kernel (single pool pass, exact only) +
+             1x block commit + 1x block (ZERO_BLOCK re-zero) + dense 2x
+    """
+    seq_token = 0.0
+    dense_rw = 0.0
+    for arr, info in zip(kv._storage, kv.infos):
+        it = arr.dtype.itemsize
+        if info.seq_axis is None:
+            # lane-dense leaf: per-lane slice read + write each tick
+            dense_rw += 2.0 * float(np.prod(info.spec.shape)) * it
+        else:
+            shape = info.spec.shape
+            row = float(np.prod(shape)) / shape[info.seq_axis] * it
+            seq_token += row
+    view = nb_view * kv.block_size * seq_token
+    block = kv.block_size * seq_token
+    # Horizon bytes the attention math itself reads: recompute rebuilds
+    # B/BV over all K/V; exact reads them once for the active row; frozen
+    # reads nothing between boundaries.
+    horizon = {"recompute": view, "exact": view, "frozen": 0.0}[mode]
+    if impl == "dense":
+        return horizon + seq_token + dense_rw
+    if impl == "gather":
+        return 2.0 * view + horizon + 3.0 * block + dense_rw
+    if impl == "paged":
+        return horizon + 2.0 * block + dense_rw
+    raise ValueError(impl)
+
+
+# --------------------------------------------------------------------------
+# Cells.
+# --------------------------------------------------------------------------
 def _dense_cell(rows, cfg, params, horizon: int, mode: str, tokens: int):
     mcfg = dataclasses.replace(cfg, decode_streaming=mode)
     seg = segment_len(horizon, mcfg.num_landmarks)
@@ -137,23 +218,28 @@ def _dense_cell(rows, cfg, params, horizon: int, mode: str, tokens: int):
             cache = rebase(cache, jnp.asarray(pos0 + 1))
         jax.block_until_ready(jax.tree.leaves(cache)[0])
         rebase_ms = (time.perf_counter() - t0) / 2 * 1e3
-        rows.append(
-            f"decode,dense_h{horizon}_{mode},rebase_ms,{rebase_ms:.3f}"
-        )
+        _record(rows, "dense", horizon, mode, "rebase_ms", rebase_ms)
     jax.block_until_ready(jax.tree.leaves(cache)[0])
     t0 = time.perf_counter()
     for _ in range(tokens):
         logits, cache = step(cache, tok)
     jax.block_until_ready(logits)
     ms = (time.perf_counter() - t0) / tokens * 1e3 + rebase_ms / seg
-    rows.append(f"decode,dense_h{horizon}_{mode},per_token_ms,{ms:.3f}")
+    _record(rows, "dense", horizon, mode, "per_token_ms", ms)
     return ms
 
 
-def _paged_cell(rows, cfg, params, horizon: int, mode: str, tokens: int):
+def _pool_cell(rows, cfg, params, horizon: int, mode: str, tokens: int,
+               impl: str):
+    """Block-pool storage cell: ``impl`` = "gather" (legacy dense-view
+    tick) or "paged" (gather-free block-table kernel tick)."""
     mcfg = dataclasses.replace(cfg, decode_streaming=mode)
     seg = segment_len(horizon, mcfg.num_landmarks)
-    block = max(horizon // 64, 16)
+    # Fixed serving-style block size across horizons: the paged tick's
+    # "one block" commit term must not scale with S for the frozen-mode
+    # bytes-flat claim to be a measured fact rather than a block-size
+    # artifact. (Pre-PR5 CSVs used horizon//64 here.)
+    block = 64
     serve = ServeConfig(max_lanes=1, max_seq=horizon, block_size=block)
     kv = PagedKVCache(mcfg, serve)
     alloc = BlockAllocator(serve.resolved_num_blocks, serve.block_size)
@@ -165,7 +251,15 @@ def _paged_cell(rows, cfg, params, horizon: int, mode: str, tokens: int):
     cache = _synthetic_cache(mcfg, horizon, pos0, jax.random.PRNGKey(1))
     kv.write_prefill(0, cache, tables[0], n_tokens=pos0 + 1)
     step = functools.partial(decode_step, params, mcfg, seq_max=horizon)
-    fused = kv.make_fused_step(jax.vmap(step))
+    if impl == "paged":
+        pstep = functools.partial(
+            step, paged_meta=(block, mcfg.kernels_interpret)
+        )
+        fused = kv.make_paged_step(
+            lambda c, t, tb: pstep(c, t, paged_table=tb)
+        )
+    else:
+        fused = kv.make_fused_step(jax.vmap(step))
     nb = kv.view_blocks_needed(np.asarray([horizon - 1]), [0])
     tok = np.ones((1, 1, 1), np.int32)
     active = np.asarray([True])
@@ -187,6 +281,8 @@ def _paged_cell(rows, cfg, params, horizon: int, mode: str, tokens: int):
     lg = tick(pos0 + 1)  # compile + warmup
     rebase_ms = 0.0
     if mode == "frozen":
+        # Boundary rebase (gather route in both impls — it recomputes two
+        # rows over the horizon and commits only dense stats leaves).
         rebase = kv.make_rebase_step(jax.vmap(make_rebase_fn(mcfg, horizon)))
 
         def run_rebase(pos):
@@ -202,20 +298,39 @@ def _paged_cell(rows, cfg, params, horizon: int, mode: str, tokens: int):
             run_rebase(pos0 + 1)
         jax.block_until_ready(kv._storage[0])
         rebase_ms = (time.perf_counter() - t0) / 2 * 1e3
-        rows.append(
-            f"decode,paged_h{horizon}_{mode},rebase_ms,{rebase_ms:.3f}"
-        )
+        _record(rows, impl, horizon, mode, "rebase_ms", rebase_ms)
     jax.block_until_ready(lg)
     t0 = time.perf_counter()
     for i in range(tokens):
         lg = tick(pos0 + 2 + i)
     jax.block_until_ready(lg)
     ms = (time.perf_counter() - t0) / tokens * 1e3 + rebase_ms / seg
-    rows.append(f"decode,paged_h{horizon}_{mode},per_token_ms,{ms:.3f}")
+    _record(rows, impl, horizon, mode, "per_token_ms", ms)
+    _record(rows, impl, horizon, mode, "per_token_bytes",
+            _tick_bytes(kv, mode, impl, nb))
     return ms
 
 
+def write_json(path: str = JSON_PATH) -> None:
+    payload = {
+        "bench": "decode",
+        "schema": "impl|mode|horizon -> {per_token_ms, per_token_bytes, "
+                  "rebase_ms?}",
+        "impls": {
+            "dense": "lane-dense decode_step (no paging)",
+            "gather": "block pools + legacy gather/scatter tick",
+            "paged": "block pools + gather-free block-table kernel tick",
+        },
+        "host": jax.default_backend(),
+        "cells": dict(sorted(_cells.items())),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+
+
 def run(rows: list[str]) -> None:
+    _cells.clear()
     cfg, params = _setup()
     if _smoke():
         horizons, tokens = (512,), 4
@@ -226,7 +341,9 @@ def run(rows: list[str]) -> None:
         for mode in MODES:
             ms[mode] = _dense_cell(rows, cfg, params, h, mode, tokens)
         for mode in MODES:
-            _paged_cell(rows, cfg, params, h, mode, tokens)
+            _pool_cell(rows, cfg, params, h, mode, tokens, "gather")
+        for mode in ("exact", "frozen"):  # recompute stays gather-only
+            _pool_cell(rows, cfg, params, h, mode, tokens, "paged")
         rows.append(
             f"decode,dense_h{h},exact_speedup_vs_recompute,"
             f"{ms['recompute'] / max(ms['exact'], 1e-9):.2f}"
@@ -235,6 +352,7 @@ def run(rows: list[str]) -> None:
             f"decode,dense_h{h},frozen_speedup_vs_recompute,"
             f"{ms['recompute'] / max(ms['frozen'], 1e-9):.2f}"
         )
+    write_json()
 
 
 if __name__ == "__main__":

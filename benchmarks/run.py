@@ -13,6 +13,7 @@ from benchmarks import (
     bench_accuracy,
     bench_complexity,
     bench_decode,
+    bench_drift,
     bench_error_bound,
     bench_serve,
     bench_sharded_attn,
@@ -28,7 +29,9 @@ SUITES = {
     "error_bound": bench_error_bound.run,    # paper §7 eq. (12)
     "roofline": roofline.run,                # EXPERIMENTS.md §Roofline
     "serve": bench_serve.run,                # paged vs dense serving TTFT
-    "decode": bench_decode.run,              # streaming vs recompute decode
+    "decode": bench_decode.run,              # streaming/gather/paged decode
+                                             # (also writes BENCH_decode.json)
+    "drift": bench_drift.run,                # frozen-mode drift decomposition
     "train_step": bench_train_step.run,      # fused vs jnp fwd+bwd
     "sharded_attn": bench_sharded_attn.run,  # context-parallel fused vs jnp
 }

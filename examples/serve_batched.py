@@ -7,6 +7,7 @@ engines with --mode:
     PYTHONPATH=src python examples/serve_batched.py                # paged
     PYTHONPATH=src python examples/serve_batched.py --mode dense   # seed-style
     PYTHONPATH=src python examples/serve_batched.py --mode ss_fused
+    PYTHONPATH=src python examples/serve_batched.py --tick paged   # gather-free
 """
 from __future__ import annotations
 
@@ -40,11 +41,19 @@ def main():
                          "ss_fused = paged with Pallas-kernel prefill")
     ap.add_argument("--decode-impl", default="spectral_shift",
                     choices=["full", "spectral_shift"])
+    ap.add_argument("--tick", default="gather", choices=["gather", "paged"],
+                    help="decode-tick route over the block pool: gather = "
+                         "legacy dense-view tick; paged = gather-free "
+                         "block-table Pallas kernel")
+    ap.add_argument("--streaming", default="exact",
+                    choices=["recompute", "exact", "frozen"],
+                    help="ModelConfig.decode_streaming policy")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(
         reduced(get_config(args.arch)),
         decode_attention_impl=args.decode_impl, num_landmarks=16,
+        decode_streaming=args.streaming,
     )
     params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
     serve = ServeConfig(
@@ -53,6 +62,7 @@ def main():
         paged=args.mode != "dense",
         batched_prefill=args.mode != "dense",
         prefill_impl="ss_fused" if args.mode == "ss_fused" else "replay",
+        decode_impl=args.tick,
     )
     engine = ServeEngine(cfg, params, serve=serve)
 
@@ -78,6 +88,7 @@ def main():
     st = engine.stats()
     total_tokens = st["new_tokens"]
     print(f"[serve_batched] mode={st['mode']} impl={args.decode_impl} "
+          f"tick={st['decode_impl']} streaming={st['decode_streaming']} "
           f"lanes={args.lanes}")
     print(f"  {st['finished']}/{args.requests} finished, "
           f"{total_tokens} new tokens in {dt:.2f}s "

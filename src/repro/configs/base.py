@@ -192,6 +192,17 @@ class ServeConfig:
                                   # ss_fused = Pallas landmark_summary /
                                   #   query_side kernels, approximate prompt
                                   #   attention (landmark state still exact)
+    decode_impl: str = "gather"   # decode-tick route over paged storage:
+                                  # gather = assemble a transient dense
+                                  #   per-lane K/V view each tick (legacy,
+                                  #   O(S*d) HBM traffic; the only route for
+                                  #   decode_streaming="recompute")
+                                  # paged  = gather-free: the block-table
+                                  #   Pallas kernel streams K/V straight
+                                  #   from the pools and the new token
+                                  #   commits via a single-block scatter
+                                  #   (kernels/paged_decode.py; falls back
+                                  #   to gather when unsupported)
     eos_id: int = 2
     seed: int = 0
 
@@ -218,6 +229,8 @@ class ServeConfig:
             )
         if self.prefill_impl not in ("replay", "ss_fused"):
             raise ValueError(f"unknown prefill_impl {self.prefill_impl!r}")
+        if self.decode_impl not in ("gather", "paged"):
+            raise ValueError(f"unknown decode_impl {self.decode_impl!r}")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -5,6 +5,8 @@ tiling, segment-causal masks, online-softmax stats, dynamic key-validity
 bounds), ``ss_attention_bwd.py`` the flash-style backward kernels,
 ``ops.py`` the jitted custom-VJP wrappers, ``sharded.py`` the shard_map
 context-parallel driver (per-shard kernels + landmark-sized collectives),
+``paged_decode.py`` the gather-free serving decode kernel (scalar-prefetch
+block-table index maps over the shared KV block pools),
 ``dispatch.py`` the impl/block-size registry with measured autotune, and
 ``ref.py`` the pure-jnp oracles. Validated in interpret mode on CPU; TPU
 v5e is the compile target.
@@ -14,6 +16,7 @@ from repro.kernels.dispatch import (
     Plan,
     PlanKey,
     autotune,
+    autotune_decode,
     dispatch_ss_attention,
     get_plan,
     load_cache,
@@ -21,6 +24,7 @@ from repro.kernels.dispatch import (
     register_plan,
     save_cache,
 )
+from repro.kernels.paged_decode import paged_row_stats, paged_row_stats_lanes
 from repro.kernels.ops import (
     flash_merge,
     flash_rescale,
@@ -38,6 +42,7 @@ __all__ = [
     "Plan",
     "PlanKey",
     "autotune",
+    "autotune_decode",
     "dispatch_ss_attention",
     "flash_merge",
     "flash_rescale",
@@ -48,6 +53,8 @@ __all__ = [
     "load_cache",
     "make_key",
     "nystrom_attention_fused",
+    "paged_row_stats",
+    "paged_row_stats_lanes",
     "query_side",
     "query_side_bwd",
     "query_side_op",

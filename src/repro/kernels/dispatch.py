@@ -24,9 +24,17 @@ B-side kernel's landmark rows, see kernels/ss_attention.py) on synthetic
 data of the exact shape and persists winners to a JSON cache
 (``REPRO_AUTOTUNE_CACHE`` or ``~/.cache/repro/ss_autotune.json``) so
 subsequent processes skip the measurement. ``n`` is bucketed to the next
-power of two to keep the cache dense across nearby sequence lengths. Cache
-payloads are written at version 2 (plans carry ``block_c``); version-1
-caches load unchanged with ``block_c=0`` (untiled — the former behavior).
+power of two to keep the cache dense across nearby sequence lengths.
+
+``decode`` keys measure through their own harness (``autotune_decode``):
+the gather-route jnp one-row recompute vs the gather-free paged kernel
+(kernels/paged_decode.py) across the ``block_table`` view-slot-bucketing
+grid at the serve shape — ``ServeEngine`` warms this key at construction,
+so a tuned deployment's ticks follow the measured winner's geometry.
+
+Cache payloads are written at version 3 (plans carry ``block_table``; v2
+added ``block_c``); older caches load unchanged with the missing fields
+defaulting to 0 (the former behavior).
 """
 from __future__ import annotations
 
@@ -43,7 +51,7 @@ import jax.numpy as jnp
 
 from repro.core.attention import SSConfig, spectral_shift_attention
 
-_IMPLS = ("fused", "jnp", "interpret", "sharded")
+_IMPLS = ("fused", "jnp", "interpret", "sharded", "paged")
 _FAMILIES = ("self", "decode")
 
 
@@ -90,10 +98,19 @@ class PlanKey:
 
 @dataclasses.dataclass(frozen=True)
 class Plan:
-    impl: str            # "fused" | "jnp" | "interpret"
+    impl: str            # "fused" | "jnp" | "interpret" | "sharded" |
+                         # "paged" (decode family: the gather-free
+                         # block-table kernel; "jnp" = the gather route)
     block_n: int = 512
     block_c: int = 0     # landmark-row tile for the B-side kernel (0 = all
                          # rows resident; only honored when it divides c)
+    block_table: int = 0  # decode family: view-slot bucketing quantum for
+                          # the paged decode kernel — the engine rounds the
+                          # block-table slot count (kernel grid size) up to
+                          # a multiple of this instead of the next power of
+                          # two (0 = power-of-two default). Trades compiled
+                          # tick-program count against wasted masked grid
+                          # steps.
     source: str = "heuristic"  # heuristic | registered | cache | autotuned
 
     def __post_init__(self):
@@ -185,8 +202,11 @@ def load_cache(path: Optional[str] = None) -> int:
                 key = PlanKey.decode(ks)
                 plan = Plan(
                     impl=pd["impl"], block_n=int(pd["block_n"]),
-                    # Version-1 caches predate block_c; absent means untiled.
-                    block_c=int(pd.get("block_c", 0)), source="cache",
+                    # Version-1 caches predate block_c, version <=2 predate
+                    # block_table; absent means untiled / pow2-bucketed.
+                    block_c=int(pd.get("block_c", 0)),
+                    block_table=int(pd.get("block_table", 0)),
+                    source="cache",
                 )
             except (ValueError, KeyError):
                 continue
@@ -214,13 +234,14 @@ def save_cache(path: Optional[str] = None) -> str:
                 continue
             existing[key.encode()] = {
                 "impl": plan.impl, "block_n": plan.block_n,
-                "block_c": plan.block_c,
+                "block_c": plan.block_c, "block_table": plan.block_table,
             }
     tmp = f"{path}.tmp.{os.getpid()}"
-    # Version 2: plans carry block_c. Readers accept both versions (block_c
-    # defaults to 0 on legacy entries), so old caches stay usable in place.
+    # Version 3: plans carry block_table (v2 added block_c). Readers accept
+    # every version (missing fields default to 0), so old caches stay
+    # usable in place.
     with open(tmp, "w") as f:
-        json.dump({"version": 2, "plans": existing}, f, indent=2, sort_keys=True)
+        json.dump({"version": 3, "plans": existing}, f, indent=2, sort_keys=True)
     os.replace(tmp, path)
     return path
 
@@ -228,11 +249,13 @@ def save_cache(path: Optional[str] = None) -> str:
 def heuristic_plan(key: PlanKey) -> Plan:
     """Backend defaults when nothing measured is available."""
     if key.family == "decode":
-        # Single-query decode math lives on the jnp path (the cache carries
-        # the landmark state; the fused kernels need matching landmark
-        # counts). block_n keyed anyway so a measured decode plan can steer
-        # any blockwise cache scans later.
-        return Plan(impl="jnp", block_n=min(512, key.n), source="heuristic")
+        # "jnp" = the gather route's dense-view decode math; "paged" = the
+        # gather-free block-table kernel (kernels/paged_decode.py). On a
+        # real accelerator the paged kernel wins by skipping the per-tick
+        # view gather; on CPU interpret-mode Pallas loses to jnp, so the
+        # gather route stays the default there.
+        impl = "jnp" if key.backend == "cpu" else "paged"
+        return Plan(impl=impl, block_n=min(512, key.n), source="heuristic")
     if key.backend == "cpu":
         # Interpret-mode Pallas is an order of magnitude slower than the jnp
         # reference on CPU; fused only pays off on a real accelerator. Holds
@@ -265,13 +288,18 @@ def get_plan(key: PlanKey, *, autotune_enabled: bool = False,
         if plan is not None:
             return plan
     if autotune_enabled:
-        if key.seq_shards > 1 or key.family != "self":
-            # Measured autotune only reproduces the single-device self-
-            # attention program; measuring here would register the winner
-            # under a DIFFERENT key (no seq_shards/family) and re-run the
-            # timing sweep on every trace of the requested key. Heuristics
-            # (or pre-registered plans) steer these families.
+        if key.seq_shards > 1:
+            # Measured autotune cannot reproduce the multi-device program;
+            # measuring here would register the winner under a DIFFERENT
+            # key (no seq_shards) and re-run the timing sweep on every
+            # trace of the requested key. Heuristics (or pre-registered
+            # plans) steer context-parallel cells.
             return heuristic_plan(key)
+        if key.family == "decode":
+            # Decode keys get their own harness: gather-route jnp recompute
+            # vs the paged kernel across the (block_n, block_table) grid at
+            # the serve shape, registered under the decode key itself.
+            return (tune_fn or _default_decode_tune)(key)
         return (tune_fn or _default_tune)(key)
     return heuristic_plan(key)
 
@@ -360,6 +388,108 @@ def _default_tune(key: PlanKey) -> Plan:
     )
 
 
+def autotune_decode(
+    n: int,
+    c: int,
+    d: int,
+    dtype=jnp.float32,
+    *,
+    backend: Optional[str] = None,
+    block_size: int = 16,
+    block_table_candidates: tuple[int, ...] = (0, 2, 4, 8),
+    reps: int = 2,
+    save: bool = True,
+    cache_file: Optional[str] = None,
+    interpret: Optional[bool] = None,
+) -> Plan:
+    """Measured autotune for the ``decode`` key family: the per-tick
+    horizon read at the serve shape (cache horizon ``n``, one active row
+    per kv head).
+
+    Candidates: the gather route (assemble the dense block view, then the
+    jnp one-row recompute — ``impl="jnp"``) vs the gather-free paged kernel
+    (``impl="paged"``) across the ``block_table`` grid. ``block_table`` is
+    the view-slot bucketing quantum (see ``Plan``); each candidate is timed
+    at a mid-growth and a full view so quanta that round to larger masked
+    grids pay for it honestly. The kernel's key-block size is pinned to the
+    pool's ``block_size`` by the storage layout, so — unlike the self
+    family — ``block_n`` has no measured dimension here; it is carried at
+    the heuristic value for any blockwise gather-route scans. The winner
+    registers (and persists) under the decode key itself.
+
+    Callers must pass the deployment's real ``block_size``
+    (``ServeEngine`` threads ``ServeConfig.block_size`` through its
+    ``tune_fn``): ``PlanKey`` does not encode block size, so deployments
+    that share a shape key but differ in block size overwrite each
+    other's measured winner — last tuned wins, a deliberate granularity
+    trade-off, but never measure at a geometry you don't serve."""
+    from repro.kernels.paged_decode import paged_row_stats_lanes
+    from repro.serve.decode_state import recompute_stats
+    from repro.serve.paged import bucket_view_slots
+
+    key = make_key(n, c, d, dtype, True, backend=backend, family="decode")
+    if interpret is None:
+        interpret = key.backend == "cpu"
+    bs = block_size
+    n_slots_full = -(-n // bs)
+    rng = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(rng, 3)
+    q = (jax.random.normal(kq, (1, 1, 1, d)) * 0.5).astype(jnp.float32)
+    k_pool = (jax.random.normal(kk, (1, n_slots_full + 1, bs, d)) * 0.5).astype(dtype)
+    v_pool = jax.random.normal(kv, (1, n_slots_full + 1, bs, d)).astype(dtype)
+    table = jnp.arange(1, n_slots_full + 1, dtype=jnp.int32)
+    views = sorted({max(n_slots_full // 2, 1), n_slots_full})
+    scale = 1.0 / (d ** 0.5)
+
+    def time_gather(nv: int) -> float:
+        tb = table[:nv]
+
+        def fn(q_, kp, vp):
+            kvw = jnp.take(kp, tb, axis=1).reshape(1, 1, nv * bs, d)
+            vvw = jnp.take(vp, tb, axis=1).reshape(1, 1, nv * bs, d)
+            return recompute_stats(q_, kvw, vvw, nv * bs - 2, scale)
+
+        return _time_call(jax.jit(fn), q, k_pool, v_pool, reps=reps)
+
+    results: list[tuple[float, Plan]] = [(
+        sum(time_gather(nv) for nv in views),
+        Plan(impl="jnp", block_n=min(512, n), source="autotuned"),
+    )]
+    for bt in dict.fromkeys(block_table_candidates):
+        t = 0.0
+        try:
+            for nv in views:
+                nv_r = bucket_view_slots(nv, n_slots_full, bt)
+                tb = jnp.pad(table[:nv], (0, nv_r - nv))[None]  # ZERO_BLOCK
+                kvv = jnp.asarray([nv * bs - 1], jnp.int32)
+
+                def fn(q_, kp, vp, tb=tb, kvv=kvv):
+                    return paged_row_stats_lanes(
+                        q_, (kp,), vp, tb, kvv, scale=scale, block_size=bs,
+                        interpret=interpret,
+                    )
+
+                t += _time_call(jax.jit(fn), q, k_pool, v_pool, reps=reps)
+        except Exception:
+            continue  # candidate doesn't lower on this backend/shape
+        results.append((
+            t,
+            Plan(impl="paged", block_n=min(512, n), block_table=bt,
+                 source="autotuned"),
+        ))
+    _, plan = min(results, key=lambda r: r[0])
+    register_plan(key, plan)
+    if save:
+        save_cache(cache_file)
+    return plan
+
+
+def _default_decode_tune(key: PlanKey) -> Plan:
+    return autotune_decode(
+        key.n, key.c, key.d, dtype=key.dtype, backend=key.backend,
+    )
+
+
 # --------------------------------------------------------------------------
 # Model-facing entry point.
 # --------------------------------------------------------------------------
@@ -410,6 +540,11 @@ def dispatch_ss_attention(
     else:
         raise ValueError(
             f"unknown attention backend {backend!r}; want 'auto' or one of {_IMPLS}"
+        )
+    if impl == "paged":
+        raise ValueError(
+            "'paged' plans serve the decode key family (block-pool serving "
+            "ticks); self-attention sites cannot route through it"
         )
     if impl == "jnp":
         return spectral_shift_attention(q, k, v, cfg, scale=scale)

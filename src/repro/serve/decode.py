@@ -21,6 +21,23 @@ to identity rows/cols of A so the pseudoinverse is well-posed.
 stream per-landmark online-softmax stats carried in the cache instead
 (serve/decode_state.py) — same output formula, the B/BV rebuild replaced by
 an O(c*d) flash-append plus (exact mode) a single-row recompute.
+
+Gather-free paged decode (``ServeConfig.decode_impl="paged"``): when
+``decode_step`` receives ``paged_table``/``paged_meta``, the seq-shaped
+cache leaves ARE the shared block pools (broadcast unbatched through the
+engine's lane vmap; layout ``(..., num_blocks, block_size, ...)`` with the
+block pair sitting where ``cache_seq`` was). Attention layers then
+
+* never write the pools — each layer returns the new token's K/V (seq axis
+  of length 1) and ``PagedKVCache.make_paged_step`` commits it with a
+  single-block scatter after the step;
+* read the horizon (exact-mode active row, ``full`` decode attention) only
+  through the block-table Pallas kernel (kernels/paged_decode.py), whose
+  partials over keys ``0..pos-1`` are flash-merged with the current token.
+
+``decode_streaming="frozen"`` ticks therefore touch no horizon bytes at
+all; ``"recompute"`` needs the dense B matrix and stays on the gather
+route (the engine enforces the fallback).
 """
 from __future__ import annotations
 
@@ -132,6 +149,73 @@ def full_decode_attention(q, k_cache, v_cache, pos, scale):
 
 
 # --------------------------------------------------------------------------
+# Gather-free paged horizon reads (kernels/paged_decode.py). ``paged`` is
+# the per-layer route descriptor ``(table, block_size, interpret)``: the
+# traced (n_slots,) int32 block table plus the static kernel knobs.
+# --------------------------------------------------------------------------
+def _paged_merged_stats(q_g, k_pools, v_pool, k_new_g, v_new_g, paged, pos,
+                        scale):
+    """Exact softmax partials of rows ``q_g`` (hkv, R, d) over keys
+    ``0..pos``: the kernel streams the pools (which hold keys 0..pos-1 —
+    the tick commits the new token after the step), the current token is
+    flash-merged on top."""
+    from repro.kernels.ops import flash_merge
+    from repro.kernels.paged_decode import paged_row_stats
+
+    table, block_size, interpret = paged
+    m, l, acc = paged_row_stats(
+        q_g, k_pools, v_pool, table, pos, scale=scale,
+        block_size=block_size, interpret=interpret,
+    )
+    s_new = jnp.einsum(
+        "hrd,hd->hr", q_g.astype(jnp.float32), k_new_g.astype(jnp.float32)
+    )[..., None] * scale                                   # (hkv, R, 1)
+    return flash_merge(
+        m, l, acc, s_new, jnp.ones_like(s_new),
+        v_new_g[:, None, :].astype(jnp.float32),
+    )
+
+
+def _paged_active_stats_fn(k_pools, v_pool, k_new_g, v_new_g, paged, pos,
+                           scale):
+    """The ``active_stats_fn`` hook for ``ss_decode_attention_streaming``:
+    one-row exact recompute through the block-table kernel. ``k_new_g`` /
+    ``v_new_g`` are the current token's key/value with RAW kv heads
+    (hkv, d) / (hkv, dv)."""
+    hkv = v_pool.shape[0]
+
+    def fn(q_act):  # (B=1, H, 1, d) active landmark means
+        b, h = q_act.shape[:2]
+        q_g = q_act.reshape(b, hkv, h // hkv, q_act.shape[-1])[0]
+        m, l, acc = _paged_merged_stats(
+            q_g, k_pools, v_pool, k_new_g, v_new_g, paged, pos, scale,
+        )
+        return (
+            m.reshape(b, h, 1, 1),
+            l.reshape(b, h, 1, 1),
+            acc.reshape(b, h, 1, acc.shape[-1]),
+        )
+
+    return fn
+
+
+def full_decode_attention_paged(q, k_pools, v_pool, k_new_g, v_new_g, paged,
+                                pos, scale):
+    """Exact decode attention (one query row per head) straight from the
+    block pools — the gather-free form of ``full_decode_attention``, which
+    also covers the degenerate <=c regime where spectral shifting reduces
+    to exact attention. ``q`` (B=1, H, 1, d); output (B, H, 1, dv)."""
+    b, h = q.shape[:2]
+    hkv = v_pool.shape[0]
+    q_g = q.astype(jnp.float32).reshape(b, hkv, h // hkv, q.shape[-1])[0]
+    m, l, acc = _paged_merged_stats(
+        q_g, k_pools, v_pool, k_new_g, v_new_g, paged, pos, scale,
+    )
+    out = acc / jnp.maximum(l, 1e-30)                      # (hkv, G, dv)
+    return out.reshape(b, h, 1, out.shape[-1]).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
 # per-layer decode
 # --------------------------------------------------------------------------
 def _update_seq(cache_arr, new, pos):
@@ -141,11 +225,18 @@ def _update_seq(cache_arr, new, pos):
     )
 
 
-def gqa_decode(p, cfg: ModelConfig, x, cache, pos, impl, seq_max=None):
+def gqa_decode(p, cfg: ModelConfig, x, cache, pos, impl, seq_max=None,
+               paged=None):
     """x (B,1,D); cache {k,v,q_lmk,k_lmk}. Returns (attn_out, new_cache).
 
     ``seq_max`` pins the landmark segmentation horizon when the cache view
-    is shorter than the lane's logical sequence (paged short views)."""
+    is shorter than the lane's logical sequence (paged short views).
+
+    ``paged`` = (table, block_size, interpret) flips the gather-free route:
+    ``cache["k"]``/``cache["v"]`` are the shared block pools
+    (B=1, hkv, nb, bs, d) — never written here; ``new_cache`` returns the
+    NEW TOKEN's k/v (seq length 1) for the tick's single-block scatter
+    commit, and horizon reads go through the block-table kernel."""
     dt = x.dtype
     dh = cfg.resolved_head_dim
     q = jnp.einsum("bsd,dhe->bhse", x, p["w_q"].astype(dt))
@@ -160,19 +251,33 @@ def gqa_decode(p, cfg: ModelConfig, x, cache, pos, impl, seq_max=None):
         q = apply_rotary(q, sin[None], cos[None])
         k = apply_rotary(k, sin[None], cos[None])
 
-    s_max = cache["k"].shape[2] if seq_max is None else seq_max
     new_cache = dict(cache)
-    new_cache["k"] = _update_seq(cache["k"], k, pos)
-    new_cache["v"] = _update_seq(cache["v"], v, pos)
+    if paged is None:
+        s_max = cache["k"].shape[2] if seq_max is None else seq_max
+        new_cache["k"] = _update_seq(cache["k"], k, pos)
+        new_cache["v"] = _update_seq(cache["v"], v, pos)
+    else:
+        if seq_max is None:
+            raise ValueError("paged decode requires an explicit seq_max")
+        s_max = seq_max
+        new_cache["k"], new_cache["v"] = k, v  # new-token commits
     new_cache["q_lmk"] = _lmk_add(cache["q_lmk"], q[:, :, 0], pos, s_max)
     new_cache["k_lmk"] = _lmk_add(cache["k_lmk"], k[:, :, 0], pos, s_max)
 
-    kb = _broadcast_kv(new_cache["k"], cfg.num_heads)
-    vb = _broadcast_kv(new_cache["v"], cfg.num_heads)
     scale = dh**-0.5
+    if paged is not None:
+        k_pools, v_pool = (cache["k"][0],), cache["v"][0]  # (hkv, nb, bs, d)
+        k_new_g, v_new_g = k[0, :, 0], v[0, :, 0]          # raw kv heads
     if impl == "spectral_shift":
         k_lmk = _broadcast_kv(new_cache["k_lmk"], cfg.num_heads)
         if cfg.decode_streaming == "recompute":
+            if paged is not None:
+                raise ValueError(
+                    "decode_streaming='recompute' rebuilds the dense B "
+                    "matrix and is only served by the gather route"
+                )
+            kb = _broadcast_kv(new_cache["k"], cfg.num_heads)
+            vb = _broadcast_kv(new_cache["v"], cfg.num_heads)
             out = ss_decode_attention(
                 q, kb, vb, new_cache["q_lmk"], k_lmk, pos, cfg, scale,
                 seq_max=s_max,
@@ -181,20 +286,40 @@ def gqa_decode(p, cfg: ModelConfig, x, cache, pos, impl, seq_max=None):
             k_new = _broadcast_kv(k, cfg.num_heads)[:, :, 0]  # (B, H, d)
             v_new = _broadcast_kv(v, cfg.num_heads)[:, :, 0]
             stats = tuple(cache[name] for name in STREAM_LEAVES)
+            if paged is None:
+                kc, vc, stats_fn = new_cache["k"], new_cache["v"], None
+            else:
+                kc = vc = None
+                stats_fn = _paged_active_stats_fn(
+                    k_pools, v_pool, k_new_g, v_new_g, paged, pos, scale,
+                )
             out, new_stats = ss_decode_attention_streaming(
-                q, k_new, v_new, new_cache["k"], new_cache["v"],
+                q, k_new, v_new, kc, vc,
                 new_cache["q_lmk"], k_lmk, stats,
                 pos, cfg, scale, seq_max=s_max, mode=cfg.decode_streaming,
+                active_stats_fn=stats_fn,
             )
             new_cache.update(dict(zip(STREAM_LEAVES, new_stats)))
+    elif paged is not None:
+        out = full_decode_attention_paged(
+            q, k_pools, v_pool, k_new_g, v_new_g, paged, pos, scale,
+        )
     else:
+        kb = _broadcast_kv(new_cache["k"], cfg.num_heads)
+        vb = _broadcast_kv(new_cache["v"], cfg.num_heads)
         out = full_decode_attention(q, kb, vb, pos, scale)
     return jnp.einsum("bhse,hed->bsd", out, p["w_o"].astype(dt)), new_cache
 
 
-def mla_decode(p, cfg: ModelConfig, x, cache, pos, impl, seq_max=None):
+def mla_decode(p, cfg: ModelConfig, x, cache, pos, impl, seq_max=None,
+               paged=None):
     """Absorbed MLA decode: attention runs in the (kv_lora + rope) latent
-    space; values are the latents, up-projected after mixing."""
+    space; values are the latents, up-projected after mixing.
+
+    The gather-free ``paged`` route reads the latent and rope pools as two
+    separate key pools (scores accumulate per pool inside the kernel — the
+    O(S) ``concat`` of the dense path never materializes) with the latent
+    pool doubling as the value pool."""
     dt = x.dtype
     dh, dr, r = cfg.resolved_head_dim, cfg.rope_head_dim, cfg.kv_lora_rank
     c_kv = rms_norm(x @ p["w_dkv"].astype(dt), p["norm_kv"], cfg.norm_eps)  # (B,1,r)
@@ -209,48 +334,82 @@ def mla_decode(p, cfg: ModelConfig, x, cache, pos, impl, seq_max=None):
     q_eff = jnp.concatenate([q_abs, q_rope], axis=-1)  # (B,H,1,r+dr)
 
     new_cache = dict(cache)
-    new_cache["latent"] = jax.lax.dynamic_update_slice(
-        cache["latent"], c_kv.astype(cache["latent"].dtype), (0, pos, 0)
-    )
-    new_cache["rope"] = jax.lax.dynamic_update_slice(
-        cache["rope"], k_rope.astype(cache["rope"].dtype), (0, pos, 0)
-    )
-    s_max = cache["latent"].shape[1] if seq_max is None else seq_max
+    if paged is None:
+        new_cache["latent"] = jax.lax.dynamic_update_slice(
+            cache["latent"], c_kv.astype(cache["latent"].dtype), (0, pos, 0)
+        )
+        new_cache["rope"] = jax.lax.dynamic_update_slice(
+            cache["rope"], k_rope.astype(cache["rope"].dtype), (0, pos, 0)
+        )
+        s_max = cache["latent"].shape[1] if seq_max is None else seq_max
+    else:
+        if seq_max is None:
+            raise ValueError("paged decode requires an explicit seq_max")
+        new_cache["latent"], new_cache["rope"] = c_kv, k_rope  # new token
+        s_max = seq_max
     k_eff_new = jnp.concatenate([c_kv, k_rope], axis=-1)[:, 0]  # (B, r+dr)
     new_cache["k_lmk"] = _lmk_add(cache["k_lmk"], k_eff_new, pos, s_max)
     new_cache["q_lmk"] = _lmk_add(cache["q_lmk"], q_eff[:, :, 0], pos, s_max)
 
-    k_eff = jnp.concatenate(
-        [new_cache["latent"], new_cache["rope"]], axis=-1
-    )[:, None]  # (B,1,S,r+dr)
-    lat = new_cache["latent"][:, None]  # (B,1,S,r) as values
     scale = (dh + dr) ** -0.5
     h = cfg.num_heads
-    k_eff_b = jnp.broadcast_to(k_eff, (k_eff.shape[0], h, *k_eff.shape[2:]))
-    lat_b = jnp.broadcast_to(lat, (lat.shape[0], h, *lat.shape[2:]))
+    b = x.shape[0]
+    if paged is None:
+        k_eff = jnp.concatenate(
+            [new_cache["latent"], new_cache["rope"]], axis=-1
+        )[:, None]  # (B,1,S,r+dr)
+        lat = new_cache["latent"][:, None]  # (B,1,S,r) as values
+    else:
+        # hkv=1 pools: latent (1, nb, bs, r), rope (1, nb, bs, dr); the
+        # latent pool doubles as the value pool (absorbed MLA).
+        k_pools = (cache["latent"][0][None], cache["rope"][0][None])
+        v_pool = k_pools[0]
+        k_new_g = k_eff_new[0][None]                        # (1, r+dr)
+        v_new_g = c_kv[0, 0][None]                          # (1, r)
     if impl == "spectral_shift":
         k_lmk = jnp.broadcast_to(
             new_cache["k_lmk"][:, None], new_cache["q_lmk"].shape[:2] + new_cache["k_lmk"].shape[1:]
         )
         if cfg.decode_streaming == "recompute":
+            if paged is not None:
+                raise ValueError(
+                    "decode_streaming='recompute' rebuilds the dense B "
+                    "matrix and is only served by the gather route"
+                )
+            k_eff_b = jnp.broadcast_to(
+                k_eff, (k_eff.shape[0], h, *k_eff.shape[2:])
+            )
+            lat_b = jnp.broadcast_to(lat, (lat.shape[0], h, *lat.shape[2:]))
             out_lat = ss_decode_attention(
                 q_eff, k_eff_b, lat_b, new_cache["q_lmk"], k_lmk, pos, cfg,
                 scale, seq_max=s_max,
             )
         else:
-            b = x.shape[0]
             k_new = jnp.broadcast_to(
                 k_eff_new[:, None], (b, h, k_eff_new.shape[-1])
             )
             v_new = jnp.broadcast_to(c_kv[:, 0][:, None], (b, h, r))
             stats = tuple(cache[name] for name in STREAM_LEAVES)
+            if paged is None:
+                kc, vc, stats_fn = k_eff, lat, None
+            else:
+                kc = vc = None
+                stats_fn = _paged_active_stats_fn(
+                    k_pools, v_pool, k_new_g, v_new_g, paged, pos, scale,
+                )
             out_lat, new_stats = ss_decode_attention_streaming(
-                q_eff, k_new, v_new, k_eff, lat, new_cache["q_lmk"],
+                q_eff, k_new, v_new, kc, vc, new_cache["q_lmk"],
                 k_lmk, stats, pos, cfg, scale, seq_max=s_max,
-                mode=cfg.decode_streaming,
+                mode=cfg.decode_streaming, active_stats_fn=stats_fn,
             )
             new_cache.update(dict(zip(STREAM_LEAVES, new_stats)))
+    elif paged is not None:
+        out_lat = full_decode_attention_paged(
+            q_eff, k_pools, v_pool, k_new_g, v_new_g, paged, pos, scale,
+        )
     else:
+        k_eff_b = jnp.broadcast_to(k_eff, (k_eff.shape[0], h, *k_eff.shape[2:]))
+        lat_b = jnp.broadcast_to(lat, (lat.shape[0], h, *lat.shape[2:]))
         out_lat = full_decode_attention(q_eff, k_eff_b, lat_b, pos, scale)
     out = jnp.einsum("bhsr,rhe->bhse", out_lat, p["w_uv"].astype(dt))
     return jnp.einsum("bhse,hed->bsd", out, p["w_o"].astype(dt)), new_cache
@@ -331,14 +490,15 @@ def slstm_block_decode(p, cfg: ModelConfig, x, state):
 # --------------------------------------------------------------------------
 # whole-model decode step
 # --------------------------------------------------------------------------
-def _dense_layer_decode(lp, cfg, x, lcache, pos, impl, seq_max=None):
+def _dense_layer_decode(lp, cfg, x, lcache, pos, impl, seq_max=None,
+                        paged=None):
     h = rms_norm(x, lp["norm_attn"], cfg.norm_eps)
     if cfg.mla:
         attn, new_cache = mla_decode(lp["attn"], cfg, h, lcache, pos, impl,
-                                     seq_max)
+                                     seq_max, paged)
     else:
         attn, new_cache = gqa_decode(lp["attn"], cfg, h, lcache, pos, impl,
-                                     seq_max)
+                                     seq_max, paged)
     x = x + attn
     h = rms_norm(x, lp["norm_mlp"], cfg.norm_eps)
     if cfg.moe:
@@ -348,10 +508,11 @@ def _dense_layer_decode(lp, cfg, x, lcache, pos, impl, seq_max=None):
     return x + ff, new_cache
 
 
-def _hymba_layer_decode(lp, cfg, x, lcache, pos, impl, seq_max=None):
+def _hymba_layer_decode(lp, cfg, x, lcache, pos, impl, seq_max=None,
+                        paged=None):
     h = rms_norm(x, lp["norm_mix"], cfg.norm_eps)
     attn, attn_cache = gqa_decode(lp["attn"], cfg, h, lcache["attn"], pos,
-                                  impl, seq_max)
+                                  impl, seq_max, paged)
     ssm, ssm_state = mamba_decode(lp["mamba"], cfg, h, lcache["mamba"])
     mixed = (
         lp["gate_attn"].astype(x.dtype) * attn + lp["gate_ssm"].astype(x.dtype) * ssm
@@ -363,14 +524,22 @@ def _hymba_layer_decode(lp, cfg, x, lcache, pos, impl, seq_max=None):
 
 
 def decode_step(params, cfg: ModelConfig, cache: Cache, tokens: jnp.ndarray,
-                seq_max: int | None = None):
+                seq_max: int | None = None, paged_table=None,
+                paged_meta=None):
     """One decode step. tokens (B,1) int32. Returns (logits (B,1,V), cache).
 
     ``seq_max`` (optional) fixes the landmark segmentation horizon
     independently of the K/V view length — the paged engine gathers views
-    only as long as the longest active sequence needs."""
+    only as long as the longest active sequence needs.
+
+    ``paged_table`` ((n_slots,) int32, traced) + ``paged_meta``
+    ((block_size, interpret), static) switch the gather-free paged route:
+    seq-shaped cache leaves are the shared block pools (module docstring),
+    and the returned cache carries each layer's NEW TOKEN in their place
+    for ``PagedKVCache.make_paged_step`` to scatter-commit."""
     from repro.models.model import working_params
 
+    paged = None if paged_table is None else (paged_table, *paged_meta)
     params = working_params(params, cfg)
     pos = cache["pos"]
     dt = jnp.dtype(cfg.compute_dtype)
@@ -391,7 +560,7 @@ def decode_step(params, cfg: ModelConfig, cache: Cache, tokens: jnp.ndarray,
         return logits, {"pos": pos + 1, "layers": new_layers}
 
     if cfg.family == "audio":
-        return _whisper_decode(params, cfg, cache, tokens, seq_max)
+        return _whisper_decode(params, cfg, cache, tokens, seq_max, paged)
 
     layer_decode = {
         "dense": _dense_layer_decode,
@@ -401,16 +570,20 @@ def decode_step(params, cfg: ModelConfig, cache: Cache, tokens: jnp.ndarray,
     }[cfg.family]
 
     if cfg.scan_layers and not isinstance(params["layers"], list):
+        # Pool leaves scan fine: their layout keeps the layer axis leading
+        # (the block pair replaced cache_seq in place), and each layer's
+        # output carries only the new token, so the scan's stacked ys stay
+        # O(L*c*d) — the pools are read-only xs.
         def body(y, xs):
             lp, lc = xs
-            y, nc = layer_decode(lp, cfg, y, lc, pos, impl, seq_max)
+            y, nc = layer_decode(lp, cfg, y, lc, pos, impl, seq_max, paged)
             return y, nc
 
         x, new_layer_cache = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
     else:
         new_list = []
         for lp, lc in zip(params["layers"], cache["layers"]):
-            x, nc = layer_decode(lp, cfg, x, lc, pos, impl, seq_max)
+            x, nc = layer_decode(lp, cfg, x, lc, pos, impl, seq_max, paged)
             new_list.append(nc)
         new_layer_cache = new_list
 
@@ -422,7 +595,8 @@ def decode_step(params, cfg: ModelConfig, cache: Cache, tokens: jnp.ndarray,
     return logits, new_cache
 
 
-def _whisper_decode(params, cfg: ModelConfig, cache, tokens, seq_max=None):
+def _whisper_decode(params, cfg: ModelConfig, cache, tokens, seq_max=None,
+                    paged=None):
     pos = cache["pos"]
     dt = jnp.dtype(cfg.compute_dtype)
     x = _embed_tokens(params, cfg, tokens).astype(dt)
@@ -433,7 +607,8 @@ def _whisper_decode(params, cfg: ModelConfig, cache, tokens, seq_max=None):
     new_layers = []
     for i, (lp, lc) in enumerate(zip(params["layers"], cache["layers"])):
         h = layer_norm(x, lp["ln_self"]["scale"], lp["ln_self"]["bias"], cfg.norm_eps)
-        attn, nc = gqa_decode(lp["self_attn"], cfg, h, lc, pos, impl, seq_max)
+        attn, nc = gqa_decode(lp["self_attn"], cfg, h, lc, pos, impl, seq_max,
+                              paged)
         x = x + attn
         h = layer_norm(x, lp["ln_cross"]["scale"], lp["ln_cross"]["bias"], cfg.norm_eps)
         ck, cv = cache["cross_k"][i], cache["cross_v"][i]

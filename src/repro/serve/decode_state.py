@@ -188,8 +188,9 @@ def ss_decode_attention_streaming(
     q: jnp.ndarray,        # (B, H, 1, d)
     k_new: jnp.ndarray,    # (B, H, d)   this tick's key (heads broadcast)
     v_new: jnp.ndarray,    # (B, H, dv)  this tick's value
-    k_cache: jnp.ndarray,  # (B, Hkv, S, d)  view incl. the new key at ``pos``
-    v_cache: jnp.ndarray,  # (B, Hkv, S, dv)  (raw KV heads; Hkv divides H)
+    k_cache,               # (B, Hkv, S, d) view incl. the new key at ``pos``
+                           # — or None on the gather-free paged route
+    v_cache,               # (B, Hkv, S, dv) (raw KV heads; Hkv divides H)
     q_lmk_sum: jnp.ndarray,  # (B, H, c, d)  updated running sums
     k_lmk_sum: jnp.ndarray,  # (B, H, c, d)
     stats,                 # (bv_m, bv_l, bv_acc) pre-append cache leaves
@@ -198,6 +199,7 @@ def ss_decode_attention_streaming(
     scale: float,
     seq_max: int | None = None,
     mode: str = "exact",
+    active_stats_fn=None,
 ):
     """One spectral-shift decode step with streamed B-side state.
 
@@ -208,14 +210,31 @@ def ss_decode_attention_streaming(
     read by the ``"exact"`` active-row recompute (the ``"frozen"`` tick
     never touches the horizon) and are taken with their RAW kv-head count —
     the per-query-head active rows group onto the kv heads, so no
-    O(H*S*d) head-broadcast is ever materialized on the hot path."""
+    O(H*S*d) head-broadcast is ever materialized on the hot path.
+
+    ``active_stats_fn`` (optional) REPLACES that dense active-row
+    recompute: called with the active landmark-mean row ``q_act``
+    (B, H, 1, d), it must return the exact softmax partials over keys
+    ``0..pos`` as ``(m (B,H,1,1), l (B,H,1,1), acc (B,H,1,dv))``. The
+    gather-free paged route (serve/decode.py) supplies a closure over the
+    block-table Pallas kernel here, with ``k_cache``/``v_cache`` = None —
+    no dense horizon view ever exists on that route."""
     if mode not in ("exact", "frozen"):
         raise ValueError(
             f"unknown decode_streaming mode {mode!r}; want 'exact' or "
             f"'frozen' (or route 'recompute' to ss_decode_attention)"
         )
-    s_len = k_cache.shape[2]
-    s_max = s_len if seq_max is None else seq_max
+    if k_cache is None:
+        if seq_max is None:
+            raise ValueError("k_cache=None (paged route) requires seq_max")
+        if mode == "exact" and active_stats_fn is None:
+            raise ValueError(
+                "exact mode without a cache view needs active_stats_fn"
+            )
+        s_max = seq_max
+    else:
+        s_len = k_cache.shape[2]
+        s_max = s_len if seq_max is None else seq_max
     c = q_lmk_sum.shape[2]
     counts = landmark_counts(pos, s_max, c)
     valid = counts > 0
@@ -247,13 +266,17 @@ def ss_decode_attention_streaming(
         # Query heads group onto the raw kv heads (GQA) so the einsums run
         # against the cache as stored instead of a broadcast copy.
         b, h = q_l.shape[:2]
-        hkv = k_cache.shape[1]
         q_act = jax.lax.dynamic_slice_in_dim(q_l, active, 1, axis=2)
-        q_g = q_act.reshape(b, hkv, h // hkv, q_l.shape[-1])
-        m_a, l_a, acc_a = recompute_stats(q_g, k_cache, v_cache, pos, scale)
-        m_a = m_a.reshape(b, h, 1, 1)
-        l_a = l_a.reshape(b, h, 1, 1)
-        acc_a = acc_a.reshape(b, h, 1, acc.shape[-1])
+        if active_stats_fn is not None:
+            m_a, l_a, acc_a = active_stats_fn(q_act)
+        else:
+            hkv = k_cache.shape[1]
+            q_g = q_act.reshape(b, hkv, h // hkv, q_l.shape[-1])
+            m_a, l_a, acc_a = recompute_stats(q_g, k_cache, v_cache, pos,
+                                              scale)
+            m_a = m_a.reshape(b, h, 1, 1)
+            l_a = l_a.reshape(b, h, 1, 1)
+            acc_a = acc_a.reshape(b, h, 1, acc.shape[-1])
         hit = (jnp.arange(c) == active)[:, None]          # (c, 1)
         m = jnp.where(hit, m_a, m)
         l = jnp.where(hit, l_a, l)

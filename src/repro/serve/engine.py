@@ -25,7 +25,14 @@ vLLM-style serving on top of ``decode_step``:
   ``ModelConfig.decode_streaming`` picks exact (token-identical, one-row
   recompute per tick) / frozen (fully streamed; the engine runs a lazy
   two-row rebase program when a lane crosses a segment boundary) /
-  recompute (the legacy O(c*S*d) path, kept as baseline).
+  recompute (the legacy O(c*S*d) path, kept as baseline);
+* with ``ServeConfig.decode_impl="paged"`` the decode tick is **gather-
+  free**: K/V stream straight from the block pools through the
+  block-table-aware Pallas kernel (kernels/paged_decode.py) and the new
+  token commits via a single-block scatter — frozen-mode ticks touch
+  O(c*d) state plus one block, independent of the horizon. ``"gather"``
+  (default) keeps the legacy dense-view tick, which also serves
+  ``decode_streaming="recompute"`` and the frozen boundary rebase.
 
 ``ServeConfig(paged=False, batched_prefill=False)`` reproduces the seed
 engine (dense per-lane caches, token-replay prefill) — kept as the
@@ -112,12 +119,38 @@ class ServeEngine:
         self.sched = Scheduler(alloc, self.max_lanes, serve.blocks_per_lane)
         self.sched.requeue_cb = self._on_preempt
 
+        # Decode-tick route: "paged" = gather-free (block-table Pallas
+        # kernel + single-block scatter commit); "gather" = legacy dense
+        # per-lane views. recompute-mode spectral shift rebuilds the dense
+        # B matrix and is only served by the gather route, so a paged
+        # request falls back (surfaced in stats()["decode_impl"]). The
+        # route is an EXPLICIT ServeConfig choice by contract; the decode
+        # plan warmed below steers kernel geometry (block_table view
+        # bucketing) and surfaces the measured gather-vs-paged winner in
+        # stats() for the operator — it does not override the route.
+        paged_ok = self.kv.has_paged_leaves and not (
+            cfg.decode_attention_impl == "spectral_shift"
+            and cfg.decode_streaming == "recompute"
+        )
+        self.decode_impl = (
+            "paged" if serve.decode_impl == "paged" and paged_ok else "gather"
+        )
         # landmark horizon pinned to max_seq regardless of view length
         step = functools.partial(
             decode_step, self.params, cfg, seq_max=self.max_seq
         )
-        # whole decode tick (gather -> step -> commit) as one XLA program
-        self._fused_step = self.kv.make_fused_step(jax.vmap(step))
+        # whole decode tick (read -> step -> commit) as one XLA program
+        if self.decode_impl == "paged":
+            pstep = functools.partial(
+                step, paged_meta=(serve.block_size, cfg.kernels_interpret)
+            )
+            self._fused_step = self.kv.make_paged_step(
+                lambda cache, tokens, table: pstep(
+                    cache, tokens, paged_table=table
+                )
+            )
+        else:
+            self._fused_step = self.kv.make_fused_step(jax.vmap(step))
         self.batched = serve.batched_prefill and prefill_supported(cfg)
 
         # decode_streaming="frozen": the active landmark row streams with a
@@ -147,16 +180,32 @@ class ServeEngine:
         # Pallas stream block size. Resolution loads the on-disk autotune
         # cache — honoring the ModelConfig.autotune_cache override, like
         # the Trainer does — so a tuned serving deployment skips the
-        # heuristics.
+        # heuristics; with ModelConfig.autotune=True an unseen decode key
+        # runs the measured gather-vs-paged sweep here, once, and the tick
+        # programs bake in the winner's block_table view bucketing.
         from repro.kernels import dispatch
 
         if cfg.autotune_cache:
             dispatch.set_cache_path(cfg.autotune_cache)
             dispatch.load_cache()
+        def _tune_decode(key):
+            # Measure at THIS deployment's block size (the kernel's key
+            # block is the storage block); autotune_decode's default would
+            # time a different grid geometry than the real tick runs.
+            return dispatch.autotune_decode(
+                key.n, key.c, key.d, dtype=key.dtype, backend=key.backend,
+                block_size=serve.block_size,
+            )
+
         self.decode_plan = dispatch.get_plan(dispatch.make_key(
             self.max_seq, cfg.num_landmarks, cfg.resolved_head_dim,
             cfg.compute_dtype, True, family="decode",
-        ))
+        ), autotune_enabled=cfg.autotune, tune_fn=_tune_decode)
+        # View-slot bucketing quantum for paged tick programs (0 = the
+        # power-of-two default in view_blocks_needed).
+        self._view_quantum = (
+            self.decode_plan.block_table if self.decode_impl == "paged" else 0
+        )
         prefill_block = 512
         if self.batched and serve.prefill_impl == "ss_fused":
             plan = dispatch.get_plan(dispatch.make_key(
@@ -296,7 +345,9 @@ class ServeEngine:
             tokens[i, 0, 0] = self.lanes[i].next_token
             positions[i] = self.lanes[i].pos
             mask[i] = True
-        nb_view = self.kv.view_blocks_needed(positions, active)
+        nb_view = self.kv.view_blocks_needed(
+            positions, active, quantum=self._view_quantum
+        )
         logits, new_storage = self._fused_step(
             self.kv._storage, jnp.asarray(tables), jnp.asarray(tokens),
             jnp.asarray(positions), jnp.asarray(mask), nb_view,
@@ -359,11 +410,14 @@ class ServeEngine:
             f"{'paged' if self.kv.has_paged_leaves else 'dense'}"
             f"+{'batched' if self.batched else 'replay'}-prefill"
         )
+        bt = self.decode_plan.block_table
         st["decode_plan"] = (
             f"{self.decode_plan.impl}/b{self.decode_plan.block_n}"
-            f"/{self.decode_plan.source}"
+            + (f"/t{bt}" if bt else "")
+            + f"/{self.decode_plan.source}"
         )
         st["decode_streaming"] = self.cfg.decode_streaming
+        st["decode_impl"] = self.decode_impl
         if self._frozen_rebase:
             st["rebases"] = self._rebases
         return st

@@ -12,19 +12,34 @@ Two pieces:
 
 * ``PagedKVCache`` — maps the ``cache_specs`` ParamSpec tree onto
   block-shaped device storage. Leaves with a ``cache_seq`` axis (attention
-  K/V, MLA latents) live in shared block pools shaped
-  ``(num_blocks, ..., block_size, ...)``; everything else (landmark running
-  sums, SSM states, ``pos``) is small and fixed-size, so it stays dense per
-  lane exactly like the seed engine. ``make_fused_step`` builds the whole
-  decode tick (gather lane views -> batched decode -> commit touched
-  blocks) as one jitted program; ``write_prefill`` installs a batched
-  prefill's result; ``gather_views`` assembles the lane-stacked dense tree
-  for inspection/tests.
+  K/V, MLA latents) live in shared block pools: the ``cache_seq`` axis of
+  each spec is replaced *in place* by a ``(num_blocks, block_size)`` pair,
+  so a stacked-layer leaf ``(L, B, H, S, D)`` pools as
+  ``(L, B, H, num_blocks, block_size, D)`` — the layer axis stays leading
+  and the tree remains ``lax.scan``-compatible without any per-tick
+  transpose. Everything else (landmark running sums, streaming B-side
+  stats, SSM states, ``pos``) is small and fixed-size, so it stays dense
+  per lane exactly like the seed engine. ``write_prefill`` installs a
+  batched prefill's result; ``gather_views`` assembles the lane-stacked
+  dense tree for inspection/tests.
 
 The memory win is at the pool: ``num_blocks`` is sized to the expected
-working set, not ``max_lanes * max_seq``. The per-tick gather materializes a
-transient dense view (the decode kernels are contiguous-K/V); a paged
-attention kernel would remove that copy and is left as a follow-up.
+working set, not ``max_lanes * max_seq``. Two decode-tick programs exist:
+
+* ``make_fused_step`` — the legacy *gather* route: assemble transient
+  dense per-lane views (O(S) HBM traffic per tick), run the batched decode
+  step, scatter the touched block back. Kept as the ``recompute``-mode
+  baseline; the frozen-mode boundary rebase (``make_rebase_step``) also
+  reads through this gather.
+* ``make_paged_step`` — the *gather-free* route
+  (``ServeConfig.decode_impl="paged"``): the decode step reads K/V
+  directly from the shared pools through the block-table-aware Pallas
+  kernel (``kernels/paged_decode.py`` — the lane's block table rides into
+  the kernel as a scalar-prefetch SMEM operand and selects pool blocks in
+  the index map, so no dense view ever exists), and the new token's K/V
+  commits via a single-block scatter. A ``decode_streaming="frozen"``
+  tick therefore touches only the written block plus the dense stats
+  leaves: O(c*d) + one block per token, independent of the horizon.
 """
 from __future__ import annotations
 
@@ -40,6 +55,21 @@ from repro.models.params import ParamSpec
 from repro.serve.kv_cache import cache_leaf_layout
 
 ZERO_BLOCK = 0  # reserved all-zero block id backing unallocated table slots
+
+
+def bucket_view_slots(need: int, cap: int, quantum: int = 0) -> int:
+    """Round a required block-table slot count up to a compile bucket:
+    next power of two by default, or the next multiple of ``quantum``
+    (a measured ``Plan.block_table``), capped at ``cap``. One compiled
+    tick program exists per distinct result — shared by the engine's
+    ``view_blocks_needed`` and the decode autotune harness so the sweep
+    times exactly the grid shapes the engine runs."""
+    if quantum > 0:
+        return min(-(-need // quantum) * quantum, cap)
+    nb = 1
+    while nb < need:
+        nb *= 2
+    return min(nb, cap)
 
 
 # ==========================================================================
@@ -152,11 +182,15 @@ class PagedKVCache:
         for info in self.infos:
             dt = info.spec.dtype or jnp.float32
             if self.paged and info.seq_axis is not None:
-                shape = list(info.spec.shape)
-                shape[info.seq_axis] = self.block_size
-                self._storage.append(
-                    jnp.zeros((self.num_blocks, *shape), dt)
-                )
+                # Pool layout: the cache_seq axis splits IN PLACE into
+                # (num_blocks, block_size), so leading layer/batch axes stay
+                # leading (lax.scan over layers keeps working on pools).
+                j = info.seq_axis
+                shape = info.spec.shape
+                self._storage.append(jnp.zeros(
+                    (*shape[:j], self.num_blocks, self.block_size,
+                     *shape[j + 1:]), dt,
+                ))
             else:
                 self._storage.append(
                     jnp.zeros((self.max_lanes, *info.spec.shape), dt)
@@ -172,12 +206,13 @@ class PagedKVCache:
 
     # -- assemble the dense view decode_step expects -------------------------
     def _gather_leaf(self, arr, info: _LeafInfo, tables) -> jnp.ndarray:
-        """Pool (num_blocks, ..., bs, ...) + tables (lanes, nb) ->
+        """Pool (..., num_blocks, bs, ...) + tables (lanes, nb) ->
         lane-stacked view (lanes, ..., nb*bs, ...)."""
         j = info.seq_axis
-        g = jnp.take(arr, tables, axis=0)  # (lanes, nb, ..., bs, ...)
-        g = jnp.moveaxis(g, 1, 1 + j)      # nb next to its bs axis
         shape = info.spec.shape
+        # take with 2D indices at the block axis: (..., lanes, nb, bs, ...)
+        g = jnp.take(arr, tables, axis=j)
+        g = jnp.moveaxis(g, j, 0)          # lanes leading
         view_len = tables.shape[1] * self.block_size
         return g.reshape(self.max_lanes, *shape[:j], view_len,
                          *shape[j + 1:])
@@ -227,9 +262,11 @@ class PagedKVCache:
             split = leaf.reshape(
                 *shape[:j], n_blocks_pad, bs, *shape[j + 1:]
             )
-            split = jnp.moveaxis(split, j, 0)  # (n_blocks_pad, ..., bs, ...)
+            pre = (slice(None),) * j
             ids = jnp.asarray(table_row[:nb], jnp.int32)
-            self._storage[idx] = self._storage[idx].at[ids].set(split[:nb])
+            self._storage[idx] = self._storage[idx].at[(*pre, ids)].set(
+                split[(*pre, slice(0, nb))]
+            )
 
     def make_fused_step(self, vmapped_decode_step):
         """One jitted XLA program for the whole decode tick:
@@ -278,9 +315,12 @@ class PagedKVCache:
                 ids = tables[jnp.arange(n_lanes), positions // bs]
                 # inactive lanes dump into the zero block, re-zeroed below
                 ids = jnp.where(active, ids, ZERO_BLOCK)
-                pool = arr.at[ids].set(blocks.astype(arr.dtype))
-                pool = pool.at[ZERO_BLOCK].set(
-                    jnp.zeros_like(pool[ZERO_BLOCK])
+                pre = (slice(None),) * j
+                pool = arr.at[(*pre, ids)].set(
+                    jnp.moveaxis(blocks, 0, j).astype(arr.dtype)
+                )
+                pool = pool.at[(*pre, ZERO_BLOCK)].set(
+                    jnp.zeros_like(pool[(*pre, ZERO_BLOCK)])
                 )
                 out.append(pool)
             return logits, out
@@ -291,6 +331,77 @@ class PagedKVCache:
             if self.paged:
                 tables = tables[:, :n_view_blocks]
             return jitted(storage, tables, tokens, positions, active)
+
+        return call
+
+    def make_paged_step(self, decode_step_fn):
+        """One jitted XLA program for the *gather-free* decode tick
+        (``ServeConfig.decode_impl="paged"``): pool leaves are broadcast
+        unbatched through the lane vmap, the per-lane block table rides
+        along as a traced operand (reaching the Pallas decode kernel in
+        ``kernels/paged_decode.py`` as a scalar-prefetch SMEM input that
+        selects pool blocks in the index map), and every seq-shaped cache
+        leaf comes back from the step as the lane's NEW TOKEN only —
+        committed here with a single-block scatter. No dense view of the
+        horizon is ever materialized: a ``decode_streaming="frozen"`` tick
+        touches the dense stats leaves plus exactly one pool block per
+        lane.
+
+        ``decode_step_fn(cache, tokens, table) -> (logits, new_cache)``
+        must be the paged-mode decode step (``serve/decode.py`` with
+        ``paged_meta`` set): it never writes pool leaves and returns seq
+        leaves with a length-1 seq axis holding the new token.
+
+        Returns ``fn(storage, tables, tokens, positions, active,
+        n_view_blocks) -> (logits, new_storage)``; like ``make_fused_step``
+        one XLA program compiles per distinct (bucketed) ``n_view_blocks``
+        and pool buffers are donated, so block writes update in place."""
+        if not self.paged:
+            raise ValueError(
+                "make_paged_step needs paged seq leaves; use make_fused_step"
+            )
+        infos, treedef = self.infos, self.treedef
+        bs = self.block_size
+        n_lanes = self.max_lanes
+
+        cache_axes = jax.tree_util.tree_unflatten(
+            treedef, [None if i.seq_axis is not None else 0 for i in infos]
+        )
+        vstep = jax.vmap(decode_step_fn, in_axes=(cache_axes, 0, 0))
+
+        def fused(storage, tables, tokens, positions, active):
+            cache = jax.tree_util.tree_unflatten(treedef, storage)
+            logits, new_cache = vstep(cache, tokens, tables)
+            new_leaves = jax.tree_util.tree_leaves(new_cache)
+            ids = tables[jnp.arange(n_lanes), positions // bs]
+            # inactive lanes dump into the zero block, re-zeroed below
+            ids = jnp.where(active, ids, ZERO_BLOCK)
+            offs = positions % bs
+            out = []
+            for arr, new, info in zip(storage, new_leaves, infos):
+                j = info.seq_axis
+                if j is None:
+                    mask = active.reshape((n_lanes,) + (1,) * (arr.ndim - 1))
+                    out.append(jnp.where(mask, new.astype(arr.dtype), arr))
+                    continue
+                # new (lanes, *shape[:j], 1, *shape[j+1:]): the new token.
+                # Adjacent advanced indices (ids, offs) land at the pool's
+                # (block, in-block) axes, so the scatter touches one token
+                # row per leaf per lane.
+                pre = (slice(None),) * j
+                vals = jnp.moveaxis(jnp.squeeze(new, axis=1 + j), 0, j)
+                pool = arr.at[(*pre, ids, offs)].set(vals.astype(arr.dtype))
+                pool = pool.at[(*pre, ZERO_BLOCK)].set(
+                    jnp.zeros_like(pool[(*pre, ZERO_BLOCK)])
+                )
+                out.append(pool)
+            return logits, out
+
+        jitted = jax.jit(fused, donate_argnums=(0,))
+
+        def call(storage, tables, tokens, positions, active, n_view_blocks):
+            return jitted(storage, tables[:, :n_view_blocks], tokens,
+                          positions, active)
 
         return call
 
@@ -335,16 +446,17 @@ class PagedKVCache:
 
         return call
 
-    def view_blocks_needed(self, positions, lanes) -> int:
-        """Bucketed (next power of two) block count covering the deepest
-        active position; a handful of tick programs total."""
+    def view_blocks_needed(self, positions, lanes, quantum: int = 0) -> int:
+        """Bucketed block count covering the deepest active position — one
+        compiled tick program per distinct result. ``quantum`` > 0 (a
+        measured ``Plan.block_table``) rounds up to that multiple instead
+        of the next power of two."""
         if not self.paged or not lanes:
             return self.max_seq // self.block_size
         need = max(int(positions[i]) // self.block_size + 1 for i in lanes)
-        nb = 1
-        while nb < need:
-            nb *= 2
-        return min(nb, self.max_seq // self.block_size)
+        return bucket_view_slots(
+            need, self.max_seq // self.block_size, quantum
+        )
 
     def zero_lane_dense(self, lane: int) -> None:
         """Fresh-request reset of a lane's dense (non-paged) state."""
@@ -365,4 +477,5 @@ class PagedKVCache:
             if info.seq_axis is None:
                 continue
             arr = self._storage[idx]
-            self._storage[idx] = arr.at[new].set(arr[old])
+            pre = (slice(None),) * info.seq_axis
+            self._storage[idx] = arr.at[(*pre, new)].set(arr[(*pre, old)])

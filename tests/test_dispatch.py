@@ -186,8 +186,13 @@ class TestKeyFamilies:
         assert key != dispatch.make_key(
             32768, 64, 128, jnp.bfloat16, True, backend="tpu"
         )
-        plan = dispatch.heuristic_plan(key)
-        assert plan.impl == "jnp"  # decode math lives on the jnp path
+        # Accelerators default to the gather-free paged kernel; CPU keeps
+        # the gather route (interpret-mode Pallas loses to jnp there).
+        assert dispatch.heuristic_plan(key).impl == "paged"
+        cpu = dispatch.make_key(
+            32768, 64, 128, jnp.bfloat16, True, backend="cpu", family="decode"
+        )
+        assert dispatch.heuristic_plan(cpu).impl == "jnp"
 
     def test_seq_shards_key_roundtrip_and_heuristic(self):
         key = dispatch.make_key(
@@ -237,24 +242,42 @@ class TestKeyFamilies:
         ref = spectral_shift_attention(q, q, q, cfg)
         np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
 
-    def test_autotune_not_measured_for_mesh_or_decode_keys(self):
+    def test_autotune_not_measured_for_mesh_keys(self):
         """Regression: get_plan(autotune_enabled=True) must not run the
-        measured sweep for seq_shards/decode keys — the harness measures
-        the single-device self-attention program and would register the
-        winner under a different key, re-tuning on every trace."""
+        measured sweep for seq_shards keys — the harness measures the
+        single-device program and would register the winner under a
+        different key, re-tuning on every trace. (decode keys now DO
+        measure, through their own harness — see TestBlockTablePlans.)"""
         calls = []
 
         def boom(key):
             calls.append(key)
             raise AssertionError("measured autotune ran for a mesh key")
 
-        for key in (
-            dispatch.make_key(1024, 16, 16, jnp.float32, False, seq_shards=4),
-            dispatch.make_key(1024, 16, 16, jnp.float32, True, family="decode"),
-        ):
-            plan = dispatch.get_plan(key, autotune_enabled=True, tune_fn=boom)
-            assert plan.source == "heuristic"
+        key = dispatch.make_key(1024, 16, 16, jnp.float32, False, seq_shards=4)
+        plan = dispatch.get_plan(key, autotune_enabled=True, tune_fn=boom)
+        assert plan.source == "heuristic"
         assert not calls
+
+    def test_autotune_measures_decode_keys_via_own_harness(self):
+        """Decode keys route to the decode tune_fn and register under the
+        decode key itself (no re-tuning on later traces)."""
+        key = dispatch.make_key(1024, 16, 16, jnp.float32, True,
+                                family="decode")
+        calls = []
+
+        def tune(k):
+            calls.append(k)
+            plan = dispatch.Plan(impl="paged", block_n=512, block_table=4,
+                                 source="autotuned")
+            dispatch.register_plan(k, plan)
+            return plan
+
+        plan = dispatch.get_plan(key, autotune_enabled=True, tune_fn=tune)
+        assert calls == [key] and plan.impl == "paged"
+        again = dispatch.get_plan(key, autotune_enabled=True, tune_fn=tune)
+        assert calls == [key]  # registry hit, no second sweep
+        assert again.block_table == 4
 
 
 class TestBlockCPlans:
@@ -270,7 +293,7 @@ class TestBlockCPlans:
         path = dispatch.save_cache()
         with open(path) as f:
             payload = json.load(f)
-        assert payload["version"] == 2
+        assert payload["version"] == 3  # v3 added block_table
         assert payload["plans"][key.encode()]["block_c"] == 32
         dispatch.clear_registry()
         dispatch.load_cache()
@@ -302,3 +325,69 @@ class TestBlockCPlans:
         dispatch.clear_registry()
         dispatch.load_cache()
         assert dispatch.get_plan(key).block_c == plan.block_c
+
+
+class TestBlockTablePlans:
+    """block_table in the Plan/value layer (the paged decode kernel's
+    view-slot bucketing quantum): v3 cache round-trip, v2/v1 caches stay
+    readable, the measured decode sweep, and routing guards."""
+
+    def test_cache_v3_round_trip_with_block_table(self):
+        key = dispatch.make_key(
+            32768, 64, 128, jnp.bfloat16, True, backend="tpu",
+            family="decode",
+        )
+        plan = dispatch.Plan(
+            impl="paged", block_n=512, block_table=8, source="autotuned"
+        )
+        dispatch.register_plan(key, plan)
+        path = dispatch.save_cache()
+        with open(path) as f:
+            payload = json.load(f)
+        assert payload["version"] == 3
+        assert payload["plans"][key.encode()]["block_table"] == 8
+        dispatch.clear_registry()
+        dispatch.load_cache()
+        got = dispatch.get_plan(key)
+        assert (got.impl, got.block_table) == ("paged", 8)
+
+    def test_legacy_v2_cache_readable(self):
+        """v2 entries (block_c, no block_table) load with block_table=0."""
+        key = dispatch.make_key(4096, 64, 64, jnp.float32, False, backend="tpu")
+        payload = {
+            "version": 2,
+            "plans": {key.encode(): {
+                "impl": "fused", "block_n": 256, "block_c": 16,
+            }},
+        }
+        with open(dispatch.cache_path(), "w") as f:
+            json.dump(payload, f)
+        assert dispatch.load_cache() == 1
+        got = dispatch.get_plan(key)
+        assert (got.impl, got.block_c, got.block_table) == ("fused", 16, 0)
+
+    def test_autotune_decode_sweep(self):
+        """The measured decode harness runs gather-vs-paged at the serve
+        shape, sweeps the block_table grid, and persists the winner under
+        the decode key."""
+        plan = dispatch.autotune_decode(
+            256, 16, 16, block_size=16, block_table_candidates=(0, 4),
+            reps=1,
+        )
+        assert plan.source == "autotuned"
+        assert plan.impl in ("jnp", "paged")
+        if plan.impl == "paged":
+            assert plan.block_table in (0, 4)
+        key = dispatch.make_key(256, 16, 16, jnp.float32, True,
+                                family="decode")
+        dispatch.clear_registry()
+        dispatch.load_cache()
+        got = dispatch.get_plan(key)
+        assert (got.impl, got.block_table) == (plan.impl, plan.block_table)
+
+    def test_paged_rejected_for_self_attention(self):
+        q = jax.random.normal(jax.random.PRNGKey(0), (1, 64, 16)) * 0.5
+        with pytest.raises(ValueError, match="decode"):
+            dispatch.dispatch_ss_attention(
+                q, q, q, SSConfig(num_landmarks=8), backend="paged"
+            )

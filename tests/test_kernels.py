@@ -444,3 +444,151 @@ class TestBlockCTiling:
         ref = ss_attention_fused(q, k, v, cfg, interpret=True)
         out = ss_attention_fused(q, k, v, cfg, block_c=8, interpret=True)
         np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+
+class TestPagedDecodeKernel:
+    """Gather-free paged row stats (kernels/paged_decode.py): the block-
+    table-aware kernel must reproduce the jnp recompute over the gathered
+    dense view — including permuted tables, ragged last blocks, ZERO_BLOCK
+    tail slots, and the zeros-empty-row convention — and its custom_vmap
+    rule must lower the lane batch to one multi-lane launch bitwise."""
+
+    def _setup(self, lanes=3, hkv=2, r=4, d=16, dv=8, bs=8, nb_pool=12,
+               n_slots=5, seed=40):
+        from repro.serve.paged import ZERO_BLOCK
+
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.normal(size=(lanes, hkv, r, d)), jnp.float32)
+        k_pool = jnp.asarray(
+            rng.normal(size=(hkv, nb_pool, bs, d)), jnp.float32
+        ).at[:, ZERO_BLOCK].set(0.0)
+        v_pool = jnp.asarray(
+            rng.normal(size=(hkv, nb_pool, bs, dv)), jnp.float32
+        ).at[:, ZERO_BLOCK].set(0.0)
+        # Distinct permuted blocks per lane, ZERO_BLOCK backing the tail.
+        blocks = rng.permutation(np.arange(1, nb_pool))
+        tables = np.full((lanes, n_slots), ZERO_BLOCK, np.int32)
+        tables[0, :4] = blocks[:4]
+        tables[1, :3] = blocks[4:7]
+        tables[2, :5] = np.concatenate([blocks[7:], blocks[:1]])
+        # ragged: none of these is a block multiple
+        kv_valid = jnp.asarray([27, 17, 39], jnp.int32)
+        return q, k_pool, v_pool, jnp.asarray(tables), kv_valid
+
+    def _ref(self, q, k_pool, v_pool, tables, kv_valid, lane, scale):
+        from repro.serve.decode_state import recompute_stats
+
+        tb = np.asarray(tables[lane])
+        kv = jnp.concatenate([k_pool[:, b] for b in tb], axis=1)[None]
+        vv = jnp.concatenate([v_pool[:, b] for b in tb], axis=1)[None]
+        return recompute_stats(
+            q[lane][None], kv, vv, int(kv_valid[lane]) - 1, scale
+        )
+
+    def test_vs_dense_recompute(self):
+        from repro.kernels.paged_decode import paged_row_stats_lanes
+
+        q, k_pool, v_pool, tables, kv_valid = self._setup()
+        scale = 0.3
+        m, l, acc = paged_row_stats_lanes(
+            q, (k_pool,), v_pool, tables, kv_valid, scale=scale,
+            block_size=8, interpret=True,
+        )
+        for lane in range(q.shape[0]):
+            m_r, l_r, acc_r = self._ref(q, k_pool, v_pool, tables, kv_valid,
+                                        lane, scale)
+            # anchor-invariant comparisons: log-mass and normalized BV
+            np.testing.assert_allclose(
+                np.log(np.maximum(np.asarray(l[lane]), 1e-30))
+                + np.asarray(m[lane]),
+                np.asarray(jnp.log(jnp.maximum(l_r[0], 1e-30)) + m_r[0]),
+                atol=1e-5, rtol=1e-5,
+            )
+            np.testing.assert_allclose(
+                np.asarray(acc[lane] / jnp.maximum(l[lane], 1e-30)),
+                np.asarray(acc_r[0] / jnp.maximum(l_r[0], 1e-30)),
+                atol=1e-5, rtol=1e-5,
+            )
+
+    def test_custom_vmap_matches_batched_launch(self):
+        from repro.kernels.paged_decode import (
+            paged_row_stats, paged_row_stats_lanes,
+        )
+
+        q, k_pool, v_pool, tables, kv_valid = self._setup()
+        ref = paged_row_stats_lanes(
+            q, (k_pool,), v_pool, tables, kv_valid, scale=0.3, block_size=8,
+            interpret=True,
+        )
+        got = jax.jit(jax.vmap(
+            lambda qq, tt, kk: paged_row_stats(
+                qq, (k_pool,), v_pool, tt, kk, scale=0.3, block_size=8,
+                interpret=True,
+            ),
+            in_axes=(0, 0, 0),
+        ))(q, tables, kv_valid)
+        for g, r in zip(got, ref):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+    def test_lane_batched_pools_rejected(self):
+        from repro.kernels.paged_decode import paged_row_stats
+
+        q, k_pool, v_pool, tables, kv_valid = self._setup()
+        k_lanes = jnp.broadcast_to(k_pool[None], (q.shape[0], *k_pool.shape))
+        with pytest.raises(NotImplementedError, match="broadcast"):
+            jax.vmap(
+                lambda qq, kp, tt, kk: paged_row_stats(
+                    qq, (kp,), v_pool, tt, kk, scale=0.3, block_size=8,
+                    interpret=True,
+                ),
+                in_axes=(0, 0, 0, 0),
+            )(q, k_lanes, tables, kv_valid)
+
+    def test_no_valid_keys_emits_absorbing_state(self):
+        """kv_valid=0: (m=-inf, l=0, acc=0) — the anchor must be absorbing
+        so that flash-merging a strongly negative token score re-anchors
+        at that score instead of underflowing against a finite anchor."""
+        from repro.kernels.ops import flash_merge
+        from repro.kernels.paged_decode import paged_row_stats
+
+        q, k_pool, v_pool, tables, _ = self._setup()
+        m, l, acc = paged_row_stats(
+            q[0], (k_pool,), v_pool, tables[0], 0, scale=0.3, block_size=8,
+            interpret=True,
+        )
+        assert np.all(np.asarray(l) == 0.0) and np.all(np.asarray(acc) == 0.0)
+        assert np.all(np.asarray(m) <= -1e29)
+        # merge one token with a score deep in exp-underflow territory
+        s = jnp.full_like(m, -200.0)
+        v = jnp.ones_like(acc)
+        m2, l2, acc2 = flash_merge(m, l, acc, s, jnp.ones_like(s), v)
+        np.testing.assert_allclose(np.asarray(acc2 / l2), np.asarray(v))
+
+    def test_two_pool_split_matches_single(self):
+        """MLA contract: scores accumulated across (latent, rope) pools ==
+        one kernel over the feature-concatenated pool."""
+        from repro.kernels.paged_decode import paged_row_stats_lanes
+
+        q, k_pool, v_pool, tables, kv_valid = self._setup()
+        ref = paged_row_stats_lanes(
+            q, (k_pool,), v_pool, tables, kv_valid, scale=0.3, block_size=8,
+            interpret=True,
+        )
+        got = paged_row_stats_lanes(
+            q, (k_pool[..., :10], k_pool[..., 10:]), v_pool, tables,
+            kv_valid, scale=0.3, block_size=8, interpret=True,
+        )
+        for g, r in zip(got, ref):
+            np.testing.assert_allclose(
+                np.asarray(g), np.asarray(r), atol=1e-5, rtol=1e-5
+            )
+
+    def test_split_dim_mismatch_rejected(self):
+        from repro.kernels.paged_decode import paged_row_stats_lanes
+
+        q, k_pool, v_pool, tables, kv_valid = self._setup()
+        with pytest.raises(ValueError, match="sum"):
+            paged_row_stats_lanes(
+                q, (k_pool[..., :10],), v_pool, tables, kv_valid,
+                scale=0.3, block_size=8, interpret=True,
+            )
