@@ -6,11 +6,24 @@ forward pass vs one tick per prompt token) and wall-clock seconds. The
 paged engine's tick TTFT is 1 by construction; the replay engine's equals
 the prompt length.
 
+Besides the CSV rows, results land in two machine-readable artifacts:
+
+* ``BENCH_serve.json`` (repo top level, same ``schema``/``cells`` shape as
+  ``BENCH_decode.json``) so the serving perf trajectory is trackable
+  across PRs;
+* a telemetry JSONL dump from the final throughput cell, run with
+  ``ServeConfig.telemetry`` enabled (``REPRO_TELEMETRY_JSONL`` overrides
+  the path) — TTFT/ITL histograms, per-tick spans, pool gauges, autotune
+  counters. CI's bench-smoke job uploads it as an artifact.
+
     PYTHONPATH=src python -m benchmarks.run --only serve
+    REPRO_BENCH_SMOKE=1 ... (one prompt length, fewer reps, for CI)
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
 
 import jax
@@ -25,6 +38,20 @@ from repro.serve.engine import Request, ServeEngine
 PROMPT_LENS = (32, 64, 128, 256)
 MAX_SEQ = 320
 MAX_NEW = 8
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+TELEMETRY_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "results", "telemetry_serve.jsonl"
+)
+
+_cells: dict[str, dict] = {}
+
+
+def _smoke() -> bool:
+    return os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+
+
+def _record(cell: str, metric: str, value: float) -> None:
+    _cells.setdefault(cell, {})[metric] = round(float(value), 4)
 
 
 def _setup():
@@ -73,7 +100,7 @@ def _ttft(cfg, params, serve, prompt_len: int, reps: int = 3) -> tuple[int, floa
     return best
 
 
-def _throughput(cfg, params, serve, n_req: int = 8) -> float:
+def _throughput(cfg, params, serve, n_req: int = 8) -> tuple[float, ServeEngine]:
     """tok/s over a mixed batch; the identical batch runs once un-timed on
     the same engine so compiles aren't billed."""
     eng = ServeEngine(cfg, params, serve=serve)
@@ -95,16 +122,48 @@ def _throughput(cfg, params, serve, n_req: int = 8) -> float:
     eng.run()
     dt = time.perf_counter() - t0
     after = sum(len(v) for v in eng.finished.values())
-    return (after - before) / dt
+    return (after - before) / dt, eng
+
+
+def _telemetry_cell(cfg, params, lanes: int, path: str) -> None:
+    """One frozen-streaming throughput run with full telemetry enabled —
+    exercises TTFT/ITL histograms, per-tick spans, drift/spectrum monitors
+    and pool gauges, then dumps the JSONL artifact."""
+    fcfg = dataclasses.replace(cfg, decode_streaming="frozen")
+    serve = dataclasses.replace(_serve_cfg(True, lanes), telemetry=True)
+    tps, eng = _throughput(fcfg, params, serve, n_req=4 if _smoke() else 8)
+    _record(f"paged|frozen|lanes{lanes}", "tok_per_s_telemetry", tps)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    n = eng.telemetry.dump_jsonl(path, meta={
+        "bench": "serve", "host": jax.default_backend(), "lanes": lanes,
+    })
+    print(f"[bench_serve] telemetry dump: {n} lines -> {path}")
+
+
+def write_json(path: str = JSON_PATH) -> None:
+    payload = {
+        "bench": "serve",
+        "schema": "impl|mode|cell -> {ttft_ticks, ttft_s, tok_per_s, ...}",
+        "shape": {"max_seq": MAX_SEQ, "max_new": MAX_NEW,
+                  "prompt_lens": list(PROMPT_LENS)},
+        "host": jax.default_backend(),
+        "cells": dict(sorted(_cells.items())),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
 
 
 def run(csv_rows: list[str]) -> None:
+    _cells.clear()
     cfg, params = _setup()
+    prompt_lens = (32,) if _smoke() else PROMPT_LENS
+    reps = 1 if _smoke() else 3
     fused = dataclasses.replace(_serve_cfg(True, 1), prefill_impl="ss_fused")
-    for plen in PROMPT_LENS:
-        ticks_d, sec_d = _ttft(cfg, params, _serve_cfg(False, 1), plen)
-        ticks_p, sec_p = _ttft(cfg, params, _serve_cfg(True, 1), plen)
-        _, sec_f = _ttft(cfg, params, fused, plen)
+    for plen in prompt_lens:
+        ticks_d, sec_d = _ttft(cfg, params, _serve_cfg(False, 1), plen, reps)
+        ticks_p, sec_p = _ttft(cfg, params, _serve_cfg(True, 1), plen, reps)
+        _, sec_f = _ttft(cfg, params, fused, plen, reps)
         csv_rows.append(f"serve,prompt{plen},ttft_ticks_dense,{ticks_d}")
         csv_rows.append(f"serve,prompt{plen},ttft_ticks_paged,{ticks_p}")
         csv_rows.append(f"serve,prompt{plen},ttft_s_dense,{sec_d:.4f}")
@@ -120,11 +179,24 @@ def run(csv_rows: list[str]) -> None:
             f"serve,prompt{plen},ttft_wall_speedup_ss_fused,"
             f"{sec_d / max(sec_f, 1e-9):.1f}"
         )
-    for lanes in (2, 4):
-        tps_d = _throughput(cfg, params, _serve_cfg(False, lanes))
-        tps_p = _throughput(cfg, params, _serve_cfg(True, lanes))
+        _record(f"dense|replay|prompt{plen}", "ttft_ticks", ticks_d)
+        _record(f"dense|replay|prompt{plen}", "ttft_s", sec_d)
+        _record(f"paged|batched|prompt{plen}", "ttft_ticks", ticks_p)
+        _record(f"paged|batched|prompt{plen}", "ttft_s", sec_p)
+        _record(f"paged|ss_fused|prompt{plen}", "ttft_s", sec_f)
+    lane_counts = (2,) if _smoke() else (2, 4)
+    for lanes in lane_counts:
+        tps_d, _ = _throughput(cfg, params, _serve_cfg(False, lanes))
+        tps_p, _ = _throughput(cfg, params, _serve_cfg(True, lanes))
         csv_rows.append(f"serve,lanes{lanes},tok_per_s_dense,{tps_d:.1f}")
         csv_rows.append(f"serve,lanes{lanes},tok_per_s_paged,{tps_p:.1f}")
+        _record(f"dense|replay|lanes{lanes}", "tok_per_s", tps_d)
+        _record(f"paged|batched|lanes{lanes}", "tok_per_s", tps_p)
+    _telemetry_cell(
+        cfg, params, lanes=2,
+        path=os.environ.get("REPRO_TELEMETRY_JSONL", TELEMETRY_PATH),
+    )
+    write_json()
 
 
 if __name__ == "__main__":

@@ -48,6 +48,9 @@ def main():
     ap.add_argument("--streaming", default="exact",
                     choices=["recompute", "exact", "frozen"],
                     help="ModelConfig.decode_streaming policy")
+    ap.add_argument("--telemetry", metavar="PATH", default=None,
+                    help="enable the telemetry subsystem, dump the JSONL "
+                         "to PATH and print a one-screen summary at exit")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(
@@ -63,6 +66,7 @@ def main():
         batched_prefill=args.mode != "dense",
         prefill_impl="ss_fused" if args.mode == "ss_fused" else "replay",
         decode_impl=args.tick,
+        telemetry=args.telemetry is not None,
     )
     engine = ServeEngine(cfg, params, serve=serve)
 
@@ -99,6 +103,39 @@ def main():
     if "kv" in st:
         print(f"  kv pool: {st['kv']['num_blocks']} blocks, "
               f"final utilization {st['kv']['utilization']:.2f}")
+
+    if args.telemetry:
+        n = engine.telemetry.dump_jsonl(args.telemetry, meta={
+            "example": "serve_batched", "mode": args.mode,
+            "streaming": args.streaming, "lanes": args.lanes,
+        })
+        snap = engine.telemetry.snapshot()["metrics"]
+
+        def pct(name, p):
+            s = snap.get(name, {})
+            v = s.get(p)
+            return f"{v * 1e3:.2f}ms" if v is not None else "n/a"
+
+        def val(name):
+            s = snap.get(name, {})
+            return s.get("value", 0.0)
+
+        print(f"  telemetry: {n} JSONL lines -> {args.telemetry} "
+              f"({st['telemetry']['events']} spans)")
+        print(f"    ttft    p50={pct('serve_ttft_seconds', 'p50')} "
+              f"p99={pct('serve_ttft_seconds', 'p99')}   "
+              f"itl p50={pct('serve_itl_seconds', 'p50')} "
+              f"p99={pct('serve_itl_seconds', 'p99')}")
+        print(f"    rebases={val('serve_rebases_total'):.0f} "
+              f"preemptions={val('serve_preempted_total'):.0f} "
+              f"pool occupancy={val('pool_utilization'):.2f} "
+              f"fragmentation={val('pool_fragmentation'):.2f}")
+        drift = snap.get("drift_rebase_residual", {})
+        if drift.get("count"):
+            print(f"    drift residual p50={drift['p50']:.3g} "
+                  f"p99={drift['p99']:.3g} over {drift['count']} rebases; "
+                  f"spectrum top1 ema="
+                  f"{val('spectrum_mass_top1_ema'):.3f}")
 
 
 if __name__ == "__main__":

@@ -205,6 +205,11 @@ class ServeConfig:
                                   #   to gather when unsupported)
     eos_id: int = 2
     seed: int = 0
+    telemetry: bool = False       # unified metrics/tracing/drift monitors
+                                  # (src/repro/telemetry): off = no-op
+                                  # registry + tracer on the hot path, no
+                                  # extra device programs; the scheduler's
+                                  # latency percentiles work either way
 
     @property
     def blocks_per_lane(self) -> int:

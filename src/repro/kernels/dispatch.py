@@ -50,9 +50,34 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.attention import SSConfig, spectral_shift_attention
+from repro.telemetry.metrics import NullRegistry
 
 _IMPLS = ("fused", "jnp", "interpret", "sharded", "paged")
 _FAMILIES = ("self", "decode")
+
+# Telemetry sink. The import-time default is the no-op registry — plan
+# resolution happens at trace time on hot paths, and with telemetry off the
+# counters must cost nothing. ServeEngine/Trainer install their shared
+# registry via set_metrics() when ServeConfig.telemetry is enabled.
+_METRICS = NullRegistry()
+
+
+def set_metrics(registry) -> None:
+    """Install a metrics registry for plan-resolution counters (process-
+    wide, like the plan registry itself). Pass ``NullRegistry()`` to
+    detach."""
+    global _METRICS
+    _METRICS = registry
+
+
+def _count_resolution(outcome: str) -> None:
+    # outcome: memory|disk (cache tier hits), miss_sweep (measured
+    # autotune ran), miss_heuristic (backend default used)
+    _METRICS.counter(
+        "autotune_plan_resolutions_total",
+        help="get_plan outcomes by resolution tier",
+        labels=("outcome",),
+    ).labels(outcome=outcome).inc()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -280,12 +305,14 @@ def get_plan(key: PlanKey, *, autotune_enabled: bool = False,
     with _lock:
         plan = _REGISTRY.get(key)
     if plan is not None:
+        _count_resolution("memory")
         return plan
     if cache_path() not in _CACHE_LOADED:
         load_cache()
         with _lock:
             plan = _REGISTRY.get(key)
         if plan is not None:
+            _count_resolution("disk")
             return plan
     if autotune_enabled:
         if key.seq_shards > 1:
@@ -294,13 +321,16 @@ def get_plan(key: PlanKey, *, autotune_enabled: bool = False,
             # key (no seq_shards) and re-run the timing sweep on every
             # trace of the requested key. Heuristics (or pre-registered
             # plans) steer context-parallel cells.
+            _count_resolution("miss_heuristic")
             return heuristic_plan(key)
+        _count_resolution("miss_sweep")
         if key.family == "decode":
             # Decode keys get their own harness: gather-route jnp recompute
             # vs the paged kernel across the (block_n, block_table) grid at
             # the serve shape, registered under the decode key itself.
             return (tune_fn or _default_decode_tune)(key)
         return (tune_fn or _default_tune)(key)
+    _count_resolution("miss_heuristic")
     return heuristic_plan(key)
 
 
@@ -339,6 +369,10 @@ def autotune(
     accumulators for re-streaming K/V per landmark tile."""
     from repro.kernels.ops import ss_attention_fused
 
+    _METRICS.counter(
+        "autotune_sweeps_total", help="measured autotune sweeps run",
+        labels=("family",),
+    ).labels(family="self").inc()
     key = make_key(n, c, d, dtype, causal, backend=backend)
     if interpret is None:
         interpret = key.backend == "cpu"
@@ -427,6 +461,10 @@ def autotune_decode(
     from repro.serve.decode_state import recompute_stats
     from repro.serve.paged import bucket_view_slots
 
+    _METRICS.counter(
+        "autotune_sweeps_total", help="measured autotune sweeps run",
+        labels=("family",),
+    ).labels(family="decode").inc()
     key = make_key(n, c, d, dtype, True, backend=backend, family="decode")
     if interpret is None:
         interpret = key.backend == "cpu"

@@ -93,6 +93,7 @@ class ServeEngine:
         eos_id: Optional[int] = None,
         seed: Optional[int] = None,
         serve: Optional[ServeConfig] = None,
+        telemetry=None,
     ):
         serve = serve or ServeConfig()
         overrides = {
@@ -111,13 +112,44 @@ class ServeEngine:
         self._key = jax.random.PRNGKey(serve.seed)
         self._tick = 0
 
+        # Telemetry: one shared registry + tracer behind ServeConfig.telemetry
+        # (or an externally-owned Telemetry, e.g. a benchmark's). Disabled =>
+        # no-op registry/tracer — instrumentation sites still call through,
+        # but nothing is recorded and no extra device programs exist. The
+        # scheduler always keeps a REAL registry (its latency percentiles are
+        # part of the stats() contract); it only shares ours when enabled.
+        from repro.telemetry import Telemetry
+
+        if telemetry is None:
+            telemetry = Telemetry(enabled=serve.telemetry)
+        self.telemetry = telemetry
+
         self.kv = PagedKVCache(cfg, serve)
         alloc = (
             BlockAllocator(serve.resolved_num_blocks, serve.block_size)
             if self.kv.has_paged_leaves else None
         )
-        self.sched = Scheduler(alloc, self.max_lanes, serve.blocks_per_lane)
+        self.sched = Scheduler(
+            alloc, self.max_lanes, serve.blocks_per_lane,
+            registry=self.telemetry.metrics if self.telemetry.enabled else None,
+        )
         self.sched.requeue_cb = self._on_preempt
+        if self.telemetry.enabled:
+            reg = self.telemetry.metrics
+            self._ticks_total = reg.counter(
+                "serve_ticks_total", help="engine ticks executed")
+            if alloc is not None:
+                # fn-gauges: evaluated only when the registry is read, so
+                # the tick loop never touches them.
+                reg.gauge("pool_blocks_used", fn=lambda: float(alloc.num_used),
+                          help="allocated KV blocks")
+                reg.gauge("pool_blocks_free", fn=lambda: float(alloc.num_free),
+                          help="free KV blocks")
+                reg.gauge("pool_utilization",
+                          fn=lambda: alloc.num_used / max(alloc.num_blocks - 1, 1),
+                          help="allocated fraction of the usable pool")
+                reg.gauge("pool_fragmentation", fn=alloc.fragmentation,
+                          help="1 - longest contiguous free run / free blocks")
 
         # Decode-tick route: "paged" = gather-free (block-table Pallas
         # kernel + single-block scatter commit); "gather" = legacy dense
@@ -174,6 +206,30 @@ class ServeEngine:
                 jax.vmap(make_rebase_fn(cfg, self.max_seq))
             )
 
+        # Online approximation monitors (telemetry only): locate the
+        # streaming-stat leaves in the flat storage once, then per-rebase
+        # drift probes (pre/post leaf snapshot, O(c*d) host math) and a
+        # landmark-mass spectrum EMA observed at rebases and retirements.
+        self._stream_idx = None
+        self._drift_mon = self._spectrum_mon = None
+        streams_stats = (
+            cfg.decode_attention_impl == "spectral_shift"
+            and cfg.decode_streaming in ("exact", "frozen")
+            and cfg.family != "ssm"
+        )
+        if self.telemetry.enabled and streams_stats:
+            from repro.serve.kv_cache import stream_leaf_indices
+            from repro.telemetry import DriftMonitor, SpectrumMonitor
+
+            idx = stream_leaf_indices(cfg, self.max_seq)
+            if idx["bv_m"]:
+                self._stream_idx = list(
+                    zip(idx["bv_m"], idx["bv_l"], idx["bv_acc"])
+                )
+                self._spectrum_mon = SpectrumMonitor(self.telemetry.metrics)
+                if self._frozen_rebase:
+                    self._drift_mon = DriftMonitor(self.telemetry.metrics)
+
         # Warm the dispatch registry for the serving shapes: the decode key
         # family (n=1 step against the max_seq cache horizon) plus, for
         # ss_fused prefill, the full-sequence key whose plan picks the
@@ -185,6 +241,9 @@ class ServeEngine:
         # programs bake in the winner's block_table view bucketing.
         from repro.kernels import dispatch
 
+        if self.telemetry.enabled:
+            # Process-wide (like the plan registry): warmup below counts too.
+            dispatch.set_metrics(self.telemetry.metrics)
         if cfg.autotune_cache:
             dispatch.set_cache_path(cfg.autotune_cache)
             dispatch.load_cache()
@@ -247,6 +306,15 @@ class ServeEngine:
 
     def _retire(self, i: int) -> None:
         lane = self.lanes[i]
+        if self._spectrum_mon is not None and lane.pos > 0:
+            # Final landmark-mass concentration of the finished request —
+            # the online spectrum-decay proxy (telemetry only).
+            stats = self._lane_stream_stats(i)
+            self._spectrum_mon.observe(
+                np.stack([g[0] for g in stats]),
+                np.stack([g[1] for g in stats]),
+                min((lane.pos - 1) // self._seg + 1, self.cfg.num_landmarks),
+            )
         self.finished[lane.req.uid] = list(lane.generated)
         self.sched.release(i)
         self.lanes[i] = _Lane()
@@ -301,15 +369,25 @@ class ServeEngine:
 
     # -- one engine tick -------------------------------------------------------
     def tick(self) -> None:
+        with self.telemetry.span("serve_tick"):
+            self._tick_inner()
+
+    def _tick_inner(self) -> None:
         self._tick += 1
         self.sched.tick_now = self._tick
+        tel = self.telemetry
+        if tel.enabled:
+            self._ticks_total.inc()
 
-        for i, req in self.sched.admit():
+        with tel.span("admit"):
+            admissions = self.sched.admit()
+        for i, req in admissions:
             lane = self.lanes[i] = _Lane(req=req)
             if self.batched and req.prompt:
                 # prefill overwrites every dense leaf for the lane; no
                 # separate zeroing needed
-                self._run_prefill(i, req)
+                with tel.span("prefill", lane=i):
+                    self._run_prefill(i, req)
             else:
                 self.kv.zero_lane_dense(i)
                 lane.prompt_left = deque(req.prompt)
@@ -348,20 +426,27 @@ class ServeEngine:
         nb_view = self.kv.view_blocks_needed(
             positions, active, quantum=self._view_quantum
         )
-        logits, new_storage = self._fused_step(
-            self.kv._storage, jnp.asarray(tables), jnp.asarray(tokens),
-            jnp.asarray(positions), jnp.asarray(mask), nb_view,
-        )
-        self.kv._storage = list(new_storage)
-        logits = np.asarray(logits[:, 0, 0], np.float32)
+        # The tick is ONE donated XLA program (gather -> step -> commit), so
+        # host spans can only split dispatch from the device sync the logits
+        # transfer forces; use Tracer(annotate=True) + jax.profiler for
+        # phase-level device timing.
+        with tel.span("decode_dispatch", lanes=len(active)):
+            logits, new_storage = self._fused_step(
+                self.kv._storage, jnp.asarray(tables), jnp.asarray(tokens),
+                jnp.asarray(positions), jnp.asarray(mask), nb_view,
+            )
+            self.kv._storage = list(new_storage)
+        with tel.span("device_sync"):
+            logits = np.asarray(logits[:, 0, 0], np.float32)
 
-        for i in active:
-            lane = self.lanes[i]
-            lane.pos += 1
-            if lane.prompt_left:  # replay prefill: ignore the sample
-                lane.next_token = lane.prompt_left.popleft()
-                continue
-            self._emit_token(i, logits[i, : self.cfg.vocab_size])
+        with tel.span("sample_emit"):
+            for i in active:
+                lane = self.lanes[i]
+                lane.pos += 1
+                if lane.prompt_left:  # replay prefill: ignore the sample
+                    lane.next_token = lane.prompt_left.popleft()
+                    continue
+                self._emit_token(i, logits[i, : self.cfg.vocab_size])
 
         if self._frozen_rebase:
             # Lanes whose just-written position starts a new landmark
@@ -374,7 +459,8 @@ class ServeEngine:
                 and (self.lanes[i].pos - 1) % self._seg == 0
             ]
             if hits:
-                self._run_rebase(hits)
+                with tel.span("rebase", lanes=len(hits)):
+                    self._run_rebase(hits)
 
     def _run_rebase(self, hits: list[int]) -> None:
         """Frozen-mode segment-boundary rebase for the given lanes."""
@@ -383,6 +469,10 @@ class ServeEngine:
         for i in hits:
             positions[i] = self.lanes[i].pos - 1
             flags[i] = True
+        pre = (
+            {i: self._lane_stream_stats(i) for i in hits}
+            if self._drift_mon is not None else None
+        )
         tables = self.sched.tables()  # fresh: retirements freed blocks
         nb_view = self.kv.view_blocks_needed(positions, hits)
         self.kv._storage = list(self._rebase_step(
@@ -390,6 +480,45 @@ class ServeEngine:
             jnp.asarray(flags), nb_view,
         ))
         self._rebases += len(hits)
+        self.telemetry.metrics.counter(
+            "serve_rebases_total", help="frozen-mode boundary rebases"
+        ).inc(len(hits))
+        if pre is not None:
+            self._probe_rebase_drift(hits, positions, pre)
+
+    def _lane_stream_stats(self, lane: int) -> list[tuple]:
+        """Host (m, l, acc) triples of one lane's streaming-stat leaves,
+        one per attention layer group."""
+        s = self.kv._storage
+        return [
+            (np.asarray(s[im][lane]), np.asarray(s[il][lane]),
+             np.asarray(s[ia][lane]))
+            for im, il, ia in self._stream_idx
+        ]
+
+    def _probe_rebase_drift(self, hits, positions, pre) -> None:
+        """The free-residual probe: the rebase just recomputed the boundary
+        rows exactly, so streamed(pre) vs exact(post) on those rows IS the
+        frozen-mode drift bench_drift measures offline — same formula
+        (monitors.bv_row_residual), O(c*d) host math per hit."""
+        from repro.telemetry import bv_row_residual
+
+        for i in hits:
+            p = int(positions[i])
+            j = p // self._seg  # new active row; j-1 just froze
+            rows = [j - 1, j] if j > 0 else [j]
+            post = self._lane_stream_stats(i)
+            res = max(
+                bv_row_residual((pl, pa), (ql, qa), rows)
+                for (_, pl, pa), (_, ql, qa) in zip(pre[i], post)
+            )
+            self._drift_mon.observe(res)
+            if self._spectrum_mon is not None:
+                m = np.stack([g[0] for g in post])
+                l = np.stack([g[1] for g in post])
+                self._spectrum_mon.observe(
+                    m, l, min(p // self._seg + 1, self.cfg.num_landmarks)
+                )
 
     # -- maintenance -----------------------------------------------------------
     def defragment(self) -> int:
@@ -420,4 +549,6 @@ class ServeEngine:
         st["decode_impl"] = self.decode_impl
         if self._frozen_rebase:
             st["rebases"] = self._rebases
+        if self.telemetry.enabled:
+            st["telemetry"] = self.telemetry.tracer.summary()
         return st

@@ -127,6 +127,36 @@ def cache_leaf_layout(cfg: ModelConfig, seq_len: int):
     return leaves, treedef
 
 
+STREAM_STAT_LEAVES = ("bv_m", "bv_l", "bv_acc")
+
+
+def stream_leaf_indices(cfg: ModelConfig, seq_len: int) -> dict:
+    """Flat-leaf indices (``cache_leaf_layout`` order) of the streaming
+    online-softmax stat leaves, keyed by leaf name.
+
+    ``cache_leaf_layout`` drops path names, but telemetry's drift/spectrum
+    monitors need to find ``bv_m``/``bv_l``/``bv_acc`` inside the paged
+    storage list. The flatten order here matches ``PagedKVCache.infos``
+    exactly (both come from ``tree_flatten_with_path`` over the same spec
+    tree), and within it each name's indices are in layer order, so zipping
+    the three lists yields per-layer ``(m, l, acc)`` triples. Families
+    without streaming stats (ssm) return empty lists."""
+    import jax
+
+    from repro.models.params import ParamSpec
+
+    specs = cache_specs(cfg, 1, seq_len)
+    paths, _ = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    out = {name: [] for name in STREAM_STAT_LEAVES}
+    for i, (path, _spec) in enumerate(paths):
+        key = getattr(path[-1], "key", None)
+        if key in out:
+            out[key].append(i)
+    return out
+
+
 def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
     """Full decode-state ParamSpec tree for one model."""
     specs: dict = {"pos": ParamSpec((), (), init="zeros", dtype=jnp.int32)}

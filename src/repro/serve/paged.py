@@ -105,6 +105,20 @@ class BlockAllocator:
     def can_alloc(self, n_blocks: int) -> bool:
         return n_blocks <= self.num_free
 
+    def fragmentation(self) -> float:
+        """Free-list fragmentation in [0, 1]: 1 minus the longest
+        contiguous run of free block ids over the free count. 0 when the
+        free space is one contiguous range (or empty) — the regime where
+        ``defragment()`` has nothing to do."""
+        if not self._free:
+            return 0.0
+        ids = sorted(self._free)
+        best = run = 1
+        for a, b in zip(ids, ids[1:]):
+            run = run + 1 if b == a + 1 else 1
+            best = max(best, run)
+        return 1.0 - best / len(ids)
+
     def stats(self) -> dict:
         usable = self.num_blocks - 1
         return {
@@ -112,6 +126,7 @@ class BlockAllocator:
             "blocks_used": self.num_used,
             "blocks_free": self.num_free,
             "utilization": self.num_used / max(usable, 1),
+            "fragmentation": self.fragmentation(),
             "requests": len(self.tables),
         }
 

@@ -21,12 +21,18 @@ drives the actual prefill/decode computations.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Optional
 
 import numpy as np
 
 from repro.serve.paged import ZERO_BLOCK, BlockAllocator
+from repro.telemetry.metrics import (
+    LATENCY_BUCKETS,
+    TICK_BUCKETS,
+    MetricsRegistry,
+)
 
 
 @dataclasses.dataclass
@@ -37,6 +43,9 @@ class RequestTiming:
     finished: int = -1
     preemptions: int = 0
     new_tokens: int = 0
+    # wall-clock stamps (perf_counter seconds) for the latency histograms
+    arrived_s: Optional[float] = None
+    last_token_s: Optional[float] = None
 
     @property
     def ttft(self) -> Optional[int]:
@@ -47,7 +56,8 @@ class RequestTiming:
 
 class Scheduler:
     def __init__(self, allocator: Optional[BlockAllocator], max_lanes: int,
-                 blocks_per_lane: int):
+                 blocks_per_lane: int,
+                 registry: Optional[MetricsRegistry] = None):
         self.allocator = allocator  # None => model has no paged state
         self.max_lanes = max_lanes
         self.blocks_per_lane = blocks_per_lane
@@ -58,10 +68,48 @@ class Scheduler:
         self.admit_order: dict[int, int] = {}  # uid -> admission tick
         self.timing: dict[int, RequestTiming] = {}
         self.tick_now = 0
-        # aggregate counters
-        self.total_preemptions = 0
-        self.total_admitted = 0
-        self.total_finished = 0
+        # Aggregates live in a metrics registry; ``stats()`` is a view over
+        # it. The scheduler always uses a *real* registry (plain host
+        # counters — same cost as the ints they replaced) so p50/p90/p99
+        # work regardless of the ServeConfig.telemetry knob; the engine
+        # passes its shared registry when telemetry is on so these land in
+        # the same snapshot/JSONL dump as everything else.
+        self.registry = registry if registry is not None else MetricsRegistry()
+        r = self.registry
+        self._admitted = r.counter("serve_admitted_total", help="requests admitted to a lane")
+        self._finished = r.counter("serve_finished_total", help="requests retired normally")
+        self._preempted = r.counter("serve_preempted_total", help="preemptions (youngest-victim)")
+        self._requeued = r.counter("serve_requeued_total", help="preempted requests requeued at the head")
+        self._tokens = r.counter("serve_tokens_total", help="decode tokens emitted (recounts recomputed tokens)")
+        r.gauge("serve_queue_depth", help="requests waiting for a lane",
+                fn=lambda: float(len(self.waiting)))
+        r.gauge("serve_active_lanes", help="lanes holding a request",
+                fn=lambda: float(sum(u is not None for u in self.lane_uid)))
+        self._ttft_ticks = r.histogram(
+            "serve_ttft_ticks", help="engine ticks from arrival to first token",
+            buckets=TICK_BUCKETS)
+        self._latency_ticks = r.histogram(
+            "serve_latency_ticks", help="engine ticks from arrival to finish",
+            buckets=TICK_BUCKETS)
+        self._ttft_s = r.histogram(
+            "serve_ttft_seconds", help="wall seconds from arrival to first token",
+            buckets=LATENCY_BUCKETS)
+        self._itl_s = r.histogram(
+            "serve_itl_seconds", help="wall seconds between consecutive tokens of one request",
+            buckets=LATENCY_BUCKETS)
+
+    # Aggregate counters as attributes, for backward compatibility.
+    @property
+    def total_preemptions(self) -> int:
+        return int(self._preempted.value)
+
+    @property
+    def total_admitted(self) -> int:
+        return int(self._admitted.value)
+
+    @property
+    def total_finished(self) -> int:
+        return int(self._finished.value)
 
     # -- block tables ---------------------------------------------------------
     def table_row(self, lane: int) -> np.ndarray:
@@ -86,6 +134,7 @@ class Scheduler:
         t = self.timing.setdefault(req.uid, RequestTiming())
         if t.arrived < 0:
             t.arrived = self.tick_now
+            t.arrived_s = time.perf_counter()
 
     def _blocks_for_prompt(self, req) -> int:
         if self.allocator is None:
@@ -108,7 +157,7 @@ class Scheduler:
             self.lane_uid[lane] = req.uid
             self.admit_order[req.uid] = self.tick_now
             self.timing[req.uid].admitted = self.tick_now
-            self.total_admitted += 1
+            self._admitted.inc()
             admissions.append((lane, req))
         return admissions
 
@@ -165,10 +214,12 @@ class Scheduler:
         # and will be re-counted when re-emitted; first_token stands — the
         # user did see it.
         t.new_tokens = 0
-        self.total_preemptions += 1
+        t.last_token_s = None  # decode restarts; don't count the gap as ITL
+        self._preempted.inc()
         req = self.requeue_cb(lane) if self.requeue_cb else None
         if req is not None:
             self.waiting.appendleft(req)
+            self._requeued.inc()
 
     def release(self, lane: int) -> None:
         """Normal retirement: free blocks, mark finished."""
@@ -179,14 +230,24 @@ class Scheduler:
             self.allocator.free(uid)
         self.lane_uid[lane] = None
         self.admit_order.pop(uid, None)
-        self.timing[uid].finished = self.tick_now
-        self.total_finished += 1
+        t = self.timing[uid]
+        t.finished = self.tick_now
+        self._finished.inc()
+        self._latency_ticks.observe(t.finished - t.arrived)
 
     def note_token(self, uid: int) -> None:
         t = self.timing[uid]
+        now = time.perf_counter()
         if t.first_token < 0:
             t.first_token = self.tick_now
+            self._ttft_ticks.observe(t.first_token - t.arrived)
+            if t.arrived_s is not None:
+                self._ttft_s.observe(now - t.arrived_s)
+        elif t.last_token_s is not None:
+            self._itl_s.observe(now - t.last_token_s)
+        t.last_token_s = now
         t.new_tokens += 1
+        self._tokens.inc()
 
     @property
     def idle(self) -> bool:
@@ -195,9 +256,11 @@ class Scheduler:
 
     # -- metrics --------------------------------------------------------------
     def stats(self) -> dict:
-        ttfts = [t.ttft for t in self.timing.values() if t.ttft is not None]
-        done = [t for t in self.timing.values() if t.finished >= 0]
-        lat = [t.finished - t.arrived for t in done]
+        """View over the registry (plus live queue/lane state). Percentiles
+        come from the fixed-bucket histograms: tick-valued ones use unit
+        buckets up to 64 ticks, so typical test-scale distributions report
+        exact values; all are None until the first observation."""
+        th, lh = self._ttft_ticks, self._latency_ticks
         out = {
             "queued": len(self.waiting),
             "active": sum(u is not None for u in self.lane_uid),
@@ -205,8 +268,16 @@ class Scheduler:
             "finished": self.total_finished,
             "preemptions": self.total_preemptions,
             "new_tokens": sum(t.new_tokens for t in self.timing.values()),
-            "ttft_ticks_p50": float(np.median(ttfts)) if ttfts else None,
-            "latency_ticks_p50": float(np.median(lat)) if lat else None,
+            "ttft_ticks_p50": th.percentile(50),
+            "ttft_ticks_p90": th.percentile(90),
+            "ttft_ticks_p99": th.percentile(99),
+            "latency_ticks_p50": lh.percentile(50),
+            "latency_ticks_p90": lh.percentile(90),
+            "latency_ticks_p99": lh.percentile(99),
+            "ttft_s_p50": self._ttft_s.percentile(50),
+            "ttft_s_p99": self._ttft_s.percentile(99),
+            "itl_s_p50": self._itl_s.percentile(50),
+            "itl_s_p99": self._itl_s.percentile(99),
         }
         if self.allocator is not None:
             out["kv"] = self.allocator.stats()

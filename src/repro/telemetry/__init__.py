@@ -1,0 +1,100 @@
+"""Unified telemetry: metrics registry + tick tracing + drift monitors.
+
+``Telemetry`` is the one object the engine/trainer/benchmarks hold. It
+bundles a :class:`~repro.telemetry.metrics.MetricsRegistry` and a
+:class:`~repro.telemetry.tracing.Tracer` and exposes the two export paths
+the rest of the stack (and CI) consume:
+
+* ``snapshot()`` — nested dict of every metric sample plus span-buffer
+  counters; cheap, safe to call mid-run.
+* ``dump_jsonl(path)`` — one self-describing JSONL file: a ``meta`` line,
+  one ``metric`` line per (name, label-set), one ``span`` line per traced
+  event. This is the artifact CI uploads and the offline-analysis input.
+
+``Telemetry(enabled=False)`` (or :func:`null_telemetry`) swaps in the
+no-op registry/tracer pair: every instrumentation site still *calls*
+telemetry, but each call is a shared-object no-op, nothing is retained,
+and dumps write nothing — the zero-overhead contract behind the
+``ServeConfig.telemetry`` knob.
+"""
+from __future__ import annotations
+
+import json
+from typing import Optional
+
+from repro.telemetry.metrics import (  # noqa: F401  (re-exports)
+    LATENCY_BUCKETS,
+    RATIO_BUCKETS,
+    TICK_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    NullRegistry,
+    exp_buckets,
+)
+from repro.telemetry.monitors import (  # noqa: F401
+    DriftMonitor,
+    SpectrumMonitor,
+    bv_from_stats,
+    bv_row_residual,
+    spectrum_mass,
+)
+from repro.telemetry.tracing import NullTracer, Tracer  # noqa: F401
+
+
+class Telemetry:
+    """Bundle of one metrics registry + one tracer with JSONL export."""
+
+    def __init__(
+        self,
+        enabled: bool = True,
+        *,
+        registry: Optional[MetricsRegistry] = None,
+        annotate: bool = False,
+        max_events: int = 200_000,
+    ):
+        self.enabled = enabled
+        if enabled:
+            self.metrics = registry if registry is not None else MetricsRegistry()
+            self.tracer = Tracer(
+                self.metrics, annotate=annotate, max_events=max_events
+            )
+        else:
+            self.metrics = NullRegistry()
+            self.tracer = NullTracer()
+
+    def span(self, name: str, **labels):
+        return self.tracer.span(name, **labels)
+
+    def step_span(self, name: str, step: int):
+        return self.tracer.step_span(name, step)
+
+    def snapshot(self) -> dict:
+        return {"metrics": self.metrics.snapshot(), "spans": self.tracer.summary()}
+
+    def dump_jsonl(self, path, meta: Optional[dict] = None) -> int:
+        """Write the full telemetry state as JSONL; returns lines written.
+        Disabled telemetry writes nothing (and creates no file)."""
+        if not self.enabled:
+            return 0
+        n = 0
+        with open(path, "w") as fh:
+            head = {"kind": "meta", "schema": "repro-telemetry-v1"}
+            if meta:
+                head.update(meta)
+            fh.write(json.dumps(head) + "\n")
+            n += 1
+            for name, kind, labels, sample in self.metrics.iter_samples():
+                row = {"kind": "metric", "name": name, "type": kind}
+                if labels:
+                    row["labels"] = labels
+                row.update(sample)
+                fh.write(json.dumps(row) + "\n")
+                n += 1
+            n += self.tracer.dump_jsonl(fh)
+        return n
+
+
+def null_telemetry() -> Telemetry:
+    return Telemetry(enabled=False)

@@ -67,7 +67,29 @@ class Trainer:
         monitor: Optional[HeartbeatMonitor] = None,
         injector: Optional[FailureInjector] = None,
         lr_fn: Optional[Callable] = None,
+        telemetry=None,
     ):
+        # Telemetry is caller-owned and optional; default = no-op pair, so
+        # the step loop's spans/metrics cost nothing unless a Telemetry
+        # object is passed in (launch scripts, tests, benchmarks).
+        from repro.telemetry import Telemetry
+
+        if telemetry is None:
+            telemetry = Telemetry(enabled=False)
+        self.telemetry = telemetry
+        if telemetry.enabled:
+            from repro.kernels import dispatch
+            from repro.telemetry.metrics import LATENCY_BUCKETS
+
+            dispatch.set_metrics(telemetry.metrics)
+            r = telemetry.metrics
+            self._step_hist = r.histogram(
+                "train_step_seconds", help="wall time per optimizer step",
+                buckets=LATENCY_BUCKETS)
+            self._gauges = {
+                name: r.gauge(f"train_{name}", help=f"last step's {name}")
+                for name in ("loss", "ce", "grad_norm", "lr")
+            }
         self.rule_overrides = rule_overrides or {}
         cfg = apply_seq_sharding_config(cfg, mesh, self.rule_overrides, log=log)
         self.cfg, self.tcfg, self.shape = cfg, tcfg, shape
@@ -172,15 +194,16 @@ class Trainer:
             self.shape.seq_len, cfg.num_landmarks, cfg.resolved_head_dim,
             cfg.compute_dtype, cfg.is_decoder_only,
         )
-        plan = dispatch.get_plan(key)
-        if plan.source == "heuristic":  # nothing measured for this shape yet
-            plan = dispatch.autotune(
-                self.shape.seq_len,
-                cfg.num_landmarks,
-                cfg.resolved_head_dim,
-                dtype=cfg.compute_dtype,
-                causal=cfg.is_decoder_only,
-            )
+        with self.telemetry.span("plan_resolution", n=key.n):
+            plan = dispatch.get_plan(key)
+            if plan.source == "heuristic":  # nothing measured for this shape
+                plan = dispatch.autotune(
+                    self.shape.seq_len,
+                    cfg.num_landmarks,
+                    cfg.resolved_head_dim,
+                    dtype=cfg.compute_dtype,
+                    causal=cfg.is_decoder_only,
+                )
         log.info(
             "attention plan for n=%d (%s): impl=%s block_n=%d",
             self.shape.seq_len, plan.source, plan.impl, plan.block_n,
@@ -227,18 +250,25 @@ class Trainer:
                     if dead:
                         self._handle_failure(dead)
                 t0 = time.time()
-                host_batch = self.data.batch(self.step)
-                batch = make_global_batch(host_batch, self.b_sh)
-                self.params, self.opt_state, metrics = self.jitted(
-                    self.params, self.opt_state, batch
-                )
-                metrics = {
-                    k: float(v) for k, v in metrics.items() if jnp.ndim(v) == 0
-                }
+                with self.telemetry.step_span("train_step", self.step):
+                    host_batch = self.data.batch(self.step)
+                    batch = make_global_batch(host_batch, self.b_sh)
+                    self.params, self.opt_state, metrics = self.jitted(
+                        self.params, self.opt_state, batch
+                    )
+                    metrics = {
+                        k: float(v)
+                        for k, v in metrics.items() if jnp.ndim(v) == 0
+                    }
                 dt = time.time() - t0
                 metrics["step"] = self.step
                 metrics["step_time_s"] = dt
                 self.metrics_history.append(metrics)
+                if self.telemetry.enabled:
+                    self._step_hist.observe(dt)
+                    for name, g in self._gauges.items():
+                        if name in metrics:
+                            g.set(metrics[name])
                 for h in self.monitor.hosts:
                     self.monitor.beat(h, dt)
                 stragglers = self.monitor.stragglers()
