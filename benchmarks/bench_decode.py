@@ -53,7 +53,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import json
 import os
 import time
 
@@ -77,7 +76,6 @@ from repro.serve.decode_state import (
 from repro.serve.paged import BlockAllocator, PagedKVCache, ZERO_BLOCK
 
 MODES = ("recompute", "exact", "frozen")
-JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_decode.json")
 
 _cells: dict[str, dict] = {}
 
@@ -230,9 +228,17 @@ def _dense_cell(rows, cfg, params, horizon: int, mode: str, tokens: int):
 
 
 def _pool_cell(rows, cfg, params, horizon: int, mode: str, tokens: int,
-               impl: str):
+               impl: str, cost_check: bool = False):
     """Block-pool storage cell: ``impl`` = "gather" (legacy dense-view
-    tick) or "paged" (gather-free block-table kernel tick)."""
+    tick) or "paged" (gather-free block-table kernel tick).
+
+    ``cost_check=True`` additionally records XLA's own ``cost_analysis()``
+    flops/bytes for the tick program (telemetry/accounting.py) and the
+    ratio against the analytic ``_tick_bytes`` model — the cross-check is
+    the RATIO's stability, not its value: XLA charges scatter/dynamic-
+    update at full-operand size regardless of in-place aliasing (see the
+    module docstring), so the ratio sits far above 1 by construction and a
+    drift in it flags either a layout change or a cost-model change."""
     mcfg = dataclasses.replace(cfg, decode_streaming=mode)
     seg = segment_len(horizon, mcfg.num_landmarks)
     # Fixed serving-style block size across horizons: the paged tick's
@@ -305,28 +311,39 @@ def _pool_cell(rows, cfg, params, horizon: int, mode: str, tokens: int,
         lg = tick(pos0 + 2 + i)
     jax.block_until_ready(lg)
     ms = (time.perf_counter() - t0) / tokens * 1e3 + rebase_ms / seg
+    model_bytes = _tick_bytes(kv, mode, impl, nb)
     _record(rows, impl, horizon, mode, "per_token_ms", ms)
-    _record(rows, impl, horizon, mode, "per_token_bytes",
-            _tick_bytes(kv, mode, impl, nb))
+    _record(rows, impl, horizon, mode, "per_token_bytes", model_bytes)
+    if cost_check:
+        from repro.telemetry.accounting import compiled_cost
+
+        cost = compiled_cost(
+            fused._jitted, kv._storage, jnp.asarray(tables)[:, :nb],
+            jnp.asarray(tok), jnp.asarray([pos0 + 2], np.int32),
+            jnp.asarray(active),
+        )
+        _record(rows, impl, horizon, mode, "xla_cost_flops", cost["flops"])
+        _record(rows, impl, horizon, mode, "xla_cost_bytes", cost["bytes"])
+        if cost["bytes"]:
+            _record(rows, impl, horizon, mode, "xla_to_model_bytes",
+                    cost["bytes"] / model_bytes)
     return ms
 
 
-def write_json(path: str = JSON_PATH) -> None:
-    payload = {
-        "bench": "decode",
-        "schema": "impl|mode|horizon -> {per_token_ms, per_token_bytes, "
-                  "rebase_ms?}",
-        "impls": {
+def write_json() -> None:
+    from benchmarks.run import write_bench  # lazy: avoids an import cycle
+
+    write_bench(
+        "decode",
+        schema="impl|mode|horizon -> {per_token_ms, per_token_bytes, "
+               "rebase_ms?, xla_cost_bytes?, xla_cost_flops?}",
+        extra={"impls": {
             "dense": "lane-dense decode_step (no paging)",
             "gather": "block pools + legacy gather/scatter tick",
             "paged": "block pools + gather-free block-table kernel tick",
-        },
-        "host": jax.default_backend(),
-        "cells": dict(sorted(_cells.items())),
-    }
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=2)
-        f.write("\n")
+        }},
+        cells=_cells,
+    )
 
 
 def run(rows: list[str]) -> None:
@@ -337,13 +354,18 @@ def run(rows: list[str]) -> None:
     else:
         horizons, tokens = (1024, 8192, 32768), 8
     for h in horizons:
+        # Cost analysis AOT-compiles each tick program a second time, so
+        # only the smallest horizon pays for the cross-check.
+        cost_check = h == horizons[0]
         ms = {}
         for mode in MODES:
             ms[mode] = _dense_cell(rows, cfg, params, h, mode, tokens)
         for mode in MODES:
-            _pool_cell(rows, cfg, params, h, mode, tokens, "gather")
+            _pool_cell(rows, cfg, params, h, mode, tokens, "gather",
+                       cost_check=cost_check)
         for mode in ("exact", "frozen"):  # recompute stays gather-only
-            _pool_cell(rows, cfg, params, h, mode, tokens, "paged")
+            _pool_cell(rows, cfg, params, h, mode, tokens, "paged",
+                       cost_check=cost_check)
         rows.append(
             f"decode,dense_h{h},exact_speedup_vs_recompute,"
             f"{ms['recompute'] / max(ms['exact'], 1e-9):.2f}"

@@ -35,7 +35,9 @@ exhibits, bench_accuracy cell (b)) — and report, per horizon:
     drift_to_method_err    the decomposition ratio (<< 1 = drift is
                            negligible against the method's own error).
 
-Numbers are committed under results/bench_drift.json.
+Numbers are committed under BENCH_drift.json (top level, shared envelope
+via benchmarks/run.py's write_bench; a results/bench_drift.json copy keeps
+the pre-PR7 location alive for existing readers).
 
     PYTHONPATH=src python -m benchmarks.run --only drift
     REPRO_BENCH_SMOKE=1 ... (one tiny horizon for CI)
@@ -43,7 +45,6 @@ Numbers are committed under results/bench_drift.json.
 from __future__ import annotations
 
 import functools
-import json
 import os
 
 import jax
@@ -62,9 +63,6 @@ from repro.serve.decode_state import (
 )
 
 B, H, D, C = 1, 2, 32, 16
-JSON_PATH = os.path.join(
-    os.path.dirname(__file__), "..", "results", "bench_drift.json"
-)
 
 _cells: dict[str, dict] = {}
 
@@ -234,18 +232,17 @@ def _cell(rows, regime: str, s_max: int) -> None:
     _cells[case] = {kk: round(vv, 6) for kk, vv in metrics.items()}
 
 
-def write_json(path: str = JSON_PATH) -> None:
-    payload = {
-        "bench": "drift",
-        "schema": "regime_S{horizon}_c{landmarks} -> frozen-mode error "
-                  "decomposition (serve/decode_state.py protocol)",
-        "shape": {"B": B, "H": H, "D": D, "C": C},
-        "cells": dict(sorted(_cells.items())),
-    }
-    os.makedirs(os.path.dirname(path), exist_ok=True)
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=2)
-        f.write("\n")
+def write_json() -> None:
+    from benchmarks.run import write_bench  # lazy: avoids an import cycle
+
+    write_bench(
+        "drift",
+        schema="regime_S{horizon}_c{landmarks} -> frozen-mode error "
+               "decomposition (serve/decode_state.py protocol)",
+        shape={"B": B, "H": H, "D": D, "C": C},
+        cells=_cells,
+        results_copy="bench_drift.json",  # pre-PR7 location, kept for readers
+    )
 
 
 def run(rows: list[str]) -> None:

@@ -1,0 +1,247 @@
+"""Perf-regression gate: diff working-tree ``BENCH_*.json`` against HEAD.
+
+The bench suites overwrite the top-level ``BENCH_<name>.json`` envelopes in
+place, so after
+
+    PYTHONPATH=src python -m benchmarks.run serve --smoke
+    PYTHONPATH=src python -m benchmarks.regress
+
+the working-tree file holds the FRESH numbers and ``git show
+HEAD:BENCH_<name>.json`` still holds the committed baseline — this module
+compares the two, cell by cell, metric by metric, and exits non-zero on
+any regression beyond the metric's tolerance band. Every run appends one
+line per bench to ``results/bench_trajectory.jsonl`` (provenance-stamped),
+the long-term perf history CI uploads as an artifact.
+
+Tolerance policy (see ``metric_policy``): metrics are classified by name —
+
+* structural facts (``*_bytes``, ``*_ticks``, ``*_blocks``, ``*_flops``)
+  are layout/scheduling truths, identical run-to-run: ±1% band, either
+  direction (a "better" byte count you didn't ask for is also a layout
+  change worth failing loudly on);
+* wall-clock (``*_s``, ``*_ms``) is lower-better with a generous relative
+  band (default 0.75, so a genuine 2x regression always fails while shared
+  -runner noise doesn't) plus absolute slack for sub-millisecond values;
+* throughput (``*per_s*``) is higher-better, same relative band;
+* error/drift metrics are lower-better, ±10% — they're deterministic
+  modulo seeding, so a band this tight catches real approximation changes.
+
+Cells/metrics present on only one side are skipped (smoke runs produce a
+subset of the committed full grid; new cells have no baseline yet). A
+host (backend) mismatch between fresh and baseline skips the wall-clock
+and throughput comparisons — structural metrics still apply.
+
+    python -m benchmarks.regress [--names serve,decode] [--wall-tol 0.75]
+                                 [--baseline-ref HEAD] [--no-trajectory]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import glob
+import json
+import os
+import subprocess
+import sys
+import time
+from typing import Optional
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+TRAJECTORY = os.path.join(REPO_ROOT, "results", "bench_trajectory.jsonl")
+DEFAULT_WALL_TOL = 0.75
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    direction: str   # "lower" = smaller is better, "higher", "both" = pinned
+    rel: float       # relative tolerance band
+    abs: float       # absolute slack (units of the metric)
+    wall: bool = False  # True = skipped when fresh/baseline hosts differ
+
+
+def metric_policy(metric: str, wall_tol: float = DEFAULT_WALL_TOL) -> Optional[Policy]:
+    """Classify a metric by name; None = not gated (informational)."""
+    m = metric.lower()
+    if m.endswith(("_bytes", "_ticks", "_blocks", "_flops")) or "cost_bytes" in m:
+        return Policy("both", 0.01, 0.5)
+    # throughput before the wall-clock suffix rule: "tok_per_s" ends in
+    # "_s" but is higher-is-better, not a latency
+    if "per_s" in m or "throughput" in m or "speedup" in m:
+        return Policy("higher", wall_tol, 0.0, wall=True)
+    if m.endswith(("_s", "_ms")) or "seconds" in m or "latency" in m:
+        return Policy("lower", wall_tol, 2e-3, wall=True)
+    if "drift" in m or "err" in m or "residual" in m:
+        return Policy("lower", 0.10, 1e-9)
+    return None
+
+
+@dataclasses.dataclass
+class Violation:
+    bench: str
+    cell: str
+    metric: str
+    baseline: float
+    fresh: float
+    policy: Policy
+
+    def __str__(self) -> str:
+        change = (
+            (self.fresh - self.baseline) / self.baseline * 100
+            if self.baseline else float("inf")
+        )
+        return (
+            f"REGRESSION {self.bench}[{self.cell}].{self.metric}: "
+            f"{self.baseline} -> {self.fresh} ({change:+.1f}%, "
+            f"{self.policy.direction}-is-pass band rel={self.policy.rel})"
+        )
+
+
+def compare_cells(
+    bench: str,
+    fresh: dict,
+    baseline: dict,
+    *,
+    wall_tol: float = DEFAULT_WALL_TOL,
+    host_match: bool = True,
+) -> tuple[list[Violation], int]:
+    """Diff two ``cells`` dicts; returns (violations, metrics compared)."""
+    violations: list[Violation] = []
+    compared = 0
+    for cell, metrics in fresh.items():
+        base_cell = baseline.get(cell)
+        if not isinstance(base_cell, dict) or not isinstance(metrics, dict):
+            continue
+        for metric, val in metrics.items():
+            base = base_cell.get(metric)
+            if not isinstance(base, (int, float)) or not isinstance(
+                    val, (int, float)):
+                continue
+            pol = metric_policy(metric, wall_tol)
+            if pol is None or (pol.wall and not host_match):
+                continue
+            compared += 1
+            band = abs(base) * pol.rel + pol.abs
+            # "higher" uses a ratio band (base/(1+rel)) so it mirrors
+            # "lower": a 2x throughput drop fails just like 2x latency
+            bad = (
+                val > base + band if pol.direction == "lower"
+                else val < base / (1.0 + pol.rel) - pol.abs
+                if pol.direction == "higher"
+                else abs(val - base) > band
+            )
+            if bad:
+                violations.append(
+                    Violation(bench, cell, metric, float(base), float(val),
+                              pol))
+    return violations, compared
+
+
+def git_baseline(name: str, ref: str = "HEAD") -> Optional[dict]:
+    """The committed envelope at ``ref``, or None if it doesn't exist
+    there (new bench: nothing to regress against)."""
+    out = subprocess.run(
+        ["git", "show", f"{ref}:BENCH_{name}.json"],
+        cwd=REPO_ROOT, capture_output=True, text=True, timeout=30,
+    )
+    if out.returncode != 0:
+        return None
+    try:
+        return json.loads(out.stdout)
+    except json.JSONDecodeError:
+        return None
+
+
+def append_trajectory(record: dict, path: str = TRAJECTORY) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "a") as f:
+        f.write(json.dumps(record) + "\n")
+
+
+def check_bench(
+    name: str,
+    *,
+    ref: str = "HEAD",
+    wall_tol: float = DEFAULT_WALL_TOL,
+    trajectory: bool = True,
+) -> tuple[list[Violation], int]:
+    """Gate one bench; returns (violations, metrics compared)."""
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    with open(path) as f:
+        fresh = json.load(f)
+    baseline = git_baseline(name, ref)
+    violations: list[Violation] = []
+    compared = 0
+    if baseline is None:
+        print(f"[regress] {name}: no baseline at {ref} (new bench) — skipped")
+    elif not isinstance(fresh.get("cells"), dict) or not isinstance(
+            baseline.get("cells"), dict):
+        print(f"[regress] {name}: list-shaped cells — not gated")
+    else:
+        host_match = fresh.get("host") == baseline.get("host")
+        if not host_match:
+            print(f"[regress] {name}: host {baseline.get('host')!r} -> "
+                  f"{fresh.get('host')!r}; wall metrics skipped")
+        violations, compared = compare_cells(
+            name, fresh["cells"], baseline["cells"],
+            wall_tol=wall_tol, host_match=host_match,
+        )
+        print(f"[regress] {name}: {compared} metrics vs {ref}, "
+              f"{len(violations)} regression(s)")
+    if trajectory:
+        append_trajectory({
+            "ts": round(time.time(), 3),
+            "bench": name,
+            "host": fresh.get("host"),
+            "provenance": fresh.get("provenance", {}),
+            "baseline_ref": ref,
+            "metrics_compared": compared,
+            "violations": [str(v) for v in violations],
+            "cells": fresh.get("cells"),
+        })
+    return violations, compared
+
+
+def main(argv: Optional[list[str]] = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--names", default=None,
+                    help="comma-separated bench names (default: every "
+                         "BENCH_*.json in the working tree)")
+    ap.add_argument("--baseline-ref", default="HEAD",
+                    help="git ref holding the committed baselines")
+    ap.add_argument("--wall-tol", type=float, default=DEFAULT_WALL_TOL,
+                    help="relative tolerance for wall-clock/throughput "
+                         "metrics (CI on shared runners may want it looser)")
+    ap.add_argument("--no-trajectory", action="store_true",
+                    help="don't append to results/bench_trajectory.jsonl")
+    args = ap.parse_args(argv)
+
+    if args.names:
+        names = [n.strip() for n in args.names.split(",") if n.strip()]
+    else:
+        names = sorted(
+            os.path.basename(p)[len("BENCH_"):-len(".json")]
+            for p in glob.glob(os.path.join(REPO_ROOT, "BENCH_*.json"))
+        )
+    if not names:
+        print("[regress] no BENCH_*.json artifacts found", file=sys.stderr)
+        return 2
+
+    all_violations: list[Violation] = []
+    for name in names:
+        v, _ = check_bench(
+            name, ref=args.baseline_ref, wall_tol=args.wall_tol,
+            trajectory=not args.no_trajectory,
+        )
+        all_violations.extend(v)
+    for v in all_violations:
+        print(v, file=sys.stderr)
+    if all_violations:
+        print(f"[regress] FAIL: {len(all_violations)} regression(s)",
+              file=sys.stderr)
+        return 1
+    print("[regress] PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

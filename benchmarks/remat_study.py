@@ -17,14 +17,13 @@ route the dispatch heuristic actually picks on CPU.
 
     PYTHONPATH=src python -m benchmarks.remat_study [--quick]
 
-Writes results/remat_study.json.
+Writes BENCH_remat_study.json (top level, shared write_bench envelope)
+plus the pre-PR7 results/remat_study.json copy.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
-import os
 import time
 
 import jax
@@ -91,21 +90,25 @@ def main() -> None:
                                    run_wall, reps=2))
                 print(cells[-1], flush=True)
 
-    payload = {
-        "config": "reduced(qwen2-7b, num_landmarks=32), batch 1, "
-                  "attention_impl=spectral_shift_fused",
-        "host_backend": jax.default_backend(),
-        "note": "interpret = forced Pallas kernels (tagged ss_stats "
-                "residuals; CPU wall-clock measures interpreter overhead); "
-                "jnp = the route the CPU heuristic picks (no tagged "
-                "residuals, ss_stats degenerates to full recompute).",
-        "cells": cells,
-    }
-    path = os.path.join(os.path.dirname(__file__), "..", "results",
-                        "remat_study.json")
-    with open(os.path.abspath(path), "w") as f:
-        json.dump(payload, f, indent=2)
-    print(f"wrote {os.path.abspath(path)}")
+    from benchmarks.run import write_bench  # lazy: avoids an import cycle
+
+    path = write_bench(
+        "remat_study",
+        schema="list cells: (seq, backend, remat) -> "
+               "{fwdbwd_ms?, peak_temp_mb}",
+        extra={
+            "config": "reduced(qwen2-7b, num_landmarks=32), batch 1, "
+                      "attention_impl=spectral_shift_fused",
+            "note": "interpret = forced Pallas kernels (tagged ss_stats "
+                    "residuals; CPU wall-clock measures interpreter "
+                    "overhead); jnp = the route the CPU heuristic picks (no "
+                    "tagged residuals, ss_stats degenerates to full "
+                    "recompute).",
+        },
+        cells=cells,
+        results_copy="remat_study.json",  # pre-PR7 location, kept for readers
+    )
+    print(f"wrote {path}")
 
 
 if __name__ == "__main__":

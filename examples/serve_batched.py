@@ -8,6 +8,8 @@ engines with --mode:
     PYTHONPATH=src python examples/serve_batched.py --mode dense   # seed-style
     PYTHONPATH=src python examples/serve_batched.py --mode ss_fused
     PYTHONPATH=src python examples/serve_batched.py --tick paged   # gather-free
+    PYTHONPATH=src python examples/serve_batched.py --trace /tmp/serve.json
+                                                   # Perfetto trace export
 """
 from __future__ import annotations
 
@@ -51,6 +53,11 @@ def main():
     ap.add_argument("--telemetry", metavar="PATH", default=None,
                     help="enable the telemetry subsystem, dump the JSONL "
                          "to PATH and print a one-screen summary at exit")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="export a Chrome Trace Event JSON (per-request "
+                         "lifelines + host spans + pool/queue counter "
+                         "tracks) to PATH; implies telemetry on. Load it "
+                         "at ui.perfetto.dev or chrome://tracing")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(
@@ -66,7 +73,7 @@ def main():
         batched_prefill=args.mode != "dense",
         prefill_impl="ss_fused" if args.mode == "ss_fused" else "replay",
         decode_impl=args.tick,
-        telemetry=args.telemetry is not None,
+        telemetry=args.telemetry is not None or args.trace is not None,
     )
     engine = ServeEngine(cfg, params, serve=serve)
 
@@ -136,6 +143,21 @@ def main():
                   f"p99={drift['p99']:.3g} over {drift['count']} rebases; "
                   f"spectrum top1 ema="
                   f"{val('spectrum_mass_top1_ema'):.3f}")
+
+    if args.trace:
+        from repro.telemetry import write_chrome_trace
+
+        n_ev = write_chrome_trace(args.trace, engine.telemetry, meta={
+            "example": "serve_batched", "mode": args.mode,
+            "streaming": args.streaming, "lanes": args.lanes,
+        })
+        fl = engine.telemetry.flight.summary()
+        print(f"  trace: {n_ev} events ({fl['requests']} request lifelines) "
+              f"-> {args.trace}")
+        print("    load it: open https://ui.perfetto.dev and drag the file "
+              "in, or chrome://tracing -> Load. One track per request "
+              "(queued/prefill/decode slices, preempt/rebase markers), "
+              "host tick spans on pid 0, pool/queue counters below.")
 
 
 if __name__ == "__main__":

@@ -210,6 +210,12 @@ class ServeConfig:
                                   # registry + tracer on the hot path, no
                                   # extra device programs; the scheduler's
                                   # latency percentiles work either way
+    numerics_probe_every: int = 0  # every N ticks, count NaN/Inf in decode
+                                   # logits and the landmark (m, l) stats
+                                   # (numerics_nonfinite_total{site=}); 0 =
+                                   # off. Each probe forces a host sync, so
+                                   # this is a cadence, not a boolean.
+                                   # Requires telemetry=True to count.
 
     @property
     def blocks_per_lane(self) -> int:
@@ -236,6 +242,11 @@ class ServeConfig:
             raise ValueError(f"unknown prefill_impl {self.prefill_impl!r}")
         if self.decode_impl not in ("gather", "paged"):
             raise ValueError(f"unknown decode_impl {self.decode_impl!r}")
+        if self.numerics_probe_every < 0:
+            raise ValueError(
+                f"numerics_probe_every must be >= 0, "
+                f"got {self.numerics_probe_every}"
+            )
 
 
 @dataclasses.dataclass(frozen=True)

@@ -387,27 +387,33 @@ def autotune(
     k = (jax.random.normal(kk, (1, n, d)) * 0.5).astype(dtype)
     v = jax.random.normal(kv, (1, n, d)).astype(dtype)
 
+    # Tag the sweep so telemetry/accounting.py attributes its (expected,
+    # numerous) backend compiles to "autotune_sweep" instead of whatever
+    # hot-loop program the engine/trainer is currently tagged with.
+    from repro.telemetry.accounting import tagged_program
+
     jnp_fn = jax.jit(lambda q, k, v: spectral_shift_attention(q, k, v, cfg))
-    results: list[tuple[float, Plan]] = [
-        (_time_call(jnp_fn, q, k, v, reps=reps),
-         Plan(impl="jnp", block_n=min(512, n), source="autotuned"))
-    ]
-    fused_impl = "interpret" if interpret else "fused"
-    for block in dict.fromkeys(min(bc, n) for bc in block_candidates):
-        for bc_c in dict.fromkeys(block_c_candidates):
-            fn = functools.partial(
-                ss_attention_fused, cfg=cfg, block_n=block, block_c=bc_c,
-                interpret=interpret,
-            )
-            try:
-                t = _time_call(fn, q, k, v, reps=reps)
-            except Exception:
-                continue  # candidate doesn't lower on this backend/shape
-            results.append((
-                t,
-                Plan(impl=fused_impl, block_n=block, block_c=bc_c,
-                     source="autotuned"),
-            ))
+    with tagged_program("autotune_sweep"):
+        results: list[tuple[float, Plan]] = [
+            (_time_call(jnp_fn, q, k, v, reps=reps),
+             Plan(impl="jnp", block_n=min(512, n), source="autotuned"))
+        ]
+        fused_impl = "interpret" if interpret else "fused"
+        for block in dict.fromkeys(min(bc, n) for bc in block_candidates):
+            for bc_c in dict.fromkeys(block_c_candidates):
+                fn = functools.partial(
+                    ss_attention_fused, cfg=cfg, block_n=block, block_c=bc_c,
+                    interpret=interpret,
+                )
+                try:
+                    t = _time_call(fn, q, k, v, reps=reps)
+                except Exception:
+                    continue  # candidate doesn't lower on this backend/shape
+                results.append((
+                    t,
+                    Plan(impl=fused_impl, block_n=block, block_c=bc_c,
+                         source="autotuned"),
+                ))
     _, plan = min(results, key=lambda r: r[0])
     register_plan(key, plan)
     if save:
@@ -489,32 +495,36 @@ def autotune_decode(
 
         return _time_call(jax.jit(fn), q, k_pool, v_pool, reps=reps)
 
-    results: list[tuple[float, Plan]] = [(
-        sum(time_gather(nv) for nv in views),
-        Plan(impl="jnp", block_n=min(512, n), source="autotuned"),
-    )]
-    for bt in dict.fromkeys(block_table_candidates):
-        t = 0.0
-        try:
-            for nv in views:
-                nv_r = bucket_view_slots(nv, n_slots_full, bt)
-                tb = jnp.pad(table[:nv], (0, nv_r - nv))[None]  # ZERO_BLOCK
-                kvv = jnp.asarray([nv * bs - 1], jnp.int32)
+    # Same compile attribution as the self-family sweep above.
+    from repro.telemetry.accounting import tagged_program
 
-                def fn(q_, kp, vp, tb=tb, kvv=kvv):
-                    return paged_row_stats_lanes(
-                        q_, (kp,), vp, tb, kvv, scale=scale, block_size=bs,
-                        interpret=interpret,
-                    )
+    with tagged_program("autotune_sweep"):
+        results: list[tuple[float, Plan]] = [(
+            sum(time_gather(nv) for nv in views),
+            Plan(impl="jnp", block_n=min(512, n), source="autotuned"),
+        )]
+        for bt in dict.fromkeys(block_table_candidates):
+            t = 0.0
+            try:
+                for nv in views:
+                    nv_r = bucket_view_slots(nv, n_slots_full, bt)
+                    tb = jnp.pad(table[:nv], (0, nv_r - nv))[None]  # ZERO_BLOCK
+                    kvv = jnp.asarray([nv * bs - 1], jnp.int32)
 
-                t += _time_call(jax.jit(fn), q, k_pool, v_pool, reps=reps)
-        except Exception:
-            continue  # candidate doesn't lower on this backend/shape
-        results.append((
-            t,
-            Plan(impl="paged", block_n=min(512, n), block_table=bt,
-                 source="autotuned"),
-        ))
+                    def fn(q_, kp, vp, tb=tb, kvv=kvv):
+                        return paged_row_stats_lanes(
+                            q_, (kp,), vp, tb, kvv, scale=scale, block_size=bs,
+                            interpret=interpret,
+                        )
+
+                    t += _time_call(jax.jit(fn), q, k_pool, v_pool, reps=reps)
+            except Exception:
+                continue  # candidate doesn't lower on this backend/shape
+            results.append((
+                t,
+                Plan(impl="paged", block_n=min(512, n), block_table=bt,
+                     source="autotuned"),
+            ))
     _, plan = min(results, key=lambda r: r[0])
     register_plan(key, plan)
     if save:

@@ -123,6 +123,7 @@ class ServeEngine:
         if telemetry is None:
             telemetry = Telemetry(enabled=serve.telemetry)
         self.telemetry = telemetry
+        self.telemetry.stamp_provenance(cfg, serve)
 
         self.kv = PagedKVCache(cfg, serve)
         alloc = (
@@ -132,6 +133,7 @@ class ServeEngine:
         self.sched = Scheduler(
             alloc, self.max_lanes, serve.blocks_per_lane,
             registry=self.telemetry.metrics if self.telemetry.enabled else None,
+            flight=self.telemetry.flight if self.telemetry.enabled else None,
         )
         self.sched.requeue_cb = self._on_preempt
         if self.telemetry.enabled:
@@ -281,6 +283,31 @@ class ServeEngine:
         b = serve.prefill_bucket
         self._bucket = -(-b // serve.block_size) * serve.block_size
 
+        # XLA program accounting (telemetry/accounting.py): the three
+        # hot-loop programs are wrapped so every jit cache miss increments
+        # xla_compiles_total{program=} — a steady-state engine must show
+        # the counter FLAT across ticks (shape-bucket explosions show up
+        # immediately). The jax.monitoring listener additionally attributes
+        # backend compiles we don't wrap (autotune sweeps) to their tagged
+        # region. Numerics probes are a separate knob: they force a host
+        # sync, so ServeConfig.numerics_probe_every gates their cadence.
+        from repro.telemetry import accounting as acct
+
+        self._numerics = acct.NullNumericsProbe()
+        if self.telemetry.enabled:
+            acct.set_metrics(self.telemetry.metrics)
+            acct.install_compile_listener()
+            self._acct = acct.XLAAccounting(self.telemetry.metrics)
+            self._fused_step = self._acct.wrap(self._fused_step, "decode_tick")
+            if self.batched:
+                self._prefill = self._acct.wrap(self._prefill, "prefill")
+            if self._frozen_rebase:
+                self._rebase_step = self._acct.wrap(self._rebase_step, "rebase")
+            if serve.numerics_probe_every > 0:
+                self._numerics = acct.NumericsProbe(self.telemetry.metrics)
+        else:
+            self._acct = None
+
     # -- public API ----------------------------------------------------------
     def submit(self, req: Request) -> None:
         if len(req.prompt) >= self.max_seq:
@@ -335,6 +362,9 @@ class ServeEngine:
             n_pad = min(-(-n // self._bucket) * self._bucket, self.max_seq)
         tokens = np.zeros((1, n_pad), np.int32)
         tokens[0, :n] = req.prompt
+        self.telemetry.flight.record(
+            req.uid, "prefill_start", bucket=n_pad, lane=i, tick=self._tick
+        )
         logits, pcache = self._prefill(
             jnp.asarray(tokens), jnp.asarray(n, jnp.int32)
         )
@@ -342,6 +372,7 @@ class ServeEngine:
         lane.pos = n
         lane.prefilled_tick = self._tick
         lg = np.asarray(logits[0, n - 1, : self.cfg.vocab_size], np.float32)
+        self.telemetry.flight.record(req.uid, "prefill_end", bucket=n_pad)
         self._emit_token(i, lg)
 
     # -- sampling / retirement -------------------------------------------------
@@ -378,6 +409,14 @@ class ServeEngine:
         tel = self.telemetry
         if tel.enabled:
             self._ticks_total.inc()
+            # Counter-track samples for the Perfetto export: one point per
+            # tick into fixed-size deques (telemetry/flight.py).
+            fl = tel.flight
+            fl.counter_sample("queue_depth", len(self.sched.waiting))
+            alloc = self.sched.allocator
+            if alloc is not None:
+                fl.counter_sample("pool_blocks_used", alloc.num_used)
+                fl.counter_sample("pool_fragmentation", alloc.fragmentation())
 
         with tel.span("admit"):
             admissions = self.sched.admit()
@@ -439,10 +478,22 @@ class ServeEngine:
         with tel.span("device_sync"):
             logits = np.asarray(logits[:, 0, 0], np.float32)
 
+        probe_every = self.serve.numerics_probe_every
+        if probe_every > 0 and self._tick % probe_every == 0:
+            self._numerics.check("decode_logits", logits)
+            if self._stream_idx:
+                for i in active:
+                    for m, l, _ in self._lane_stream_stats(i):
+                        self._numerics.check("landmark_m", m)
+                        self._numerics.check("landmark_l", l)
+
         with tel.span("sample_emit"):
             for i in active:
                 lane = self.lanes[i]
                 lane.pos += 1
+                tel.flight.record(
+                    lane.req.uid, "decode", tick=self._tick, pos=lane.pos
+                )
                 if lane.prompt_left:  # replay prefill: ignore the sample
                     lane.next_token = lane.prompt_left.popleft()
                     continue
@@ -483,6 +534,11 @@ class ServeEngine:
         self.telemetry.metrics.counter(
             "serve_rebases_total", help="frozen-mode boundary rebases"
         ).inc(len(hits))
+        for i in hits:
+            self.telemetry.flight.record(
+                self.lanes[i].req.uid, "rebase", tick=self._tick,
+                pos=int(positions[i]),
+            )
         if pre is not None:
             self._probe_rebase_drift(hits, positions, pre)
 
@@ -551,4 +607,10 @@ class ServeEngine:
             st["rebases"] = self._rebases
         if self.telemetry.enabled:
             st["telemetry"] = self.telemetry.tracer.summary()
+            st["flight"] = self.telemetry.flight.summary()
+            if self._acct is not None:
+                st["xla_compiles"] = {
+                    p: self._acct.compiles(p)
+                    for p in ("prefill", "decode_tick", "rebase")
+                }
         return st

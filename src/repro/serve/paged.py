@@ -347,6 +347,7 @@ class PagedKVCache:
                 tables = tables[:, :n_view_blocks]
             return jitted(storage, tables, tokens, positions, active)
 
+        call._jitted = jitted  # jit-cache probe for telemetry/accounting.py
         return call
 
     def make_paged_step(self, decode_step_fn):
@@ -418,6 +419,7 @@ class PagedKVCache:
             return jitted(storage, tables[:, :n_view_blocks], tokens,
                           positions, active)
 
+        call._jitted = jitted  # jit-cache probe for telemetry/accounting.py
         return call
 
     def make_rebase_step(self, vmapped_rebase):
@@ -459,6 +461,7 @@ class PagedKVCache:
                 tables = tables[:, :n_view_blocks]
             return jitted(storage, tables, positions, flags)
 
+        call._jitted = jitted  # jit-cache probe for telemetry/accounting.py
         return call
 
     def view_blocks_needed(self, positions, lanes, quantum: int = 0) -> int:

@@ -57,11 +57,20 @@ class RequestTiming:
 class Scheduler:
     def __init__(self, allocator: Optional[BlockAllocator], max_lanes: int,
                  blocks_per_lane: int,
-                 registry: Optional[MetricsRegistry] = None):
+                 registry: Optional[MetricsRegistry] = None,
+                 flight=None):
         self.allocator = allocator  # None => model has no paged state
         self.max_lanes = max_lanes
         self.blocks_per_lane = blocks_per_lane
         self.waiting: deque = deque()
+        # Per-request flight recorder (PR 7): the scheduler stamps the
+        # queue-side lifecycle events (submit/admit/preempt/requeue/finish);
+        # the engine stamps the compute-side ones (prefill/decode/rebase).
+        if flight is None:
+            from repro.telemetry.flight import NullFlightRecorder
+
+            flight = NullFlightRecorder()
+        self.flight = flight
         # set by the engine: lane index -> Request to requeue on preemption
         self.requeue_cb = None
         self.lane_uid: list[Optional[int]] = [None] * max_lanes
@@ -135,6 +144,9 @@ class Scheduler:
         if t.arrived < 0:
             t.arrived = self.tick_now
             t.arrived_s = time.perf_counter()
+            self.flight.record(req.uid, "submit",
+                               prompt_len=len(req.prompt),
+                               tick=self.tick_now)
 
     def _blocks_for_prompt(self, req) -> int:
         if self.allocator is None:
@@ -156,8 +168,12 @@ class Scheduler:
             self.waiting.popleft()
             self.lane_uid[lane] = req.uid
             self.admit_order[req.uid] = self.tick_now
-            self.timing[req.uid].admitted = self.tick_now
+            t = self.timing[req.uid]
+            t.admitted = self.tick_now
             self._admitted.inc()
+            self.flight.record(req.uid, "admit", lane=lane,
+                               tick=self.tick_now,
+                               queued_ticks=self.tick_now - t.arrived)
             admissions.append((lane, req))
         return admissions
 
@@ -216,10 +232,12 @@ class Scheduler:
         t.new_tokens = 0
         t.last_token_s = None  # decode restarts; don't count the gap as ITL
         self._preempted.inc()
+        self.flight.record(uid, "preempt", lane=lane, tick=self.tick_now)
         req = self.requeue_cb(lane) if self.requeue_cb else None
         if req is not None:
             self.waiting.appendleft(req)
             self._requeued.inc()
+            self.flight.record(uid, "requeue", tick=self.tick_now)
 
     def release(self, lane: int) -> None:
         """Normal retirement: free blocks, mark finished."""
@@ -234,6 +252,9 @@ class Scheduler:
         t.finished = self.tick_now
         self._finished.inc()
         self._latency_ticks.observe(t.finished - t.arrived)
+        self.flight.record(uid, "finish", tick=self.tick_now,
+                           tokens=t.new_tokens,
+                           latency_ticks=t.finished - t.arrived)
 
     def note_token(self, uid: int) -> None:
         t = self.timing[uid]

@@ -16,12 +16,38 @@ no-op registry/tracer pair: every instrumentation site still *calls*
 telemetry, but each call is a shared-object no-op, nothing is retained,
 and dumps write nothing — the zero-overhead contract behind the
 ``ServeConfig.telemetry`` knob.
+
+The PR 7 observability layer adds three more members to the bundle:
+
+* ``flight`` — a :class:`~repro.telemetry.flight.FlightRecorder` holding
+  one bounded lifeline per request; its lifelines are appended to the
+  JSONL dump as ``{"kind": "flight", ...}`` lines and drive the request
+  tracks in the Perfetto export (:mod:`repro.telemetry.export`);
+* ``meta_defaults`` — the provenance stamp (git SHA, jax version,
+  config hash) merged into every ``dump_jsonl`` meta line and exported
+  trace; populate it via :func:`stamp_provenance`;
+* the flight recorder shares the tracer's ``perf_counter`` origin so
+  lifelines and host spans share one timeline.
 """
 from __future__ import annotations
 
 import json
 from typing import Optional
 
+from repro.telemetry.accounting import (  # noqa: F401
+    NullNumericsProbe,
+    NumericsProbe,
+    XLAAccounting,
+    compiled_cost,
+    install_compile_listener,
+    tagged_program,
+)
+from repro.telemetry.export import (  # noqa: F401
+    chrome_trace,
+    validate_trace,
+    write_chrome_trace,
+)
+from repro.telemetry.flight import FlightRecorder, NullFlightRecorder  # noqa: F401
 from repro.telemetry.metrics import (  # noqa: F401  (re-exports)
     LATENCY_BUCKETS,
     RATIO_BUCKETS,
@@ -40,6 +66,7 @@ from repro.telemetry.monitors import (  # noqa: F401
     bv_row_residual,
     spectrum_mass,
 )
+from repro.telemetry.provenance import config_hash, git_sha, provenance  # noqa: F401
 from repro.telemetry.tracing import NullTracer, Tracer  # noqa: F401
 
 
@@ -55,14 +82,26 @@ class Telemetry:
         max_events: int = 200_000,
     ):
         self.enabled = enabled
+        self.meta_defaults: dict = {}
         if enabled:
             self.metrics = registry if registry is not None else MetricsRegistry()
             self.tracer = Tracer(
                 self.metrics, annotate=annotate, max_events=max_events
             )
+            self.flight = FlightRecorder(
+                registry=self.metrics, origin=self.tracer._origin
+            )
         else:
             self.metrics = NullRegistry()
             self.tracer = NullTracer()
+            self.flight = NullFlightRecorder()
+
+    def stamp_provenance(self, *cfgs) -> None:
+        """Record the provenance stamp (git SHA, jax version, and the
+        joint hash of ``cfgs``) into ``meta_defaults`` so every later
+        ``dump_jsonl``/trace export carries it."""
+        if self.enabled:
+            self.meta_defaults.update(provenance(*cfgs))
 
     def span(self, name: str, **labels):
         return self.tracer.span(name, **labels)
@@ -81,6 +120,7 @@ class Telemetry:
         n = 0
         with open(path, "w") as fh:
             head = {"kind": "meta", "schema": "repro-telemetry-v1"}
+            head.update(self.meta_defaults)
             if meta:
                 head.update(meta)
             fh.write(json.dumps(head) + "\n")
@@ -93,6 +133,7 @@ class Telemetry:
                 fh.write(json.dumps(row) + "\n")
                 n += 1
             n += self.tracer.dump_jsonl(fh)
+            n += self.flight.dump_jsonl(fh)
         return n
 
 

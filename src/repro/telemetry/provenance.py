@@ -1,0 +1,67 @@
+"""Provenance stamps for telemetry and benchmark artifacts.
+
+Every artifact this repo emits — the telemetry JSONL meta line, the
+top-level ``BENCH_*.json`` envelopes, the Perfetto trace metadata, the
+``results/bench_trajectory.jsonl`` history — carries the same small stamp:
+
+    {"git_sha": ..., "jax": ..., "config_hash": ...?}
+
+so traces, benches and regression verdicts are correlatable across
+commits without guessing which tree produced them. ``config_hash`` is a
+stable content hash over the dataclass configs that shaped the run
+(ModelConfig / ServeConfig / ...), so two runs at the same SHA but
+different knobs don't silently share an identity.
+
+Everything here degrades gracefully: outside a git checkout the SHA falls
+back to ``$GITHUB_SHA`` and then ``"unknown"`` — provenance must never be
+the reason an artifact fails to write.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+import json
+import os
+import subprocess
+
+
+@functools.lru_cache(maxsize=1)
+def git_sha() -> str:
+    """HEAD commit of the repo containing this file (cached per process)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=here, capture_output=True,
+            text=True, timeout=10,
+        )
+        if out.returncode == 0 and out.stdout.strip():
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return os.environ.get("GITHUB_SHA", "unknown")
+
+
+def config_hash(*cfgs) -> str:
+    """Stable 12-hex content hash over any number of dataclass configs
+    (non-dataclasses hash their repr). Field order never matters."""
+    blobs = []
+    for cfg in cfgs:
+        if dataclasses.is_dataclass(cfg) and not isinstance(cfg, type):
+            payload = dataclasses.asdict(cfg)
+        else:
+            payload = repr(cfg)
+        blobs.append(json.dumps(payload, sort_keys=True, default=str))
+    digest = hashlib.sha256("\x00".join(blobs).encode())
+    return digest.hexdigest()[:12]
+
+
+def provenance(*cfgs) -> dict:
+    """The standard stamp. Pass the run's configs (ModelConfig,
+    ServeConfig, ...) to include their joint ``config_hash``."""
+    import jax
+
+    out = {"git_sha": git_sha(), "jax": jax.__version__}
+    if cfgs:
+        out["config_hash"] = config_hash(*cfgs)
+    return out

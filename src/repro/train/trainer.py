@@ -82,6 +82,7 @@ class Trainer:
             from repro.telemetry.metrics import LATENCY_BUCKETS
 
             dispatch.set_metrics(telemetry.metrics)
+            telemetry.stamp_provenance(cfg, tcfg)
             r = telemetry.metrics
             self._step_hist = r.histogram(
                 "train_step_seconds", help="wall time per optimizer step",
@@ -134,6 +135,17 @@ class Trainer:
                 out_shardings=(self.p_sh, self.o_sh, NamedSharding(mesh, P())),
                 donate_argnums=(0, 1),
             )
+            if self.telemetry.enabled:
+                # xla_compiles_total{program="train_step"}: a steady run
+                # compiles once; growth mid-run means a shape leak (batch /
+                # mesh churn) — see telemetry/accounting.py.
+                from repro.telemetry import accounting as acct
+
+                acct.set_metrics(self.telemetry.metrics)
+                acct.install_compile_listener()
+                self.jitted = acct.XLAAccounting(self.telemetry.metrics).wrap(
+                    self.jitted, "train_step"
+                )
 
             latest = self.ckpt.latest_step() if restore else None
             if latest is not None:
