@@ -16,6 +16,14 @@ Besides the CSV rows, results land in two machine-readable artifacts:
   the path) — TTFT/ITL histograms, per-tick spans, pool gauges, autotune
   counters. CI's bench-smoke job uploads it as an artifact.
 
+The continuous-batching headline lives in the Poisson cell: a seeded
+Poisson-arrival trace with mixed long/short prompts is replayed on the
+chunked-prefill engine and on the two-phase baseline
+(``chunked_prefill=False``), and TTFT/ITL p50/p99 are computed bench-side
+from per-token wall stamps. The chunked replay also exports a Perfetto
+trace (``REPRO_TRACE_JSON`` overrides the path) showing chunk lifelines
+riding the decode ticks — CI uploads it too.
+
     PYTHONPATH=src python -m benchmarks.run --only serve
     REPRO_BENCH_SMOKE=1 ... (one prompt length, fewer reps, for CI)
 """
@@ -33,12 +41,25 @@ from repro.configs.registry import get_config
 from repro.models.model import model_specs
 from repro.models.params import init_params
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.workload import latency_metrics, poisson_trace, replay_trace
 
 PROMPT_LENS = (32, 64, 128, 256)
 MAX_SEQ = 320
 MAX_NEW = 8
+# Poisson-arrival mixed-length workload: identical in smoke and full runs
+# (the regress gate compares the cell across the two). Short/long prompt mix
+# puts whole-prompt prefills in front of live decoders — the regime chunked
+# prefill exists for.
+POISSON = dict(
+    n_requests=12, mean_interarrival_ticks=2.0, prompt_lens=(16, 160),
+    max_new_tokens=12,
+)
+POISSON_SEED = 7
 TELEMETRY_PATH = os.path.join(
     os.path.dirname(__file__), "..", "results", "telemetry_serve.jsonl"
+)
+TRACE_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "results", "trace_serve_poisson.json"
 )
 
 _cells: dict[str, dict] = {}
@@ -141,6 +162,58 @@ def _telemetry_cell(cfg, params, lanes: int, path: str) -> None:
     print(f"[bench_serve] telemetry dump: {n} lines -> {path}")
 
 
+def _poisson_cell(cfg, params, csv_rows: list[str], trace_path: str) -> None:
+    """ITL/TTFT percentiles under a seeded Poisson arrival trace with mixed
+    long/short prompts: continuous batching (chunked prefill) vs the
+    two-phase baseline (``chunked_prefill=False``) on the SAME trace.
+
+    Each engine first replays the identical trace under shifted uids so
+    every XLA program (chunk step, prefill buckets, decode ticks) is
+    compiled before the timed replay. Latency comes from bench-side
+    ``Request.on_token`` wall stamps, so warmup never contaminates the
+    percentiles. The chunked engine runs with telemetry on and exports a
+    Perfetto trace of the timed replay (chunk lifelines riding the decode
+    ticks) for the CI artifact."""
+    lanes = 4
+    configs = {
+        "two_phase": dataclasses.replace(_serve_cfg(True, lanes)),
+        "chunked": dataclasses.replace(
+            _serve_cfg(True, lanes), chunked_prefill=True,
+            prefill_chunk_tokens=32, prefill_token_budget=32,
+            telemetry=True,
+        ),
+    }
+    results: dict[str, dict] = {}
+    for name, serve in configs.items():
+        eng = ServeEngine(cfg, params, serve=serve)
+        replay_trace(eng, poisson_trace(
+            seed=POISSON_SEED, uid_offset=10_000,
+            vocab_size=cfg.vocab_size, **POISSON))  # warm: compile everything
+        stamps = replay_trace(eng, poisson_trace(
+            seed=POISSON_SEED, vocab_size=cfg.vocab_size, **POISSON))
+        m = latency_metrics(stamps)
+        results[name] = m
+        cell = f"paged|{name}|poisson"
+        for k in ("ttft_p50_s", "ttft_p99_s", "itl_p50_s", "itl_p99_s"):
+            _record(cell, k, m[k])
+            csv_rows.append(f"serve,poisson_{name},{k},{m[k]:.4f}")
+        if name == "chunked":
+            from repro.telemetry.export import write_chrome_trace
+
+            os.makedirs(os.path.dirname(trace_path), exist_ok=True)
+            n = write_chrome_trace(trace_path, eng.telemetry, meta={
+                "bench": "serve_poisson", "host": jax.default_backend(),
+            })
+            print(f"[bench_serve] poisson trace: {n} events -> {trace_path}")
+    speedup = results["two_phase"]["itl_p99_s"] / max(
+        results["chunked"]["itl_p99_s"], 1e-9)
+    _record("paged|chunked|poisson", "itl_p99_speedup", speedup)
+    csv_rows.append(f"serve,poisson,itl_p99_speedup,{speedup:.2f}")
+    print(f"[bench_serve] poisson itl p99: two_phase="
+          f"{results['two_phase']['itl_p99_s']:.4f}s chunked="
+          f"{results['chunked']['itl_p99_s']:.4f}s ({speedup:.2f}x)")
+
+
 def write_json() -> None:
     from benchmarks.run import write_bench  # lazy: avoids an import cycle
 
@@ -148,7 +221,10 @@ def write_json() -> None:
         "serve",
         schema="impl|mode|cell -> {ttft_ticks, ttft_s, tok_per_s, ...}",
         shape={"max_seq": MAX_SEQ, "max_new": MAX_NEW,
-               "prompt_lens": list(PROMPT_LENS)},
+               "prompt_lens": list(PROMPT_LENS),
+               "poisson": {**{k: list(v) if isinstance(v, tuple) else v
+                              for k, v in POISSON.items()},
+                           "seed": POISSON_SEED}},
         cells=_cells,
     )
 
@@ -194,6 +270,10 @@ def run(csv_rows: list[str]) -> None:
     _telemetry_cell(
         cfg, params, lanes=2,
         path=os.environ.get("REPRO_TELEMETRY_JSONL", TELEMETRY_PATH),
+    )
+    _poisson_cell(
+        cfg, params, csv_rows,
+        trace_path=os.environ.get("REPRO_TRACE_JSON", TRACE_PATH),
     )
     write_json()
 

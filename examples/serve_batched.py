@@ -8,6 +8,8 @@ engines with --mode:
     PYTHONPATH=src python examples/serve_batched.py --mode dense   # seed-style
     PYTHONPATH=src python examples/serve_batched.py --mode ss_fused
     PYTHONPATH=src python examples/serve_batched.py --tick paged   # gather-free
+    PYTHONPATH=src python examples/serve_batched.py --chunked      # continuous
+                                                   # batching (chunked prefill)
     PYTHONPATH=src python examples/serve_batched.py --trace /tmp/serve.json
                                                    # Perfetto trace export
 """
@@ -50,6 +52,16 @@ def main():
     ap.add_argument("--streaming", default="exact",
                     choices=["recompute", "exact", "frozen"],
                     help="ModelConfig.decode_streaming policy")
+    ap.add_argument("--chunked", action="store_true",
+                    help="continuous batching: prompts prefill in "
+                         "fixed-size chunks riding the decode tick "
+                         "(greedy outputs stay token-identical)")
+    ap.add_argument("--chunk-tokens", type=int, default=32,
+                    help="chunk size for --chunked (rounded up to a "
+                         "block multiple)")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="per-tick prompt-token budget for --chunked "
+                         "(0 = one chunk per tick)")
     ap.add_argument("--telemetry", metavar="PATH", default=None,
                     help="enable the telemetry subsystem, dump the JSONL "
                          "to PATH and print a one-screen summary at exit")
@@ -73,6 +85,9 @@ def main():
         batched_prefill=args.mode != "dense",
         prefill_impl="ss_fused" if args.mode == "ss_fused" else "replay",
         decode_impl=args.tick,
+        chunked_prefill=args.chunked,
+        prefill_chunk_tokens=args.chunk_tokens,
+        prefill_token_budget=args.prefill_budget,
         telemetry=args.telemetry is not None or args.trace is not None,
     )
     engine = ServeEngine(cfg, params, serve=serve)

@@ -203,6 +203,21 @@ class ServeConfig:
                                   #   commits via a single-block scatter
                                   #   (kernels/paged_decode.py; falls back
                                   #   to gather when unsupported)
+    chunked_prefill: bool = False  # continuous batching: split prefill into
+                                   # fixed-size chunks that ride inside the
+                                   # decode tick (decode lanes advance every
+                                   # tick, long prompts never stall them).
+                                   # False reproduces the two-phase engine
+                                   # exactly. Needs batched_prefill; falls
+                                   # back to whole-prompt for families
+                                   # without batched prefill (hybrid/ssm).
+    prefill_chunk_tokens: int = 64  # chunk size (one static XLA program);
+                                    # rounded up to a block_size multiple so
+                                    # chunks commit whole blocks
+    prefill_token_budget: int = 0   # max prompt tokens chunk-prefilled per
+                                    # tick across all lanes; 0 = one chunk.
+                                    # At least one chunk always runs when a
+                                    # prefill is pending (no livelock).
     eos_id: int = 2
     seed: int = 0
     telemetry: bool = False       # unified metrics/tracing/drift monitors
@@ -246,6 +261,21 @@ class ServeConfig:
             raise ValueError(
                 f"numerics_probe_every must be >= 0, "
                 f"got {self.numerics_probe_every}"
+            )
+        if self.chunked_prefill and not self.batched_prefill:
+            raise ValueError(
+                "chunked_prefill=True requires batched_prefill=True (chunks "
+                "are bucketed batched-prefill programs)"
+            )
+        if self.prefill_chunk_tokens <= 0:
+            raise ValueError(
+                f"prefill_chunk_tokens must be > 0, "
+                f"got {self.prefill_chunk_tokens}"
+            )
+        if self.prefill_token_budget < 0:
+            raise ValueError(
+                f"prefill_token_budget must be >= 0, "
+                f"got {self.prefill_token_budget}"
             )
 
 

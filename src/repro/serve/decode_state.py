@@ -170,6 +170,36 @@ def rebase_rows(stats, q_l, k, v, pos, scale: float, rows):
     return put(m, m_r), put(l, l_r), put(acc, acc_r)
 
 
+def rebase_span(stats, q_l, k, v, pos, scale: float, row_lo, row_hi,
+                span: int):
+    """Exactly recompute a *contiguous* window of landmark rows
+    ``row_lo..row_hi`` (traced scalars) over keys 0..pos; other rows pass
+    through unchanged. ``span`` is the static window capacity
+    (``row_hi - row_lo + 1 <= span``); rows past ``row_hi`` or ``c`` are
+    masked out of the scatter, so the window may hang off either bound.
+
+    This is ``rebase_rows`` for the chunked-prefill case where the row set
+    is a traced range rather than concrete indices: consecutive rows are
+    distinct by construction, and the clamped tail duplicates are masked,
+    so the onehot scatter never double-adds (``rebase_rows`` would)."""
+    m, l, acc = stats
+    c = q_l.shape[2]
+    rows = row_lo + jnp.arange(span)                      # (span,) traced
+    q_sel = jnp.take(q_l, jnp.minimum(rows, c - 1), axis=2)
+    m_r, l_r, acc_r = recompute_stats(q_sel, k, v, pos, scale)
+    live = (rows <= row_hi) & (rows < c)
+    onehot = (
+        (rows[:, None] == jnp.arange(c)[None, :]) & live[:, None]
+    ).astype(jnp.float32)
+    hit = (jnp.sum(onehot, axis=0) > 0)[:, None]          # (c, 1)
+
+    def put(old, new):
+        upd = jnp.einsum("rc,bhrx->bhcx", onehot, new)
+        return jnp.where(hit, upd, old.astype(jnp.float32))
+
+    return put(m, m_r), put(l, l_r), put(acc, acc_r)
+
+
 def mask_stats_rows(stats, keep):
     """Zero the partial state of rows where ``keep`` (c,) is False."""
     m, l, acc = stats

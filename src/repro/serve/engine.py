@@ -34,6 +34,21 @@ vLLM-style serving on top of ``decode_step``:
   (default) keeps the legacy dense-view tick, which also serves
   ``decode_streaming="recompute"`` and the frozen boundary rebase.
 
+* with ``ServeConfig.chunked_prefill=True`` the engine switches to a
+  **continuous-batching tick** (``_tick_chunked``): prompts prefill in
+  fixed-size chunks (serve/prefill.py ``chunk_prefill``) that ride INSIDE
+  the decode tick, so a long prompt never freezes decoding lanes — each
+  tick dispatches the batched decode step first, then runs up to
+  ``prefill_token_budget`` worth of prompt chunks while the decode program
+  executes on device, and syncs once at the sample boundary. Chunk K/V
+  commits incrementally into the lane's blocks; the landmark streaming
+  stats carry across chunks via the flash-merge algebra, so chunked
+  prefill is greedy token-identical to whole-prompt replay prefill. A
+  mid-prefill lane preempted for blocks is PARKED (committed blocks kept,
+  dense carry snapshotted) and resumes at the completed-chunk boundary
+  instead of recomputing. ``chunked_prefill=False`` (default) keeps the
+  two-phase tick below, byte for byte.
+
 ``ServeConfig(paged=False, batched_prefill=False)`` reproduces the seed
 engine (dense per-lane caches, token-replay prefill) — kept as the
 benchmark/equivalence baseline. Greedy outputs are token-identical between
@@ -66,6 +81,10 @@ class Request:
     prompt: list[int]
     max_new_tokens: int = 32
     temperature: float = 0.0  # 0 => greedy
+    # streamed-token callback: on_token(uid, token) fires as each token is
+    # sampled (inside the tick, right after the sample boundary) instead of
+    # the caller polling ``finished`` after drain
+    on_token: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -76,6 +95,10 @@ class _Lane:
     next_token: int = 0
     pos: int = 0          # cache position the next decode step writes to
     prefilled_tick: int = -1  # tick of batched prefill (skip decode that tick)
+    # chunked-prefill progress (continuous batching)
+    prefilling: bool = False  # mid-chunked-prefill: not a decode candidate
+    prefill_pos: int = 0      # prompt tokens committed so far
+    chunk_idx: int = 0        # next chunk ordinal (flight lifeline labels)
 
     @property
     def free(self) -> bool:
@@ -130,12 +153,28 @@ class ServeEngine:
             BlockAllocator(serve.resolved_num_blocks, serve.block_size)
             if self.kv.has_paged_leaves else None
         )
+        # Continuous batching: chunk size rounded up to a block multiple so
+        # every non-final chunk commits whole blocks (chunk starts stay
+        # block-aligned). Families without batched prefill (hybrid/ssm)
+        # fall back to the two-phase replay engine.
+        self._chunked = serve.chunked_prefill and prefill_supported(cfg)
+        self._chunk = min(
+            -(-serve.prefill_chunk_tokens // serve.block_size)
+            * serve.block_size,
+            self.max_seq,
+        )
         self.sched = Scheduler(
             alloc, self.max_lanes, serve.blocks_per_lane,
             registry=self.telemetry.metrics if self.telemetry.enabled else None,
             flight=self.telemetry.flight if self.telemetry.enabled else None,
+            chunk_tokens=self._chunk if self._chunked else 0,
         )
         self.sched.requeue_cb = self._on_preempt
+        if self._chunked:
+            self.sched.park_cb = self._park_lane
+            self.sched.park_drop_cb = self._drop_parked
+        # parked mid-prefill state: uid -> dense-leaf snapshot + progress
+        self._parked: dict[int, dict] = {}
         if self.telemetry.enabled:
             reg = self.telemetry.metrics
             self._ticks_total = reg.counter(
@@ -279,6 +318,16 @@ class ServeEngine:
                 params, cfg, seq_max=self.max_seq,
                 prefill_impl=serve.prefill_impl, block_n=prefill_block,
             )
+        if self._chunked:
+            from repro.serve.prefill import make_chunk_prefill_fn
+
+            self._chunk_step = self.kv.make_chunk_step(
+                make_chunk_prefill_fn(
+                    params, cfg, seq_max=self.max_seq,
+                    stats_impl=serve.prefill_impl, block_n=prefill_block,
+                ),
+                self._chunk,
+            )
         # bucket rounded up to a block multiple so prefill writes whole blocks
         b = serve.prefill_bucket
         self._bucket = -(-b // serve.block_size) * serve.block_size
@@ -301,6 +350,10 @@ class ServeEngine:
             self._fused_step = self._acct.wrap(self._fused_step, "decode_tick")
             if self.batched:
                 self._prefill = self._acct.wrap(self._prefill, "prefill")
+            if self._chunked:
+                self._chunk_step = self._acct.wrap(
+                    self._chunk_step, "prefill_chunk"
+                )
             if self._frozen_rebase:
                 self._rebase_step = self._acct.wrap(self._rebase_step, "rebase")
             if serve.numerics_probe_every > 0:
@@ -330,6 +383,29 @@ class ServeEngine:
         req = lane.req
         self.lanes[lane_idx] = _Lane()
         return req
+
+    def _park_lane(self, lane_idx: int) -> bool:
+        """Scheduler park hook: a preemption victim caught mid-chunked-
+        prefill with committed chunks keeps its blocks; only the carried
+        dense state (landmark sums, streaming stats) needs saving — host
+        copies, so re-admission restores without recomputing the chunks.
+        Lane-dense caches can't park (the lane's seq rows get reused), so
+        they fall back to full recompute."""
+        lane = self.lanes[lane_idx]
+        if (lane.req is None or not lane.prefilling
+                or lane.prefill_pos <= 0 or not self.kv.paged):
+            return False
+        self._parked[lane.req.uid] = {
+            "snap": self.kv.dense_snapshot(lane_idx),
+            "prefill_pos": lane.prefill_pos,
+            "chunk_idx": lane.chunk_idx,
+        }
+        return True
+
+    def _drop_parked(self, uid: int) -> None:
+        """Scheduler reclaimed a parked request's blocks: drop the resume
+        snapshot; re-admission recomputes from the first chunk."""
+        self._parked.pop(uid, None)
 
     def _retire(self, i: int) -> None:
         lane = self.lanes[i]
@@ -388,6 +464,8 @@ class ServeEngine:
         tok = self._sample(lane, lg)
         lane.generated.append(tok)
         self.sched.note_token(lane.req.uid)
+        if lane.req.on_token is not None:
+            lane.req.on_token(lane.req.uid, tok)
         done = (
             tok == self.eos_id
             or len(lane.generated) >= lane.req.max_new_tokens
@@ -404,6 +482,8 @@ class ServeEngine:
             self._tick_inner()
 
     def _tick_inner(self) -> None:
+        if self._chunked:
+            return self._tick_chunked()
         self._tick += 1
         self.sched.tick_now = self._tick
         tel = self.telemetry
@@ -513,6 +593,174 @@ class ServeEngine:
                 with tel.span("rebase", lanes=len(hits)):
                     self._run_rebase(hits)
 
+    # -- continuous-batching tick ----------------------------------------------
+    def _tick_chunked(self) -> None:
+        """One continuous-batching tick: decode dispatch FIRST (the device
+        starts on it immediately), then admissions and a budget's worth of
+        prompt chunks dispatched while the decode program runs, then ONE
+        host sync at the sample boundary. Decode lanes advance every tick
+        no matter how much prefill is pending (the never-starve invariant);
+        prefill bandwidth is capped by ``prefill_token_budget`` per tick
+        (0 = one chunk), so ITL stays flat under a long-prompt flood."""
+        self._tick += 1
+        self.sched.tick_now = self._tick
+        tel = self.telemetry
+        if tel.enabled:
+            self._ticks_total.inc()
+            fl = tel.flight
+            fl.counter_sample("queue_depth", len(self.sched.waiting))
+            alloc = self.sched.allocator
+            if alloc is not None:
+                fl.counter_sample("pool_blocks_used", alloc.num_used)
+                fl.counter_sample("pool_fragmentation", alloc.fragmentation())
+
+        # ---- decode dispatch (no sync: chunks below overlap the compute) --
+        candidates = [
+            i for i, l in enumerate(self.lanes)
+            if not l.free and not l.prefilling
+            and l.prefilled_tick != self._tick
+        ]
+        active = []
+        for i in candidates:
+            if self.lanes[i].free:  # preempted as a victim earlier this loop
+                continue
+            if not self.sched.ensure_block(i, self.lanes[i].pos):
+                continue
+            active.append(i)
+        active = [i for i in active if not self.lanes[i].free]
+        dev_logits = None
+        if active:
+            tables = self.sched.tables()
+            tokens = np.zeros((self.max_lanes, 1, 1), np.int32)
+            positions = np.zeros(self.max_lanes, np.int32)
+            mask = np.zeros(self.max_lanes, bool)
+            for i in active:
+                tokens[i, 0, 0] = self.lanes[i].next_token
+                positions[i] = self.lanes[i].pos
+                mask[i] = True
+            nb_view = self.kv.view_blocks_needed(
+                positions, active, quantum=self._view_quantum
+            )
+            with tel.span("decode_dispatch", lanes=len(active)):
+                dev_logits, new_storage = self._fused_step(
+                    self.kv._storage, jnp.asarray(tables),
+                    jnp.asarray(tokens), jnp.asarray(positions),
+                    jnp.asarray(mask), nb_view,
+                )
+                self.kv._storage = list(new_storage)
+
+        # ---- admissions: parked requests resume at their chunk boundary --
+        with tel.span("admit"):
+            admissions = self.sched.admit()
+        for i, req in admissions:
+            lane = self.lanes[i] = _Lane(req=req)
+            parked = self._parked.pop(req.uid, None)
+            if parked is not None:
+                self.kv.dense_restore(i, parked["snap"])
+                lane.prefill_pos = parked["prefill_pos"]
+                lane.chunk_idx = parked["chunk_idx"]
+                lane.prefilling = True
+            else:
+                self.kv.zero_lane_dense(i)
+                if req.prompt:
+                    lane.prefilling = True
+                # empty prompt: straight to decode from pos 0, like replay
+
+        # ---- budgeted chunk dispatch (FCFS by admission order) -----------
+        budget = self.serve.prefill_token_budget or self._chunk
+        max_chunks = max(1, budget // self._chunk)
+        prefilling = sorted(
+            (i for i, l in enumerate(self.lanes) if not l.free and l.prefilling),
+            key=lambda i: self.sched.admit_order.get(
+                self.lanes[i].req.uid, 0
+            ),
+        )
+        pending_first: list[tuple[int, object, int]] = []
+        launched = 0
+        bs = self.serve.block_size
+        for i in prefilling:
+            if launched >= max_chunks:
+                break
+            lane = self.lanes[i]
+            req = lane.req
+            start = lane.prefill_pos
+            cv = min(self._chunk, len(req.prompt) - start)
+            if not self.sched.ensure_prefill_blocks(i, start + cv):
+                continue  # pool dry: the chunk stalls, never evicts a decoder
+            ctoks = np.zeros((1, self._chunk), np.int32)
+            ctoks[0, :cv] = req.prompt[start:start + cv]
+            from repro.serve.paged import bucket_view_slots
+
+            # the sliced row must span the committed prefix AND the chunk's
+            # destination slots (the commit scatter reads its block ids from
+            # this row; the wrapper's ZERO_BLOCK padding is overrun guard
+            # only, not real slots)
+            nbv = bucket_view_slots(
+                start // bs + self._chunk // bs, self.serve.blocks_per_lane
+            )
+            row = self.sched.table_row(i)[:nbv] if self.kv.paged else None
+            with tel.span("prefill_chunk", lane=i, chunk=lane.chunk_idx):
+                lg, new_storage = self._chunk_step(
+                    self.kv._storage, row, ctoks, i, start, cv
+                )
+                self.kv._storage = list(new_storage)
+            tel.flight.record(
+                req.uid, "prefill_chunk", tick=self._tick,
+                chunk=lane.chunk_idx, tok0=start, tok1=start + cv, lane=i,
+            )
+            lane.prefill_pos = start + cv
+            lane.chunk_idx += 1
+            launched += 1
+            if lane.prefill_pos >= len(req.prompt):
+                lane.prefilling = False
+                lane.pos = len(req.prompt)
+                lane.prefilled_tick = self._tick
+                pending_first.append((i, lg, cv))
+
+        # ---- ONE sync at the sample boundary -----------------------------
+        logits = None
+        with tel.span("device_sync"):
+            if dev_logits is not None:
+                logits = np.asarray(dev_logits[:, 0, 0], np.float32)
+            firsts = [
+                (i, np.asarray(
+                    lg[0, cv - 1, : self.cfg.vocab_size], np.float32
+                ))
+                for i, lg, cv in pending_first
+            ]
+
+        probe_every = self.serve.numerics_probe_every
+        if probe_every > 0 and self._tick % probe_every == 0:
+            if logits is not None:
+                self._numerics.check("decode_logits", logits)
+            if self._stream_idx:
+                for i in active:
+                    for m, l, _ in self._lane_stream_stats(i):
+                        self._numerics.check("landmark_m", m)
+                        self._numerics.check("landmark_l", l)
+
+        with tel.span("sample_emit"):
+            for i in active:
+                lane = self.lanes[i]
+                lane.pos += 1
+                tel.flight.record(
+                    lane.req.uid, "decode", tick=self._tick, pos=lane.pos
+                )
+                self._emit_token(i, logits[i, : self.cfg.vocab_size])
+            for i, lg in firsts:
+                self._emit_token(i, lg)
+
+        if self._frozen_rebase:
+            hits = [
+                i for i in active
+                if not self.lanes[i].free
+                and (self.lanes[i].pos - 1) > 0
+                and (self.lanes[i].pos - 1) % self._seg == 0
+            ]
+            if hits:
+                with tel.span("rebase", lanes=len(hits)):
+                    self._run_rebase(hits)
+
     def _run_rebase(self, hits: list[int]) -> None:
         """Frozen-mode segment-boundary rebase for the given lanes."""
         positions = np.zeros(self.max_lanes, np.int32)
@@ -593,7 +841,7 @@ class ServeEngine:
         st = self.sched.stats()
         st["mode"] = (
             f"{'paged' if self.kv.has_paged_leaves else 'dense'}"
-            f"+{'batched' if self.batched else 'replay'}-prefill"
+            f"+{'chunked' if self._chunked else 'batched' if self.batched else 'replay'}-prefill"
         )
         bt = self.decode_plan.block_table
         st["decode_plan"] = (
@@ -611,6 +859,7 @@ class ServeEngine:
             if self._acct is not None:
                 st["xla_compiles"] = {
                     p: self._acct.compiles(p)
-                    for p in ("prefill", "decode_tick", "rebase")
+                    for p in ("prefill", "prefill_chunk", "decode_tick",
+                              "rebase")
                 }
         return st

@@ -221,15 +221,17 @@ class PagedKVCache:
 
     # -- assemble the dense view decode_step expects -------------------------
     def _gather_leaf(self, arr, info: _LeafInfo, tables) -> jnp.ndarray:
-        """Pool (..., num_blocks, bs, ...) + tables (lanes, nb) ->
-        lane-stacked view (lanes, ..., nb*bs, ...)."""
+        """Pool (..., num_blocks, bs, ...) + tables (rows, nb) ->
+        row-stacked view (rows, ..., nb*bs, ...). ``rows`` is usually
+        ``max_lanes`` (decode tick) but can be 1 (a single lane's view for
+        a chunked-prefill step)."""
         j = info.seq_axis
         shape = info.spec.shape
-        # take with 2D indices at the block axis: (..., lanes, nb, bs, ...)
+        # take with 2D indices at the block axis: (..., rows, nb, bs, ...)
         g = jnp.take(arr, tables, axis=j)
-        g = jnp.moveaxis(g, j, 0)          # lanes leading
+        g = jnp.moveaxis(g, j, 0)          # rows leading
         view_len = tables.shape[1] * self.block_size
-        return g.reshape(self.max_lanes, *shape[:j], view_len,
+        return g.reshape(tables.shape[0], *shape[:j], view_len,
                          *shape[j + 1:])
 
     def gather_views(self, tables: np.ndarray) -> Any:
@@ -421,6 +423,136 @@ class PagedKVCache:
 
         call._jitted = jitted  # jit-cache probe for telemetry/accounting.py
         return call
+
+    def make_chunk_step(self, chunk_fn, chunk_pad: int):
+        """One jitted XLA program for a chunked-prefill step of ONE lane:
+        gather the lane's committed-prefix view from the pool (plus its
+        carried dense landmark/streaming leaves) -> run ``chunk_fn`` (a
+        ``make_chunk_prefill_fn`` closure: one fixed-size prompt chunk at
+        global positions start..start+chunk_valid-1) -> commit the chunk's
+        K/V into the lane's blocks and the carried-forward dense state into
+        the lane's dense slots. Pool buffers are donated, so the commit
+        updates in place — a chunk step touches ``chunk_pad / block_size``
+        blocks plus the lane's dense leaves, independent of the horizon.
+
+        ``chunk_pad`` must be a ``block_size`` multiple and chunk starts
+        must be block-aligned (the engine rounds the chunk size up); the
+        final ragged chunk rides with ``chunk_valid < chunk_pad`` and its
+        partial block commits zero-masked, exactly like ``write_prefill``.
+
+        Returns ``fn(storage, table_row, tokens, lane, start, chunk_valid)
+        -> (logits, new_storage)`` with ``table_row`` the lane's block table
+        sliced to the engine's bucketed view length (ignored when the cache
+        is lane-dense), ``tokens`` (1, chunk_pad) int32 and ``lane`` /
+        ``start`` / ``chunk_valid`` traced int32 scalars — one XLA program
+        per distinct view bucket, not per chunk index. Next-token logits
+        live at ``logits[0, chunk_valid - 1]``."""
+        if chunk_pad % self.block_size:
+            raise ValueError("chunk_pad must be a block_size multiple")
+        infos, treedef = self.infos, self.treedef
+        paged, bs = self.paged, self.block_size
+        cb = chunk_pad // bs
+        max_seq = self.max_seq
+
+        def fused(storage, table_row, tokens, lane, start, chunk_valid):
+            views = []
+            for arr, info in zip(storage, infos):
+                if paged and info.seq_axis is not None:
+                    views.append(self._gather_leaf(arr, info, table_row)[0])
+                else:
+                    views.append(
+                        jax.lax.dynamic_index_in_dim(arr, lane, 0, False)
+                    )
+            cache = jax.tree_util.tree_unflatten(treedef, views)
+            logits, new_cache = chunk_fn(cache, tokens, start, chunk_valid)
+            new_leaves = jax.tree_util.tree_leaves(new_cache)
+            out = []
+            for arr, new, view, info in zip(storage, new_leaves, views, infos):
+                j = info.seq_axis
+                if j is None:
+                    out.append(jax.lax.dynamic_update_index_in_dim(
+                        arr, new.astype(arr.dtype), lane, 0
+                    ))
+                    continue
+                if not paged:
+                    # Lane-dense seq leaf: merge the chunk into the lane's
+                    # full row. A clamp-prone dynamic_update_slice would
+                    # smear a tail chunk backwards over committed rows, so
+                    # gather/where instead: row positions in
+                    # [start, start + chunk_valid) take the chunk's rows.
+                    idx = jnp.arange(max_seq)
+                    gidx = jnp.clip(idx - start, 0, chunk_pad - 1)
+                    moved = jnp.take(new, gidx, axis=j)
+                    keep = (idx >= start) & (idx < start + chunk_valid)
+                    keep = keep.reshape(
+                        (1,) * j + (max_seq,) + (1,) * (new.ndim - j - 1)
+                    )
+                    merged = jnp.where(keep, moved, view).astype(arr.dtype)
+                    out.append(jax.lax.dynamic_update_index_in_dim(
+                        arr, merged, lane, 0
+                    ))
+                    continue
+                # Pool leaf: the chunk's cb blocks scatter to the lane's
+                # table slots start//bs .. start//bs + cb - 1. The wrapper
+                # pads the sliced table row with cb ZERO_BLOCK columns, so
+                # this dynamic_slice can never clamp backwards; slots past
+                # the chunk's valid blocks are redirected to ZERO_BLOCK
+                # (dumped, then re-zeroed) instead of clobbering pool data.
+                shape = new.shape
+                split = new.reshape(*shape[:j], cb, bs, *shape[j + 1:])
+                ids = jax.lax.dynamic_slice(
+                    table_row[0], (start // bs,), (cb,)
+                )
+                nvb = -(-chunk_valid // bs)  # traced ceil-div
+                ids = jnp.where(jnp.arange(cb) < nvb, ids, ZERO_BLOCK)
+                pre = (slice(None),) * j
+                pool = arr.at[(*pre, ids)].set(split.astype(arr.dtype))
+                pool = pool.at[(*pre, ZERO_BLOCK)].set(
+                    jnp.zeros_like(pool[(*pre, ZERO_BLOCK)])
+                )
+                out.append(pool)
+            return logits, out
+
+        jitted = jax.jit(fused, donate_argnums=(0,))
+
+        def call(storage, table_row, tokens, lane, start, chunk_valid):
+            if paged:
+                row = np.asarray(table_row, np.int32).reshape(1, -1)
+                row = np.concatenate(
+                    [row, np.full((1, cb), ZERO_BLOCK, np.int32)], axis=1
+                )
+            else:
+                row = np.zeros((1, 1), np.int32)
+            return jitted(
+                storage, jnp.asarray(row), jnp.asarray(tokens, jnp.int32),
+                jnp.asarray(lane, jnp.int32), jnp.asarray(start, jnp.int32),
+                jnp.asarray(chunk_valid, jnp.int32),
+            )
+
+        call._jitted = jitted  # jit-cache probe for telemetry/accounting.py
+        return call
+
+    def dense_snapshot(self, lane: int) -> list[np.ndarray]:
+        """Host copies of a lane's dense (non-pooled) leaves — the carried
+        landmark/streaming prefill state of a lane being parked mid-chunked-
+        prefill (its pool blocks stay allocated; only the dense carry needs
+        saving because the lane's dense slots get reused)."""
+        return [
+            np.asarray(self._storage[idx][lane])
+            for idx, info in enumerate(self.infos)
+            if not (self.paged and info.seq_axis is not None)
+        ]
+
+    def dense_restore(self, lane: int, snap: list[np.ndarray]) -> None:
+        """Reinstall a ``dense_snapshot`` into ``lane`` (resume a parked
+        mid-prefill request at its completed-chunk boundary)."""
+        it = iter(snap)
+        for idx, info in enumerate(self.infos):
+            if self.paged and info.seq_axis is not None:
+                continue
+            self._storage[idx] = self._storage[idx].at[lane].set(
+                jnp.asarray(next(it))
+            )
 
     def make_rebase_step(self, vmapped_rebase):
         """Jitted frozen-mode boundary rebase (serve/decode_state.py):

@@ -65,9 +65,11 @@ from repro.serve.decode import (
     ss_decode_attention,
 )
 from repro.serve.decode_state import (
+    STREAM_LEAVES,
     landmark_counts,
     landmark_means,
     mask_stats_rows,
+    rebase_span,
     recompute_stats,
     segment_len,
 )
@@ -112,13 +114,16 @@ def _prefix_sums(oh: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
 def _attend_prefill(
     cfg: ModelConfig, impl: str, prefill_impl: str,
     q, k_b, v_b, q_sums, k_sums_b, scale, seq_max: int, t_mask,
-    n_valid=None, block_n: int = 512,
+    n_valid=None, block_n: int = 512, pos0=0,
 ):
     """Per-position attention over the prompt window.
 
-    q (B,H,n,d); k_b/v_b (B,H,n,d) kv-broadcast and pad-masked;
-    q_sums/k_sums_b (n,B,H,c,d) landmark prefixes; ``n_valid`` the true
-    prompt length (traced). Returns (B,H,n,dv)."""
+    q (B,H,n,d); k_b/v_b kv-broadcast and pad-masked keys/values — prompt-
+    window long for whole-prompt prefill, or an assembled prefix+chunk view
+    (longer than n) for chunked prefill; q_sums/k_sums_b (n,B,H,c,d)
+    landmark prefixes; ``n_valid`` the true prompt length (traced);
+    ``pos0`` (traced) offsets query positions so a chunk window attends at
+    its global positions. Returns (B,H,n,dv)."""
     n = q.shape[2]
     if prefill_impl == "ss_fused" and impl == "spectral_shift":
         from repro.core.attention import full_attention
@@ -143,7 +148,7 @@ def _attend_prefill(
             kv_valid=n_valid,
         )
     qs = jnp.moveaxis(q, 2, 0)[:, :, :, None, :]  # (n, B, H, 1, d)
-    pos_t = jnp.arange(n)
+    pos_t = pos0 + jnp.arange(n)
     if impl == "spectral_shift":
         def one(qt, qsum, ksum, pos):
             return ss_decode_attention(
@@ -388,6 +393,315 @@ def batched_prefill(
     new_cache["layers"] = new_layers
     new_cache["pos"] = jnp.asarray(n_valid, jnp.int32)
     return logits, new_cache
+
+
+# --------------------------------------------------------------------------
+# chunked prefill (continuous batching): one fixed-size prompt chunk per
+# call, carrying the landmark state across chunks
+# --------------------------------------------------------------------------
+def _insert_chunk(view, chunk, start, axis: int):
+    """Extend a committed-prefix cache view (seq ``axis``) by one chunk:
+    pad the view by the chunk length (so a tail chunk can never clamp the
+    dynamic write backwards into committed data), then write the chunk's
+    rows at global position ``start``."""
+    n = chunk.shape[axis]
+    pad = [(0, 0)] * view.ndim
+    pad[axis] = (0, n)
+    ext = jnp.pad(view.astype(chunk.dtype), pad)
+    idx = [0] * view.ndim
+    idx[axis] = start
+    return jax.lax.dynamic_update_slice(ext, chunk, tuple(idx))
+
+
+def _merge_chunk_stats(cfg: ModelConfig, stats_impl: str, carry, q_l, kb, vb,
+                       k_full_b, v_full_b, start, chunk_valid, scale,
+                       seq_max: int, block_n: int):
+    """Streaming-stat carry across prefill chunks for one layer.
+
+    ``carry`` = the lane's (bv_m, bv_l, bv_acc) leaves after the previous
+    chunk (the ``_seed_stream_stats`` state for prompt length ``start``);
+    ``q_l`` the landmark means at ``end = start + chunk_valid``; kb/vb the
+    chunk window's keys/values (head-broadcast, pad-masked); k_full_b /
+    v_full_b the assembled keys 0..end-1. Returns the state whole-prompt
+    seeding would produce for prompt length ``end`` (frozen rows up to
+    softmax reassociation):
+
+    * rows frozen before the chunk (r < start//seg — their landmark means
+      were already final) take the chunk window's partial, computed with
+      those final means, merged into the carry via ``flash_merge`` — the
+      ss_fused handoff streams the window through ``landmark_summary``;
+    * rows whose mean moved (or that were founded) inside the chunk —
+      the contiguous span start//seg..(end-1)//seg — are recomputed
+      exactly over the assembled view (``rebase_span``);
+    * rows past the active segment stay zero (the streaming invariant)."""
+    c = cfg.num_landmarks
+    if cfg.decode_attention_impl != "spectral_shift":
+        return tuple(jnp.zeros_like(s, jnp.float32) for s in carry)
+    seg = segment_len(seq_max, c)
+    chunk_pad = kb.shape[2]
+    end_pos = start + chunk_valid - 1
+    if stats_impl == "ss_fused" and chunk_pad > c:
+        from repro.kernels.ss_attention import landmark_summary
+
+        b, h, n, d = kb.shape
+        dv = vb.shape[-1]
+        bv, m_w, l_w = landmark_summary(
+            q_l.reshape(b * h, c, d),
+            kb.reshape(b * h, n, d),
+            vb.reshape(b * h, n, dv),
+            scale=scale, block_n=block_n, interpret=cfg.kernels_interpret,
+            return_stats=True, kv_valid=chunk_valid,
+        )
+        m_w = m_w.reshape(b, h, c, 1)
+        l_w = l_w.reshape(b, h, c, 1)
+        acc_w = bv.astype(jnp.float32).reshape(b, h, c, dv) * l_w
+    else:
+        m_w, l_w, acc_w = recompute_stats(q_l, kb, vb, chunk_valid - 1, scale)
+    from repro.kernels.ops import flash_merge
+
+    carry32 = tuple(s.astype(jnp.float32) for s in carry)
+    m_f, l_f, acc_f = flash_merge(*carry32, m_w, l_w, acc_w)
+    frozen = (jnp.arange(c) < start // seg)[:, None]
+    m = jnp.where(frozen, m_f, carry32[0])
+    l = jnp.where(frozen, l_f, carry32[1])
+    acc = jnp.where(frozen, acc_f, carry32[2])
+    row_lo = start // seg
+    row_hi = end_pos // seg
+    span = min(chunk_pad // seg + 2, c)
+    m, l, acc = rebase_span(
+        (m, l, acc), q_l, k_full_b, v_full_b, end_pos, scale,
+        row_lo, row_hi, span,
+    )
+    keep = jnp.arange(c) <= row_hi
+    return mask_stats_rows((m, l, acc), keep)
+
+
+def _gqa_chunk(p, cfg: ModelConfig, x, sin, cos, t_mask, oh, seq_max, impl,
+               stats_impl, start, chunk_valid, lcache, block_n):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhe->bhse", x, p["w_q"].astype(dt))
+    k = jnp.einsum("bsd,dhe->bhse", x, p["w_k"].astype(dt))
+    v = jnp.einsum("bsd,dhe->bhse", x, p["w_v"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["b_q"].astype(dt)[None, :, None, :]
+        k = k + p["b_k"].astype(dt)[None, :, None, :]
+        v = v + p["b_v"].astype(dt)[None, :, None, :]
+    if cfg.rope_theta > 0:
+        q = apply_rotary(q, sin, cos)
+        k = apply_rotary(k, sin, cos)
+
+    pad = t_mask[None, None, :, None]
+    k_m = jnp.where(pad, k, 0).astype(k.dtype)
+    v_m = jnp.where(pad, v, 0).astype(v.dtype)
+
+    # landmark prefixes continue the lane's running sums
+    q_sums = lcache["q_lmk"][None] + _prefix_sums(oh, q)
+    k_sums = lcache["k_lmk"][None] + _prefix_sums(oh, k_m)
+    kb = _broadcast_kv(k_m, cfg.num_heads)
+    vb = _broadcast_kv(v_m, cfg.num_heads)
+    k_sums_b = jax.vmap(_broadcast_kv, (0, None))(k_sums, cfg.num_heads)
+
+    # assembled keys 0..end-1: committed view + this chunk at [start, end)
+    k_full = _insert_chunk(lcache["k"], k_m, start, axis=2)
+    v_full = _insert_chunk(lcache["v"], v_m, start, axis=2)
+    kfb = _broadcast_kv(k_full, cfg.num_heads)
+    vfb = _broadcast_kv(v_full, cfg.num_heads)
+
+    scale = cfg.resolved_head_dim ** -0.5
+    out = _attend_prefill(
+        cfg, impl, "replay", q, kfb, vfb, q_sums, k_sums_b,
+        scale, seq_max, t_mask, chunk_valid, block_n, pos0=start,
+    )
+    c = cfg.num_landmarks
+    counts = landmark_counts(start + chunk_valid - 1, seq_max, c)
+    q_l = landmark_means(q_sums[-1], counts)
+    bv_m, bv_l, bv_acc = _merge_chunk_stats(
+        cfg, stats_impl, tuple(lcache[nm] for nm in STREAM_LEAVES),
+        q_l, kb, vb, kfb, vfb, start, chunk_valid, scale, seq_max, block_n,
+    )
+    new_cache = {
+        "k": k_m, "v": v_m,
+        "q_lmk": q_sums[-1].astype(jnp.float32),
+        "k_lmk": k_sums[-1].astype(jnp.float32),
+        "bv_m": bv_m, "bv_l": bv_l, "bv_acc": bv_acc,
+    }
+    attn = jnp.einsum("bhse,hed->bsd", out.astype(dt), p["w_o"].astype(dt))
+    return attn, new_cache
+
+
+def _mla_chunk(p, cfg: ModelConfig, x, sin, cos, t_mask, oh, seq_max, impl,
+               stats_impl, start, chunk_valid, lcache, block_n):
+    dt = x.dtype
+    dh, dr = cfg.resolved_head_dim, cfg.rope_head_dim
+    c_kv = rms_norm(x @ p["w_dkv"].astype(dt), p["norm_kv"], cfg.norm_eps)
+    k_rope = jnp.einsum("bsd,de->bse", x, p["w_k_rope"].astype(dt))[:, None]
+    k_rope = apply_rotary(k_rope, sin, cos)[:, 0]  # (B, n, dr)
+
+    q_nope = jnp.einsum("bsd,dhe->bhse", x, p["w_q_nope"].astype(dt))
+    q_rope = jnp.einsum("bsd,dhe->bhse", x, p["w_q_rope"].astype(dt))
+    q_rope = apply_rotary(q_rope, sin, cos)
+    q_abs = jnp.einsum("bhse,rhe->bhsr", q_nope, p["w_uk"].astype(dt))
+    q_eff = jnp.concatenate([q_abs, q_rope], axis=-1)
+
+    pad2 = t_mask[None, :, None]
+    c_kv_m = jnp.where(pad2, c_kv, 0).astype(c_kv.dtype)
+    k_rope_m = jnp.where(pad2, k_rope, 0).astype(k_rope.dtype)
+    k_eff = jnp.concatenate([c_kv_m, k_rope_m], axis=-1)
+
+    q_sums = lcache["q_lmk"][None] + _prefix_sums(oh, q_eff)
+    k_sums = (
+        lcache["k_lmk"][None] + _prefix_sums(oh, k_eff[:, None])[:, :, 0]
+    )
+
+    h = cfg.num_heads
+    k_eff_b = jnp.broadcast_to(
+        k_eff[:, None], (k_eff.shape[0], h, *k_eff.shape[1:])
+    )
+    lat_b = jnp.broadcast_to(
+        c_kv_m[:, None], (c_kv_m.shape[0], h, *c_kv_m.shape[1:])
+    )
+    lat_full = _insert_chunk(lcache["latent"], c_kv_m, start, axis=1)
+    rope_full = _insert_chunk(lcache["rope"], k_rope_m, start, axis=1)
+    k_eff_full = jnp.concatenate([lat_full, rope_full], axis=-1)
+    kfb = jnp.broadcast_to(
+        k_eff_full[:, None], (k_eff_full.shape[0], h, *k_eff_full.shape[1:])
+    )
+    vfb = jnp.broadcast_to(
+        lat_full[:, None], (lat_full.shape[0], h, *lat_full.shape[1:])
+    )
+    k_sums_b = jnp.broadcast_to(
+        k_sums[:, :, None], (*k_sums.shape[:2], h, *k_sums.shape[2:])
+    )
+    scale = (dh + dr) ** -0.5
+    out_lat = _attend_prefill(
+        cfg, impl, "replay", q_eff, kfb, vfb, q_sums, k_sums_b,
+        scale, seq_max, t_mask, chunk_valid, block_n, pos0=start,
+    )
+    out = jnp.einsum("bhsr,rhe->bhse", out_lat.astype(dt), p["w_uv"].astype(dt))
+    attn = jnp.einsum("bhse,hed->bsd", out, p["w_o"].astype(dt))
+    counts = landmark_counts(
+        start + chunk_valid - 1, seq_max, cfg.num_landmarks
+    )
+    q_l = landmark_means(q_sums[-1], counts)
+    bv_m, bv_l, bv_acc = _merge_chunk_stats(
+        cfg, stats_impl, tuple(lcache[nm] for nm in STREAM_LEAVES),
+        q_l, k_eff_b, lat_b, kfb, vfb, start, chunk_valid, scale, seq_max,
+        block_n,
+    )
+    new_cache = {
+        "latent": c_kv_m, "rope": k_rope_m,
+        "q_lmk": q_sums[-1].astype(jnp.float32),
+        "k_lmk": k_sums[-1].astype(jnp.float32),
+        "bv_m": bv_m, "bv_l": bv_l, "bv_acc": bv_acc,
+    }
+    return attn, new_cache
+
+
+def _dense_layer_chunk(lp, lc, cfg: ModelConfig, x, sin, cos, t_mask, oh,
+                       seq_max, impl, stats_impl, start, chunk_valid,
+                       block_n):
+    h = rms_norm(x, lp["norm_attn"], cfg.norm_eps)
+    fn = _mla_chunk if cfg.mla else _gqa_chunk
+    attn, new_cache = fn(
+        lp["attn"], cfg, h, sin, cos, t_mask, oh, seq_max, impl, stats_impl,
+        start, chunk_valid, lc, block_n,
+    )
+    x = x + attn
+    h = rms_norm(x, lp["norm_mlp"], cfg.norm_eps)
+    if cfg.moe:
+        ff, _ = moe_forward(lp["moe"], cfg, h)
+    else:
+        ff = mlp_forward(lp["mlp"], h, cfg.act)
+    return x + ff, new_cache
+
+
+def chunk_prefill(
+    params, cfg: ModelConfig, cache: Any, tokens: jnp.ndarray, start,
+    chunk_valid, *, seq_max: int, stats_impl: str = "replay",
+    block_n: int = 512,
+):
+    """Advance a mid-prefill lane by one fixed-size prompt chunk.
+
+    ``cache`` is the lane's B=1 assembled view (committed K/V for positions
+    < ``start``, plus the dense landmark/stream leaves carried from the
+    previous chunk); ``tokens`` (1, chunk_pad) the chunk window with
+    ``chunk_valid`` real tokens at global positions start..start+valid-1
+    (``start``/``chunk_valid`` traced). Returns ``(logits (1, chunk_pad, V),
+    new_cache)`` where seq leaves hold the CHUNK's K/V only (the caller
+    commits them at the chunk's blocks) and dense leaves the carried-forward
+    state; last-token logits live at ``chunk_valid - 1``.
+
+    Chunk attention is the exact per-position replay math at global
+    positions over the assembled view — token-identical to feeding the
+    prompt one token at a time, hence to whole-prompt ``replay`` prefill.
+    ``stats_impl`` only routes the streaming-stat window handoff
+    (``_merge_chunk_stats``): ``ss_fused`` streams each chunk window through
+    the ``landmark_summary`` kernel, ``replay`` uses the jnp recompute; the
+    resulting cache is the same up to softmax reassociation. (Whole-prompt
+    ``ss_fused`` *attention* is non-causal over the prompt and so cannot be
+    chunked; chunked mode upgrades it to the exact outputs instead.) MoE
+    caveat as whole-prompt: expert capacity is computed per chunk window,
+    so replay equivalence holds in the dropless regime."""
+    if not prefill_supported(cfg):
+        raise ValueError(f"chunked prefill unsupported for family {cfg.family}")
+    params = working_params(params, cfg)
+    dt = jnp.dtype(cfg.compute_dtype)
+    n = tokens.shape[1]
+    start = jnp.asarray(start, jnp.int32)
+    chunk_valid = jnp.asarray(chunk_valid, jnp.int32)
+    x = _embed_tokens(params, cfg, tokens).astype(dt)
+    impl = cfg.decode_attention_impl
+
+    c = cfg.num_landmarks
+    t = jnp.arange(n)
+    t_mask = t < chunk_valid
+    seg_idx = (start + t) // _segment_len(seq_max, c)
+    oh = jax.nn.one_hot(seg_idx, c, dtype=jnp.float32) * t_mask[:, None]
+    positions = (start + t)[None]  # (1, n) global positions
+    rope_dim = cfg.rope_head_dim if cfg.mla else cfg.resolved_head_dim
+    sin, cos = rotary_angles(positions, rope_dim, cfg.rope_theta)
+    sin, cos = sin[:, None], cos[:, None]
+
+    layer_fn = functools.partial(
+        _dense_layer_chunk, cfg=cfg, sin=sin, cos=cos, t_mask=t_mask, oh=oh,
+        seq_max=seq_max, impl=impl, stats_impl=stats_impl, start=start,
+        chunk_valid=chunk_valid, block_n=block_n,
+    )
+    if cfg.scan_layers and not isinstance(params["layers"], list):
+        def body(y, lp_lc):
+            lp, lc = lp_lc
+            y, nc = layer_fn(lp, lc, x=y)
+            return y, nc
+
+        x, new_layers = jax.lax.scan(
+            body, x, (params["layers"], cache["layers"])
+        )
+    else:
+        new_layers = []
+        for lp, lc in zip(params["layers"], cache["layers"]):
+            x, nc = layer_fn(lp, lc, x=x)
+            new_layers.append(nc)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(params, cfg, x)
+    new_cache = dict(_zero_cache(cfg, n))
+    new_cache["layers"] = new_layers
+    new_cache["pos"] = jnp.asarray(start + chunk_valid, jnp.int32)
+    return logits, new_cache
+
+
+def make_chunk_prefill_fn(params, cfg: ModelConfig, *, seq_max: int,
+                          stats_impl: str = "replay", block_n: int = 512):
+    """Chunk-prefill closure ``fn(cache, tokens, start, chunk_valid)`` for
+    ``PagedKVCache.make_chunk_step`` (which jits the fused gather ->
+    chunk -> commit program; one XLA program per bucketed view length)."""
+    def fn(cache, tokens, start, chunk_valid):
+        return chunk_prefill(
+            params, cfg, cache, tokens, start, chunk_valid,
+            seq_max=seq_max, stats_impl=stats_impl, block_n=block_n,
+        )
+
+    return fn
 
 
 def make_prefill_fn(params, cfg: ModelConfig, *, seq_max: int,

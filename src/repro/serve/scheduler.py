@@ -1,18 +1,34 @@
-"""Two-phase (prefill/decode) request scheduler over the block pool.
+"""Request scheduler over the block pool: two-phase FCFS, or chunk-aware
+continuous batching when the engine passes ``chunk_tokens > 0``.
 
 Policy — deliberately simple and predictable:
 
 * FCFS waiting queue. A request is admitted when a lane is free AND the
-  allocator can cover its whole prompt (``ceil(prompt_len / block_size)``
-  blocks). Decode growth allocates one block at a time, on demand.
+  allocator can cover its admission need: the whole prompt
+  (``ceil(prompt_len / block_size)`` blocks) in two-phase mode, or just the
+  FIRST CHUNK in chunked mode (later chunks grow on demand via
+  ``ensure_prefill_blocks``, which never preempts — a starved chunk stalls
+  a tick instead of evicting a decoding lane). Decode growth allocates one
+  block at a time, on demand.
 * When decode growth finds the pool empty, the scheduler preempts the
   YOUNGEST running request (latest admission): its blocks are freed and the
   request goes back to the FRONT of the waiting queue, restarting from
   scratch on re-admission (recompute, vLLM's default). The pool is sized so
   one lane can always hold a full sequence, so a lone request never
   self-preempts forever.
+* Chunked-prefill exception to recompute: when the engine installs a
+  ``park_cb``, a victim caught mid-chunked-prefill is PARKED instead — its
+  blocks (holding already-committed chunks) stay allocated, the engine
+  snapshots the lane's carried dense state, and re-admission resumes at the
+  completed-chunk boundary. Parked blocks are the first thing reclaimed
+  (oldest first, dropping the resume state back to full recompute) when the
+  pool runs dry, so parking never deadlocks decode growth.
 * Per-request latency/throughput counters (arrival, admission, first token,
-  finish, preemption count) are aggregated for ``engine.stats()``.
+  finish, preemption count) are aggregated for ``engine.stats()``. A
+  preempted-then-resumed request's first post-resume token is recorded in
+  its own ``serve_resume_ttft_seconds`` histogram — not in TTFT (the user
+  already saw tokens, or the wait was requeue-induced) and not in ITL (the
+  gap measures scheduler pressure, not steady-state token cadence).
 
 The scheduler owns host-side bookkeeping only — block tables live in the
 ``BlockAllocator``; device storage belongs to ``PagedKVCache``; the engine
@@ -46,6 +62,9 @@ class RequestTiming:
     # wall-clock stamps (perf_counter seconds) for the latency histograms
     arrived_s: Optional[float] = None
     last_token_s: Optional[float] = None
+    # set on preemption, cleared by the first post-resume token (which lands
+    # in the resume_ttft histogram instead of ttft/itl)
+    requeued_s: Optional[float] = None
 
     @property
     def ttft(self) -> Optional[int]:
@@ -58,11 +77,23 @@ class Scheduler:
     def __init__(self, allocator: Optional[BlockAllocator], max_lanes: int,
                  blocks_per_lane: int,
                  registry: Optional[MetricsRegistry] = None,
-                 flight=None):
+                 flight=None, chunk_tokens: int = 0):
         self.allocator = allocator  # None => model has no paged state
         self.max_lanes = max_lanes
         self.blocks_per_lane = blocks_per_lane
+        # chunked-prefill admission: > 0 means a request only needs its
+        # first chunk's blocks to get a lane (continuous batching)
+        self.chunk_tokens = chunk_tokens
         self.waiting: deque = deque()
+        # uids preempted mid-chunked-prefill whose blocks stay allocated
+        # (insertion-ordered: oldest parked is reclaimed first)
+        self.parked: dict[int, int] = {}
+        # set by the engine: park_cb(lane) -> bool snapshots a mid-prefill
+        # lane's carried state (True = parked, keep its blocks);
+        # park_drop_cb(uid) discards a snapshot when its blocks are
+        # reclaimed (the request falls back to full recompute)
+        self.park_cb = None
+        self.park_drop_cb = None
         # Per-request flight recorder (PR 7): the scheduler stamps the
         # queue-side lifecycle events (submit/admit/preempt/requeue/finish);
         # the engine stamps the compute-side ones (prefill/decode/rebase).
@@ -105,6 +136,11 @@ class Scheduler:
             buckets=LATENCY_BUCKETS)
         self._itl_s = r.histogram(
             "serve_itl_seconds", help="wall seconds between consecutive tokens of one request",
+            buckets=LATENCY_BUCKETS)
+        self._resume_ttft_s = r.histogram(
+            "serve_resume_ttft_seconds",
+            help="wall seconds from requeue to the first post-resume token "
+                 "(kept out of both ttft and itl)",
             buckets=LATENCY_BUCKETS)
 
     # Aggregate counters as attributes, for backward compatibility.
@@ -151,7 +187,14 @@ class Scheduler:
     def _blocks_for_prompt(self, req) -> int:
         if self.allocator is None:
             return 0
-        return self.allocator.blocks_for_tokens(max(len(req.prompt), 1))
+        if req.uid in self.parked:
+            return 0  # resume: its committed-chunk blocks are still held
+        n = max(len(req.prompt), 1)
+        if self.chunk_tokens > 0:
+            # chunked admission only needs the first chunk resident; later
+            # chunks grow via ensure_prefill_blocks
+            n = min(n, self.chunk_tokens)
+        return self.allocator.blocks_for_tokens(n)
 
     def admit(self) -> list[tuple[int, object]]:
         """Admit FCFS while lanes and blocks allow. Returns [(lane, req)]."""
@@ -164,7 +207,9 @@ class Scheduler:
             if self.allocator is not None:
                 if not self.allocator.can_alloc(need):
                     break  # FCFS: don't let short requests starve the head
-                self.allocator.alloc(req.uid, need)
+                if need:
+                    self.allocator.alloc(req.uid, need)
+            self.parked.pop(req.uid, None)
             self.waiting.popleft()
             self.lane_uid[lane] = req.uid
             self.admit_order[req.uid] = self.tick_now
@@ -191,6 +236,8 @@ class Scheduler:
             if self.allocator.alloc(uid, 1) is not None:
                 have += 1
                 continue
+            if self.reclaim_parked():
+                continue  # freed a parked request's blocks; retry alloc
             victim = self._youngest_lane()
             if victim is None:
                 # Defensive: unreachable while this lane holds a uid (it is
@@ -201,6 +248,42 @@ class Scheduler:
             self.preempt(victim)
             if victim == lane:
                 return False
+            # A parked victim freed nothing (it keeps its blocks) — the
+            # next iteration's reclaim_parked() takes them, so the loop
+            # still makes progress every pass.
+        return True
+
+    def ensure_prefill_blocks(self, lane: int, n_tokens: int) -> bool:
+        """Grow ``lane``'s table to cover ``n_tokens`` prompt tokens for the
+        next prefill chunk. NEVER preempts (decode lanes must not die for a
+        prompt — the starvation invariant); reclaims parked blocks, then
+        stalls (returns False) so the chunk retries next tick once decode
+        retirements free blocks."""
+        uid = self.lane_uid[lane]
+        if self.allocator is None or uid is None:
+            return True
+        need = self.allocator.blocks_for_tokens(n_tokens)
+        while len(self.allocator.tables.get(uid, [])) < need:
+            short = need - len(self.allocator.tables.get(uid, []))
+            if self.allocator.alloc(uid, short) is not None:
+                return True
+            if not self.reclaim_parked():
+                return False
+        return True
+
+    def reclaim_parked(self) -> bool:
+        """Free the OLDEST parked request's blocks (its resume snapshot is
+        dropped — full recompute on re-admission). Returns True if blocks
+        were reclaimed. Parked implies >= 1 committed chunk, hence >= 1
+        block, so a True return always frees something."""
+        if not self.parked:
+            return False
+        uid = next(iter(self.parked))
+        del self.parked[uid]
+        self.allocator.free(uid)
+        if self.park_drop_cb is not None:
+            self.park_drop_cb(uid)
+        self.flight.record(uid, "park_drop", tick=self.tick_now)
         return True
 
     def _youngest_lane(self) -> Optional[int]:
@@ -214,13 +297,20 @@ class Scheduler:
         return max(running)[1]
 
     def preempt(self, lane: int) -> None:
-        """Free a lane's blocks and requeue its request at the queue front.
-        The engine's ``requeue_cb`` clears the lane and hands back the
-        Request object (the scheduler never holds it)."""
+        """Evict a lane and requeue its request at the queue front. The
+        engine's ``requeue_cb`` clears the lane and hands back the Request
+        object (the scheduler never holds it). If the engine's ``park_cb``
+        claims the lane (mid-chunked-prefill with committed chunks), the
+        blocks stay allocated and re-admission resumes at the completed-
+        chunk boundary; otherwise blocks are freed and re-admission
+        recomputes from scratch."""
         uid = self.lane_uid[lane]
         if uid is None:
             return
-        if self.allocator is not None:
+        parked = bool(self.park_cb(lane)) if self.park_cb is not None else False
+        if parked:
+            self.parked[uid] = self.tick_now
+        elif self.allocator is not None:
             self.allocator.free(uid)
         self.lane_uid[lane] = None
         self.admit_order.pop(uid, None)
@@ -231,8 +321,10 @@ class Scheduler:
         # user did see it.
         t.new_tokens = 0
         t.last_token_s = None  # decode restarts; don't count the gap as ITL
-        self._preempted.inc()
-        self.flight.record(uid, "preempt", lane=lane, tick=self.tick_now)
+        t.requeued_s = time.perf_counter()  # first post-resume token ->
+        self._preempted.inc()               # resume_ttft, not ttft/itl
+        self.flight.record(uid, "preempt", lane=lane, tick=self.tick_now,
+                           parked=parked)
         req = self.requeue_cb(lane) if self.requeue_cb else None
         if req is not None:
             self.waiting.appendleft(req)
@@ -259,7 +351,16 @@ class Scheduler:
     def note_token(self, uid: int) -> None:
         t = self.timing[uid]
         now = time.perf_counter()
-        if t.first_token < 0:
+        if t.requeued_s is not None:
+            # First post-resume token: requeue-induced latency goes to its
+            # own histogram so neither ttft (request may have streamed
+            # tokens pre-preemption) nor itl (this gap is scheduler
+            # pressure, not token cadence) is polluted.
+            self._resume_ttft_s.observe(now - t.requeued_s)
+            t.requeued_s = None
+            if t.first_token < 0:
+                t.first_token = self.tick_now
+        elif t.first_token < 0:
             t.first_token = self.tick_now
             self._ttft_ticks.observe(t.first_token - t.arrived)
             if t.arrived_s is not None:
@@ -299,6 +400,9 @@ class Scheduler:
             "ttft_s_p99": self._ttft_s.percentile(99),
             "itl_s_p50": self._itl_s.percentile(50),
             "itl_s_p99": self._itl_s.percentile(99),
+            "resume_ttft_s_p50": self._resume_ttft_s.percentile(50),
+            "resume_ttft_s_p99": self._resume_ttft_s.percentile(99),
+            "parked": len(self.parked),
         }
         if self.allocator is not None:
             out["kv"] = self.allocator.stats()

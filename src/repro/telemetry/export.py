@@ -8,9 +8,12 @@ event stores onto a single timeline:
   admit / prefill / decode_dispatch / device_sync / sample_emit spans;
 * the flight recorder's per-request lifelines (``telemetry.flight``) as
   one thread track per request: an enveloping ``request`` slice from
-  submit to finish, with ``queued`` / ``prefill`` / ``decode`` slices
-  nested inside and instant markers for preempt / requeue / rebase /
-  finish;
+  submit to finish, with ``queued`` / ``prefill`` / ``prefill_chunk`` /
+  ``decode`` slices nested inside and instant markers for preempt /
+  requeue / rebase / finish. In continuous-batching mode the interleaving
+  is the diagnosis view: ``prefill_chunk`` runs on one request track
+  overlap ``decode`` runs on the others, and a gap between chunk runs is
+  a budget stall or a park;
 * flight counter samples (pool occupancy, fragmentation, queue depth) as
   Perfetto counter tracks.
 
@@ -114,6 +117,15 @@ def _lifeline_events(line, out) -> None:
             open_args = {"bucket": ev.get("bucket")}
         elif kind == "prefill_end":
             close(t, {"bucket": ev.get("bucket")})
+        elif kind == "prefill_chunk":
+            close(t)
+            t1 = ev.get("t1", ev["t"]) * _US
+            slices.append(("prefill_chunk", t, max(t1, t),
+                           {"tick0": ev.get("tick0"), "tick1": ev.get("tick1"),
+                            "chunk0": ev.get("chunk0"),
+                            "chunk1": ev.get("chunk1"),
+                            "tok0": ev.get("tok0"), "tok1": ev.get("tok1"),
+                            "lane": ev.get("lane"), "chunks": ev.get("n")}))
         elif kind == "decode":
             close(t)
             t1 = ev.get("t1", ev["t"]) * _US
@@ -123,7 +135,10 @@ def _lifeline_events(line, out) -> None:
                             "ticks": ev.get("n")}))
         elif kind == "preempt":
             close(t)
-            instants.append(("preempt", t, {"lane": ev.get("lane")}))
+            instants.append(("preempt", t, {"lane": ev.get("lane"),
+                                            "parked": ev.get("parked")}))
+        elif kind == "park_drop":
+            instants.append(("park_drop", t, None))
         elif kind == "requeue":
             close(t)
             open_name, open_t0, open_args = "queued", t, {"requeue": True}

@@ -10,6 +10,12 @@ small, bounded record of every lifecycle event of each request —
     prefill_start / prefill_end
                     batched prefill with its padding bucket — the shape
                     that decides which XLA program ran
+    prefill_chunk   one continuous-batching prompt chunk (chunk index +
+                    token range). Chunks of consecutive ticks AND
+                    consecutive chunk indices coalesce into one run
+                    ({tick0..tick1, chunk0..chunk1, tok0..tok1}) exactly
+                    like decode runs — a run break marks a budget stall,
+                    a park, or a decode-tick gap
     decode          per-tick decode membership. Consecutive ticks coalesce
                     into one run ({tick0..tick1, pos0..pos1}) at record
                     time, so steady decode costs O(1) memory per request
@@ -114,6 +120,18 @@ class FlightRecorder:
                 last["n"] = last.get("n", 1) + 1
                 self._events_total.inc()
                 return
+        if kind == "prefill_chunk" and line.events:
+            last = line.events[-1]
+            if (last["kind"] == "prefill_chunk"
+                    and last.get("tick1") == data.get("tick", -2) - 1
+                    and last.get("chunk1") == data.get("chunk", -2) - 1):
+                last["tick1"] = data["tick"]
+                last["chunk1"] = data["chunk"]
+                last["tok1"] = data.get("tok1", last.get("tok1"))
+                last["t1"] = t
+                last["n"] = last.get("n", 1) + 1
+                self._events_total.inc()
+                return
         if len(line.events) >= self.max_events:
             line.dropped += 1
             self._dropped.inc()
@@ -124,6 +142,13 @@ class FlightRecorder:
                 tick0=data.get("tick"), tick1=data.get("tick"),
                 pos0=data.get("pos"), pos1=data.get("pos"),
                 t1=round(t, 9), n=1,
+            )
+        elif kind == "prefill_chunk":
+            ev.update(
+                tick0=data.get("tick"), tick1=data.get("tick"),
+                chunk0=data.get("chunk"), chunk1=data.get("chunk"),
+                tok0=data.get("tok0"), tok1=data.get("tok1"),
+                lane=data.get("lane"), t1=round(t, 9), n=1,
             )
         elif data:
             ev.update(data)

@@ -1,0 +1,251 @@
+"""Continuous batching: chunked prefill riding the decode tick.
+
+The load-bearing contract is TOKEN IDENTITY: splitting a prompt into
+fixed-size chunks — committed across many ticks, with landmark prefix sums
+and online-softmax stream stats carried chunk to chunk — must produce
+exactly the greedy tokens of the whole-prompt two-phase engine (and of the
+original token-replay engine). On top of that: preemption parks a
+mid-prefill lane and resumes at the completed-chunk boundary without
+changing outputs, decode lanes never starve under a long-prompt flood,
+resume latency lands in its own histogram, Poisson traces replay
+deterministically, and the flight recorder coalesces chunk runs into
+valid Perfetto traces.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ServeConfig, reduced
+from repro.configs.registry import get_config
+from repro.models.model import model_specs
+from repro.models.params import init_params
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.paged import BlockAllocator
+from repro.serve.scheduler import Scheduler
+from repro.serve.workload import latency_metrics, poisson_trace, replay_trace
+from repro.telemetry.export import chrome_trace, validate_trace
+
+# prompt lengths exercise every divisibility case: 37 and 9 are not
+# block-multiples, 24 divides chunk 8 but not 24, 50 divides neither
+PROMPT_LENS = (37, 9, 24, 50)
+MAX_NEW = 6
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = dataclasses.replace(
+        reduced(get_config("qwen2-7b")), capacity_factor=100.0
+    )
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompts(cfg, lens=PROMPT_LENS, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(3, cfg.vocab_size, int(p)).tolist() for p in lens]
+
+
+def _outputs(cfg, params, serve, prompts, max_new=MAX_NEW):
+    eng = ServeEngine(cfg, params, serve=serve)
+    for u, p in enumerate(prompts):
+        eng.submit(Request(u, list(p), max_new_tokens=max_new))
+    return dict(eng.run()), eng
+
+
+def _base(**kw):
+    return ServeConfig(
+        max_lanes=2, max_seq=64, block_size=8,
+        paged=True, batched_prefill=True, **kw,
+    )
+
+
+# ==========================================================================
+# Token identity: chunked == whole-prompt two-phase == token replay
+# ==========================================================================
+class TestChunkedIdentity:
+    @pytest.fixture(scope="class")
+    def two_phase(self, qwen):
+        cfg, params = qwen
+        prompts = _prompts(cfg)
+        return {
+            paged: _outputs(cfg, params, dataclasses.replace(
+                _base(), paged=paged), prompts)[0]
+            for paged in (True, False)
+        }
+
+    @pytest.mark.parametrize("paged", [True, False])
+    @pytest.mark.parametrize("chunk", [8, 24])
+    def test_matches_two_phase(self, qwen, two_phase, paged, chunk):
+        cfg, params = qwen
+        out, eng = _outputs(cfg, params, dataclasses.replace(
+            _base(), paged=paged,
+            chunked_prefill=True, prefill_chunk_tokens=chunk,
+        ), _prompts(cfg))
+        assert "chunked-prefill" in eng.stats()["mode"]
+        assert out == two_phase[paged]
+
+    def test_matches_token_replay(self, qwen):
+        cfg, params = qwen
+        prompts = _prompts(cfg)
+        replay, _ = _outputs(cfg, params, dataclasses.replace(
+            _base(), paged=False, batched_prefill=False), prompts)
+        chunked, _ = _outputs(cfg, params, dataclasses.replace(
+            _base(), chunked_prefill=True, prefill_chunk_tokens=16), prompts)
+        assert chunked == replay
+
+    def test_ss_fused_stats_handoff(self, qwen, two_phase):
+        """Chunk attention is always exact replay math; ``prefill_impl``
+        only routes the STATS handoff. With the fused landmark-summary
+        path feeding the carry, greedy tokens must still match the exact
+        two-phase baseline (stats agree to float tolerance; argmax is
+        identical)."""
+        cfg, params = qwen
+        chunked, _ = _outputs(cfg, params, dataclasses.replace(
+            _base(), prefill_impl="ss_fused",
+            chunked_prefill=True, prefill_chunk_tokens=16), _prompts(cfg))
+        assert chunked == two_phase[True]
+
+    def test_chunked_requires_batched_prefill(self):
+        with pytest.raises(ValueError):
+            ServeConfig(max_lanes=1, max_seq=64, block_size=8, paged=False,
+                        batched_prefill=False, chunked_prefill=True)
+
+
+# ==========================================================================
+# Preemption at chunk boundaries + parking
+# ==========================================================================
+class TestChunkedPreemption:
+    def test_tight_pool_outputs_identical(self, qwen):
+        """Under a pool too small for all four requests, preemption (with
+        mid-prefill parking + chunk-boundary resume) must not change a
+        single output token vs the uncontended two-phase run."""
+        cfg, params = qwen
+        prompts = _prompts(cfg, lens=(40, 48, 30, 20), seed=1)
+        tight = dataclasses.replace(
+            _base(), chunked_prefill=True, prefill_chunk_tokens=8,
+            num_blocks=12,
+        )
+        out, eng = _outputs(cfg, params, tight, prompts, max_new=10)
+        st = eng.stats()
+        assert st["preemptions"] >= 1
+        assert st["resume_ttft_s_p50"] is not None
+        ref, _ = _outputs(cfg, params, _base(), prompts, max_new=10)
+        assert out == ref
+
+    def test_resume_ttft_histogram_routing(self):
+        """The first post-resume token lands in serve_resume_ttft_seconds —
+        never in ttft (already observed) and never in itl (the gap is
+        scheduler pressure, not cadence)."""
+        alloc = BlockAllocator(17, 8)
+        sched = Scheduler(alloc, max_lanes=1, blocks_per_lane=8)
+        req = Request(0, list(range(10)), max_new_tokens=4)
+        sched.requeue_cb = lambda lane: req
+        sched.submit(req)
+        assert sched.admit()
+        sched.note_token(0)
+        assert sched._ttft_s.count == 1
+        sched.preempt(0)
+        assert sched.timing[0].requeued_s is not None
+        assert sched.admit()
+        sched.note_token(0)  # first post-resume token
+        assert sched._resume_ttft_s.count == 1
+        assert sched._ttft_s.count == 1  # unchanged
+        assert sched._itl_s.count == 0
+        assert sched.timing[0].requeued_s is None
+        sched.note_token(0)  # steady cadence resumes
+        assert sched._itl_s.count == 1
+        assert sched._resume_ttft_s.count == 1
+
+
+# ==========================================================================
+# Starvation invariant: decode lanes survive a long-prompt flood
+# ==========================================================================
+class TestDecodeNeverStarves:
+    def test_tick_gap_is_one_under_flood(self, qwen):
+        cfg, params = qwen
+        rng = np.random.default_rng(3)
+        serve = ServeConfig(
+            max_lanes=2, max_seq=96, block_size=8, paged=True,
+            batched_prefill=True, chunked_prefill=True,
+            prefill_chunk_tokens=8, prefill_token_budget=8,
+        )
+        eng = ServeEngine(cfg, params, serve=serve)
+        ticks: dict[int, list[int]] = {}
+
+        def on_tok(uid, tok):
+            ticks.setdefault(uid, []).append(eng._tick)
+
+        eng.submit(Request(0, rng.integers(3, cfg.vocab_size, 8).tolist(),
+                           max_new_tokens=30, on_token=on_tok))
+        for _ in range(3):
+            eng.tick()
+        for u in range(1, 4):  # flood: long prompts chunk in behind it
+            eng.submit(Request(
+                u, rng.integers(3, cfg.vocab_size, 80).tolist(),
+                max_new_tokens=4, on_token=on_tok))
+        eng.run()
+        gaps = np.diff(ticks[0])
+        assert len(ticks[0]) == 30
+        assert int(gaps.max()) == 1
+
+
+# ==========================================================================
+# Deterministic Poisson workload replay
+# ==========================================================================
+class TestPoissonReplay:
+    def test_trace_is_seed_deterministic(self):
+        kw = dict(n_requests=10, mean_interarrival_ticks=2.0,
+                  prompt_lens=(8, 40), vocab_size=1000)
+        assert poisson_trace(seed=5, **kw) == poisson_trace(seed=5, **kw)
+        assert poisson_trace(seed=5, **kw) != poisson_trace(seed=6, **kw)
+
+    def test_replay_outputs_identical(self, qwen):
+        cfg, params = qwen
+        trace = poisson_trace(
+            seed=11, n_requests=6, mean_interarrival_ticks=2.0,
+            prompt_lens=(8, 40), vocab_size=cfg.vocab_size,
+            max_new_tokens=5,
+        )
+        serve = dataclasses.replace(
+            _base(), chunked_prefill=True, prefill_chunk_tokens=8)
+        outs = []
+        for _ in range(2):
+            eng = ServeEngine(cfg, params, serve=serve)
+            stamps = replay_trace(eng, trace)
+            outs.append(dict(eng.finished))
+            m = latency_metrics(stamps)
+            assert m["n_requests"] == 6
+            assert m["itl_p99_s"] is not None
+        assert outs[0] == outs[1]
+        assert sorted(outs[0]) == [it.uid for it in trace]
+
+
+# ==========================================================================
+# Flight lifelines + Perfetto export for chunk runs
+# ==========================================================================
+class TestChunkFlightTrace:
+    def test_chunk_runs_coalesce_and_trace_validates(self, qwen):
+        cfg, params = qwen
+        serve = dataclasses.replace(
+            _base(), max_lanes=1, chunked_prefill=True,
+            prefill_chunk_tokens=8, telemetry=True,
+        )
+        out, eng = _outputs(cfg, params, serve, _prompts(cfg, lens=(40,)),
+                            max_new=4)
+        line = eng.telemetry.flight.lifeline(0)
+        kinds = line.kinds()
+        assert kinds == ["submit", "admit", "prefill_chunk", "decode",
+                         "finish"]
+        run = next(e for e in line.events if e["kind"] == "prefill_chunk")
+        # 5 consecutive-tick chunks of 8 tokens coalesced into ONE run
+        assert (run["n"], run["chunk0"], run["chunk1"]) == (5, 0, 4)
+        assert (run["tok0"], run["tok1"]) == (0, 40)
+        assert run["tick1"] == run["tick0"] + 4
+        trace = chrome_trace(eng.telemetry)
+        assert validate_trace(trace) == []
+        names = {e["name"] for e in trace["traceEvents"] if e["ph"] == "B"}
+        assert "prefill_chunk" in names
