@@ -24,6 +24,13 @@ from per-token wall stamps. The chunked replay also exports a Perfetto
 trace (``REPRO_TRACE_JSON`` overrides the path) showing chunk lifelines
 riding the decode ticks — CI uploads it too.
 
+The prefix-cache cell contrasts cold vs warm TTFT on an identical
+256-token prompt (``ServeConfig.prefix_cache=True``: the warm request
+full-hits the content-hash index and takes its first token from cached
+logits with zero prefill compute) and sweeps a seeded shared-prefix
+request stream for the hit rate; warm outputs are asserted
+greedy-identical to cold in-line.
+
     PYTHONPATH=src python -m benchmarks.run --only serve
     REPRO_BENCH_SMOKE=1 ... (one prompt length, fewer reps, for CI)
 """
@@ -214,6 +221,83 @@ def _poisson_cell(cfg, params, csv_rows: list[str], trace_path: str) -> None:
           f"{results['chunked']['itl_p99_s']:.4f}s ({speedup:.2f}x)")
 
 
+def _prefix_cell(cfg, params, csv_rows: list[str]) -> None:
+    """Shared-prefix caching: cold vs warm TTFT on an identical 256-token
+    prompt (full hit: the warm request's first token comes straight from
+    the cached logits, zero prefill compute) plus a hit-rate sweep over a
+    seeded request stream drawn from a small set of shared prefixes.
+
+    Warm outputs are asserted greedy-identical to cold in-line — a fast
+    warm TTFT that changed the tokens would be a broken cache, not a win.
+    Runs in smoke too: the cold/warm contrast is the point, not the reps."""
+    plen = 256
+    reps = 1 if _smoke() else 3
+    serve = dataclasses.replace(
+        _serve_cfg(True, 2), prefix_cache=True, prefill_chunk_tokens=64)
+    rng = np.random.default_rng(5)
+    eng = ServeEngine(cfg, params, serve=serve)
+    # throwaway cold+warm pair compiles every program (chunk steps, decode
+    # ticks, attach) before anything is timed
+    warmup = rng.integers(3, cfg.vocab_size, plen).tolist()
+    eng.submit(Request(900, warmup, max_new_tokens=MAX_NEW))
+    eng.run()
+    eng.submit(Request(901, list(warmup), max_new_tokens=MAX_NEW))
+    eng.run()
+
+    def ttft(uid, prompt) -> float:
+        eng.submit(Request(uid, list(prompt), max_new_tokens=MAX_NEW))
+        ticks, t0 = 0, time.perf_counter()
+        while eng.sched.timing[uid].first_token < 0:
+            eng.tick()
+            ticks += 1
+            if ticks > 10 * plen:
+                break
+        sec = time.perf_counter() - t0
+        eng.run()  # drain
+        return sec
+
+    best_cold = best_warm = float("inf")
+    for rep in range(reps):
+        prompt = rng.integers(3, cfg.vocab_size, plen).tolist()
+        best_cold = min(best_cold, ttft(2000 + rep, prompt))   # miss: prefill
+        best_warm = min(best_warm, ttft(3000 + rep, prompt))   # full hit
+        assert eng.finished[2000 + rep] == eng.finished[3000 + rep], \
+            "warm output diverged from cold — prefix cache is broken"
+    speedup = best_cold / max(best_warm, 1e-9)
+    cell = f"paged|prefix|prompt{plen}"
+    _record(cell, "ttft_cold_s", best_cold)
+    _record(cell, "ttft_warm_s", best_warm)
+    _record(cell, "ttft_warm_speedup", speedup)
+    csv_rows.append(f"serve,prefix{plen},ttft_cold_s,{best_cold:.4f}")
+    csv_rows.append(f"serve,prefix{plen},ttft_warm_s,{best_warm:.4f}")
+    csv_rows.append(f"serve,prefix{plen},ttft_warm_speedup,{speedup:.1f}")
+    print(f"[bench_serve] prefix cache: cold={best_cold:.4f}s "
+          f"warm={best_warm:.4f}s ({speedup:.1f}x)")
+
+    # hit-rate sweep: 3 shared 128-token prefixes, distinct 32-token tails,
+    # served sequentially — the first request per prefix misses and caches,
+    # the rest partial-hit. Deterministic stream -> deterministic rate.
+    eng2 = ServeEngine(cfg, params, serve=serve)
+    per_prefix = 2 if _smoke() else 3
+    uid = 0
+    srng = np.random.default_rng(6)
+    for prefix in [srng.integers(3, cfg.vocab_size, 128).tolist()
+                   for _ in range(3)]:
+        for _ in range(per_prefix):
+            tail = srng.integers(3, cfg.vocab_size, 32).tolist()
+            eng2.submit(Request(uid, prefix + tail, max_new_tokens=MAX_NEW))
+            eng2.run()
+            uid += 1
+    pst = eng2.stats()["prefix"]
+    rate = pst["hits"] / max(pst["hits"] + pst["misses"], 1)
+    _record("paged|prefix|sweep", "prefix_hit_rate", rate)
+    _record("paged|prefix|sweep", "ttft_warm_s_p50",
+            eng2.stats()["ttft_warm_s_p50"])
+    csv_rows.append(f"serve,prefix_sweep,prefix_hit_rate,{rate:.3f}")
+    print(f"[bench_serve] prefix sweep: hit rate {rate:.2f} "
+          f"({pst['hits']}/{pst['hits'] + pst['misses']})")
+
+
 def write_json() -> None:
     from benchmarks.run import write_bench  # lazy: avoids an import cycle
 
@@ -275,6 +359,7 @@ def run(csv_rows: list[str]) -> None:
         cfg, params, csv_rows,
         trace_path=os.environ.get("REPRO_TRACE_JSON", TRACE_PATH),
     )
+    _prefix_cell(cfg, params, csv_rows)
     write_json()
 
 

@@ -24,7 +24,10 @@ Tolerance policy (see ``metric_policy``): metrics are classified by name —
   -runner noise doesn't) plus absolute slack for sub-millisecond values;
 * throughput (``*per_s*``) is higher-better, same relative band;
 * error/drift metrics are lower-better, ±10% — they're deterministic
-  modulo seeding, so a band this tight catches real approximation changes.
+  modulo seeding, so a band this tight catches real approximation changes;
+* prefix-cache metrics: ``ttft_warm_*`` is wall-clock lower-better (the
+  cached-hit latency contract), ``*hit_rate*`` is pinned ±1% (the request
+  stream is seeded, so the rate is a scheduling fact, not a measurement).
 
 Cells/metrics present on only one side are skipped (smoke runs produce a
 subset of the committed full grid; new cells have no baseline yet). A
@@ -68,6 +71,14 @@ def metric_policy(metric: str, wall_tol: float = DEFAULT_WALL_TOL) -> Optional[P
     # "_s" but is higher-is-better, not a latency
     if "per_s" in m or "throughput" in m or "speedup" in m:
         return Policy("higher", wall_tol, 0.0, wall=True)
+    # prefix-cache cells: warm TTFT is the contract the cache exists for —
+    # same lower-better wall band as any latency, but named explicitly so
+    # the classification is visible and unit-testable; the hit rate is a
+    # deterministic scheduling fact (fixed request stream), pinned tight
+    if "ttft_warm" in m:
+        return Policy("lower", wall_tol, 2e-3, wall=True)
+    if "hit_rate" in m:
+        return Policy("both", 0.01, 0.01)
     if m.endswith(("_s", "_ms")) or "seconds" in m or "latency" in m:
         return Policy("lower", wall_tol, 2e-3, wall=True)
     if "drift" in m or "err" in m or "residual" in m:

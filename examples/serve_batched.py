@@ -12,6 +12,9 @@ engines with --mode:
                                                    # batching (chunked prefill)
     PYTHONPATH=src python examples/serve_batched.py --trace /tmp/serve.json
                                                    # Perfetto trace export
+    PYTHONPATH=src python examples/serve_batched.py --prefix-cache
+                                                   # shared-prefix workload +
+                                                   # content-hash prefix cache
 """
 from __future__ import annotations
 
@@ -62,6 +65,18 @@ def main():
     ap.add_argument("--prefill-budget", type=int, default=0,
                     help="per-tick prompt-token budget for --chunked "
                          "(0 = one chunk per tick)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="content-hash prefix caching: prompts are drawn "
+                         "from a small set of shared prefixes so repeat "
+                         "arrivals hit the cache (COW block sharing, "
+                         "prefill skipped over the shared span); the "
+                         "summary adds hit rate and warm TTFT")
+    ap.add_argument("--prefix-cache-blocks", type=int, default=-1,
+                    help="cap on pool blocks the prefix cache may retain "
+                         "(-1 = half of the pool — an unbounded "
+                         "cache on a small pool competes with decode "
+                         "working sets and thrashes the preemption "
+                         "ladder; 0 = unbounded)")
     ap.add_argument("--telemetry", metavar="PATH", default=None,
                     help="enable the telemetry subsystem, dump the JSONL "
                          "to PATH and print a one-screen summary at exit")
@@ -88,21 +103,40 @@ def main():
         chunked_prefill=args.chunked,
         prefill_chunk_tokens=args.chunk_tokens,
         prefill_token_budget=args.prefill_budget,
+        prefix_cache=args.prefix_cache,
+        prefix_cache_blocks=(
+            max(4, (args.num_blocks or args.lanes
+                    * -(-args.max_seq // args.block_size)) // 2)
+            if args.prefix_cache_blocks < 0 else args.prefix_cache_blocks),
         telemetry=args.telemetry is not None or args.trace is not None,
     )
     engine = ServeEngine(cfg, params, serve=serve)
 
     rng = np.random.default_rng(0)
+    # --prefix-cache workload: two shared prompt stems (think system
+    # prompts) with per-request tails. Arrivals are spaced wider than the
+    # default burst so a stem's first prefill completes (and inserts its
+    # entry) before the stem repeats — the regime the cache serves.
+    stems = [rng.integers(3, cfg.vocab_size,
+                          int(rng.integers(32, 64))).tolist()
+             for _ in range(2)] if args.prefix_cache else []
+    cadence = 6 if stems else 3
     pending = list(range(args.requests))
     t0 = time.time()
     tick = 0
     while pending or not engine.sched.idle:
-        # Bursty arrivals: a new request roughly every third tick.
-        if pending and (tick % 3 == 0):
+        # Bursty arrivals: a new request roughly every third tick
+        # (every sixth with --prefix-cache, see above).
+        if pending and (tick % cadence == 0):
             uid = pending.pop(0)
-            plen = int(rng.integers(4, 48))
+            if stems:
+                prompt = list(stems[uid % len(stems)]) + rng.integers(
+                    3, cfg.vocab_size, int(rng.integers(4, 16))).tolist()
+            else:
+                plen = int(rng.integers(4, 48))
+                prompt = rng.integers(3, cfg.vocab_size, plen).tolist()
             engine.submit(Request(
-                uid, rng.integers(3, cfg.vocab_size, plen).tolist(),
+                uid, prompt,
                 max_new_tokens=int(rng.integers(8, 32)),
             ))
         engine.tick()
@@ -125,6 +159,17 @@ def main():
     if "kv" in st:
         print(f"  kv pool: {st['kv']['num_blocks']} blocks, "
               f"final utilization {st['kv']['utilization']:.2f}")
+    if "prefix" in st:
+        p = st["prefix"]
+        lookups = p["hits"] + p["misses"]
+        warm = st.get("ttft_warm_s_p50")
+        print(f"  prefix cache: {p['hits']}/{lookups} hits "
+              f"({p['hits'] / max(lookups, 1):.0%}), "
+              f"{p['entries']} entries over {p['blocks']} blocks, "
+              f"{p['evictions']} evictions, "
+              f"{st.get('cow_copies', 0)} cow copies; "
+              f"warm ttft p50="
+              + (f"{warm * 1e3:.2f}ms" if warm else "n/a"))
 
     if args.telemetry:
         n = engine.telemetry.dump_jsonl(args.telemetry, meta={

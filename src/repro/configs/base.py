@@ -218,6 +218,33 @@ class ServeConfig:
                                     # tick across all lanes; 0 = one chunk.
                                     # At least one chunk always runs when a
                                     # prefill is pending (no livelock).
+    prefix_cache: bool = False    # content-hash prefix caching over the
+                                  # block pool: prompts are hashed block by
+                                  # block (chained hashes) and a matching
+                                  # cached prefix maps its physical blocks
+                                  # into the new request's table with
+                                  # refcounts + copy-on-write. Implies the
+                                  # continuous-batching (chunked) tick for
+                                  # partial-hit resume; needs paged=True
+                                  # (silently off for dense caches). False
+                                  # reproduces the non-caching engine
+                                  # byte for byte.
+    prefix_cache_blocks: int = 0  # cap on pool blocks the prefix cache may
+                                  # retain for finished requests (LRU-evicted
+                                  # beyond it); 0 = bounded only by pool
+                                  # pressure (allocation shortfalls evict)
+    prefix_attach: str = "reseg"  # streaming-stat seeding on a cache hit:
+                                  # reseg    = reuse the entry's stats stored
+                                  #   at the canonical segmentation, running
+                                  #   the O(c*d) re-segmentation program only
+                                  #   if the lane's horizon segmentation
+                                  #   differs (it never does within one
+                                  #   engine, so a full hit is pure host
+                                  #   work)
+                                  # recompute = always re-derive the stats
+                                  #   from the shared K/V blocks via the
+                                  #   prefill handoff program (correctness
+                                  #   fallback; token-identity-tested)
     eos_id: int = 2
     seed: int = 0
     telemetry: bool = False       # unified metrics/tracing/drift monitors
@@ -276,6 +303,18 @@ class ServeConfig:
             raise ValueError(
                 f"prefill_token_budget must be >= 0, "
                 f"got {self.prefill_token_budget}"
+            )
+        if self.prefix_attach not in ("reseg", "recompute"):
+            raise ValueError(f"unknown prefix_attach {self.prefix_attach!r}")
+        if self.prefix_cache_blocks < 0:
+            raise ValueError(
+                f"prefix_cache_blocks must be >= 0, "
+                f"got {self.prefix_cache_blocks}"
+            )
+        if self.prefix_cache and not self.batched_prefill:
+            raise ValueError(
+                "prefix_cache=True requires batched_prefill=True (partial "
+                "hits resume through chunked batched prefill)"
             )
 
 

@@ -389,3 +389,131 @@ def make_rebase_fn(cfg: ModelConfig, seq_max: int):
         return rebase_streaming(cfg, cache, pos, seq_max=seq_max)
 
     return fn
+
+
+# --------------------------------------------------------------------------
+# Prefix-cache attach: landmark-sum re-segmentation + full stat reseed.
+#
+# A cached prefix's streaming stats are only valid at the segmentation they
+# were computed under (the horizon ``seq_max`` and landmark count ``c`` fix
+# ``segment_len``). Within one engine every lane shares that segmentation,
+# so a "reseg" attach is a pure host-side passthrough of the cached dense
+# snapshot — bitwise identical to the state a cold prefill would have left,
+# which is what keeps frozen-mode outputs greedy-identical. When the cached
+# segmentation DIFFERS (a cross-engine cache, or ``prefix_attach=
+# "recompute"`` forcing re-derivation), the functions below rebuild the
+# canonical state from what the shared blocks + snapshot actually carry:
+#
+# * the landmark running SUMS re-segment exactly whenever each target
+#   window is a union of source windows (``seg_to % seg_from == 0`` — the
+#   canonical storage segmentation is the finer one), as one O(c^2*d)
+#   routing GEMM (``resegment_sums``, generalizing the ``rebase_span``
+#   scatter from a row window to a row *regrouping*);
+# * the per-row softmax partials (m, l, acc) cannot be merged across rows
+#   (each row scores with its own landmark mean), so they are re-founded
+#   exactly over the shared K/V via ``recompute_stats`` — the same math the
+#   prefill handoff seeds them with, token-identity-tested against it.
+# --------------------------------------------------------------------------
+def resegment_sums(sums: jnp.ndarray, seg_from: int, seg_to: int):
+    """Re-segment per-landmark running sums (..., c, d) from segment length
+    ``seg_from`` to ``seg_to``. Exact when every target window is a union
+    of source windows (``seg_to % seg_from == 0``: target row t is the sum
+    of source rows t*m..(t+1)*m-1, m = seg_to/seg_from; source rows past c
+    hold zeros by the streaming invariant, so truncation loses nothing up
+    to the source horizon). Coarse-to-fine is information-lossy and
+    rejected — re-derive through the prefill path instead."""
+    if seg_to == seg_from:
+        return sums
+    if seg_to % seg_from:
+        raise ValueError(
+            f"cannot re-segment sums from segment length {seg_from} to "
+            f"{seg_to}: target windows must be unions of source windows "
+            f"(seg_to % seg_from == 0)"
+        )
+    c = sums.shape[-2]
+    m = seg_to // seg_from
+    route = (
+        (jnp.arange(c)[:, None] // m) == jnp.arange(c)[None, :]
+    ).astype(jnp.float32)                                  # (c_src, c_tgt)
+    return jnp.einsum(
+        "sc,...sd->...cd", route, sums.astype(jnp.float32)
+    ).astype(sums.dtype)
+
+
+def _reseed_attn_layer(cfg: ModelConfig, lcache: dict, pos, seq_max, mla,
+                       seg_from):
+    """Re-found one attention layer's streaming state at the canonical
+    segmentation: re-segment the landmark sums if the source segmentation
+    differs, then exactly recompute EVERY reached row's (m, l, acc) over
+    keys 0..pos — ``_rebase_attn_layer`` generalized from the two boundary
+    rows to the full row set (the whole prefix is new to this lane)."""
+    from repro.models.attention import _broadcast_kv
+
+    c = cfg.num_landmarks
+    if mla:
+        s_len = lcache["latent"].shape[1]
+        h = cfg.num_heads
+        k_eff = jnp.concatenate(
+            [lcache["latent"], lcache["rope"]], axis=-1
+        )[:, None]                                        # (B, 1, S, de)
+        kb = jnp.broadcast_to(k_eff, (k_eff.shape[0], h, *k_eff.shape[2:]))
+        lat = lcache["latent"][:, None]
+        vb = jnp.broadcast_to(lat, (lat.shape[0], h, *lat.shape[2:]))
+        scale = (cfg.resolved_head_dim + cfg.rope_head_dim) ** -0.5
+    else:
+        s_len = lcache["k"].shape[2]
+        kb = _broadcast_kv(lcache["k"], cfg.num_heads)
+        vb = _broadcast_kv(lcache["v"], cfg.num_heads)
+        scale = cfg.resolved_head_dim ** -0.5
+    s_max = s_len if seq_max is None else seq_max
+    seg_to = segment_len(s_max, c)
+    q_sum, k_sum = lcache["q_lmk"], lcache["k_lmk"]
+    if seg_from is not None and seg_from != seg_to:
+        q_sum = resegment_sums(q_sum, seg_from, seg_to)
+        k_sum = resegment_sums(k_sum, seg_from, seg_to)
+    counts = landmark_counts(pos, s_max, c)
+    q_l = landmark_means(q_sum, counts)
+    m, l, acc = recompute_stats(q_l, kb, vb, pos, scale,
+                                row_valid=counts > 0)
+    return dict(lcache, q_lmk=q_sum, k_lmk=k_sum, bv_m=m, bv_l=l,
+                bv_acc=acc)
+
+
+def reseed_streaming(cfg: ModelConfig, cache, pos, seq_max=None,
+                     seg_from=None):
+    """Re-found every attention layer's streaming stats from its cached K/V
+    at the canonical segmentation (dense views; the paged engine gathers
+    first through ``PagedKVCache.make_rebase_step``). ``pos`` is the index
+    of the LAST attached token. ``seg_from`` re-segments the landmark sums
+    when the snapshot was stored under a different segment length. No-op
+    for attention-free stacks."""
+    if cfg.family == "ssm":
+        return cache
+
+    def one(lc):
+        if cfg.family == "hybrid":
+            return dict(
+                lc,
+                attn=_reseed_attn_layer(cfg, lc["attn"], pos, seq_max,
+                                        False, seg_from),
+            )
+        return _reseed_attn_layer(cfg, lc, pos, seq_max, cfg.mla, seg_from)
+
+    layers = cache["layers"]
+    if isinstance(layers, list):
+        new_layers = [one(lc) for lc in layers]
+    else:
+        new_layers = jax.vmap(one)(layers)  # scan_layers: stacked leaves
+    return dict(cache, layers=new_layers)
+
+
+def make_reseed_fn(cfg: ModelConfig, seq_max: int, seg_from=None):
+    """Attach-reseed closure ``fn(cache, pos) -> cache`` (vmap-ready; rides
+    the same ``make_rebase_step`` plumbing as the boundary rebase — pool
+    K/V is read, only the lane-dense leaves commit)."""
+
+    def fn(cache, pos):
+        return reseed_streaming(cfg, cache, pos, seq_max=seq_max,
+                                seg_from=seg_from)
+
+    return fn

@@ -49,6 +49,19 @@ vLLM-style serving on top of ``decode_step``:
   instead of recomputing. ``chunked_prefill=False`` (default) keeps the
   two-phase tick below, byte for byte.
 
+* with ``ServeConfig.prefix_cache=True`` admissions first probe a
+  **content-hash prefix index** (serve/paged.py ``PrefixCache``): prompts
+  are hashed block-by-block (chained digests) and a hit maps the cached
+  physical blocks into the request's table with refcounts — a full-prompt
+  hit restores the cached dense landmark/streaming snapshot and emits its
+  first token from the cached logits (TTFT ~ one host-side attach instead
+  of a prefill pass); a partial hit resumes chunked prefill at the deepest
+  cached block boundary. Divergent decode writes into a shared partial
+  block copy-on-write (``BlockAllocator.cow`` + ``PagedKVCache.
+  copy_block``); streaming stats attach via the canonical-segmentation
+  passthrough or the ``prefix_attach="recompute"`` reseed program
+  (serve/decode_state.py ``reseed_streaming``).
+
 ``ServeConfig(paged=False, batched_prefill=False)`` reproduces the seed
 engine (dense per-lane caches, token-replay prefill) — kept as the
 benchmark/equivalence baseline. Greedy outputs are token-identical between
@@ -99,6 +112,10 @@ class _Lane:
     prefilling: bool = False  # mid-chunked-prefill: not a decode candidate
     prefill_pos: int = 0      # prompt tokens committed so far
     chunk_idx: int = 0        # next chunk ordinal (flight lifeline labels)
+    # prefix caching: dense-state snapshots captured at block-aligned chunk
+    # boundaries while this lane prefills (token count -> dense_snapshot);
+    # attached to the PrefixCache entry when the prefill completes
+    stat_points: dict = dataclasses.field(default_factory=dict)
 
     @property
     def free(self) -> bool:
@@ -153,11 +170,22 @@ class ServeEngine:
             BlockAllocator(serve.resolved_num_blocks, serve.block_size)
             if self.kv.has_paged_leaves else None
         )
+        # Prefix caching rides the continuous-batching tick (partial hits
+        # resume into chunked prefill at the first non-matching block), so
+        # enabling it implies the chunked machinery. Needs paged seq leaves
+        # (the whole point is sharing physical blocks) and a family with
+        # batched prefill; silently off otherwise.
+        self._prefix_enabled = (
+            serve.prefix_cache and self.kv.has_paged_leaves
+            and prefill_supported(cfg)
+        )
         # Continuous batching: chunk size rounded up to a block multiple so
         # every non-final chunk commits whole blocks (chunk starts stay
         # block-aligned). Families without batched prefill (hybrid/ssm)
         # fall back to the two-phase replay engine.
-        self._chunked = serve.chunked_prefill and prefill_supported(cfg)
+        self._chunked = (
+            serve.chunked_prefill or self._prefix_enabled
+        ) and prefill_supported(cfg)
         self._chunk = min(
             -(-serve.prefill_chunk_tokens // serve.block_size)
             * serve.block_size,
@@ -175,6 +203,21 @@ class ServeEngine:
             self.sched.park_drop_cb = self._drop_parked
         # parked mid-prefill state: uid -> dense-leaf snapshot + progress
         self._parked: dict[int, dict] = {}
+        # Prefix cache: content-hash index over the block pool. It owns the
+        # allocator's eviction hook; the scheduler charges shared blocks
+        # against the pool once (prefix_probe) and breaks block sharing on
+        # divergent decode writes (cow_cb -> device block copy).
+        self.prefix = None
+        if self._prefix_enabled:
+            from repro.serve.paged import PrefixCache
+
+            self.prefix = PrefixCache(
+                alloc, max_blocks=serve.prefix_cache_blocks,
+                registry=(self.telemetry.metrics
+                          if self.telemetry.enabled else None),
+            )
+            self.sched.prefix_probe = self._prefix_probe
+            self.sched.cow_cb = self.kv.copy_block
         if self.telemetry.enabled:
             reg = self.telemetry.metrics
             self._ticks_total = reg.counter(
@@ -245,6 +288,29 @@ class ServeEngine:
 
             self._rebase_step = self.kv.make_rebase_step(
                 jax.vmap(make_rebase_fn(cfg, self.max_seq))
+            )
+
+        # Prefix-attach stat seeding. "reseg": cached stats are stored at
+        # the canonical segmentation (this engine's own — every lane shares
+        # segment_len(max_seq, c)), so the attach is a pure host-side
+        # dense-state restore, bitwise the state a cold prefill would have
+        # left; the re-segmentation program (decode_state.resegment_sums)
+        # only runs when segmentations differ, which cannot happen within
+        # one engine. "recompute": dispatch the reseed program on every
+        # attach — re-derive all (m, l, acc) rows exactly from the shared
+        # K/V blocks through the rebase-step plumbing (the correctness
+        # fallback, token-identity-tested against cold prefill).
+        self._reseed_step = None
+        if (
+            self._prefix_enabled and serve.prefix_attach == "recompute"
+            and cfg.decode_attention_impl == "spectral_shift"
+            and cfg.decode_streaming in ("exact", "frozen")
+            and cfg.family != "ssm"
+        ):
+            from repro.serve.decode_state import make_reseed_fn
+
+            self._reseed_step = self.kv.make_rebase_step(
+                jax.vmap(make_reseed_fn(cfg, self.max_seq))
             )
 
         # Online approximation monitors (telemetry only): locate the
@@ -356,6 +422,10 @@ class ServeEngine:
                 )
             if self._frozen_rebase:
                 self._rebase_step = self._acct.wrap(self._rebase_step, "rebase")
+            if self._reseed_step is not None:
+                self._reseed_step = self._acct.wrap(
+                    self._reseed_step, "prefix_attach"
+                )
             if serve.numerics_probe_every > 0:
                 self._numerics = acct.NumericsProbe(self.telemetry.metrics)
         else:
@@ -406,6 +476,127 @@ class ServeEngine:
         """Scheduler reclaimed a parked request's blocks: drop the resume
         snapshot; re-admission recomputes from the first chunk."""
         self._parked.pop(uid, None)
+
+    # -- prefix caching --------------------------------------------------------
+    def _plan_attach(self, req: Request):
+        """Match ``req.prompt`` against the prefix index and pick the attach
+        point. Returns ``(entry, n_tokens, full)`` — share the blocks
+        covering the first ``n_tokens`` prompt tokens; ``full`` means the
+        whole prompt (cached logits emit the first token with zero prefill
+        work), otherwise ``n_tokens`` is a block-aligned stat-point boundary
+        and chunked prefill resumes there. None = no usable cached state (a
+        match without a snapshot at a usable boundary is still a miss).
+        Parked requests resume their own committed blocks instead."""
+        if (self.prefix is None or req.uid in self.sched.parked
+                or req.uid in self._parked):
+            return None
+        m = self.prefix.match(req.prompt)
+        if m is None:
+            return None
+        entry, k = m
+        bs = self.serve.block_size
+        n = len(req.prompt)
+        if self.prefix.is_full_hit(entry, req.prompt, k):
+            if n in entry.stat_points:
+                return entry, n, True
+        # Partial hit: resume chunked prefill at the deepest block-aligned
+        # snapshot within the matched span. Capped at n-1 so at least one
+        # token remains to prefill (the resumed tail produces the
+        # first-token logits; a boundary AT n without cached logits is
+        # unusable as "full").
+        cap = min(k * bs, n - 1)
+        best = max(
+            (p for p in entry.stat_points if 0 < p <= cap and p % bs == 0),
+            default=0,
+        )
+        if best:
+            return entry, best, False
+        return None
+
+    def _prefix_probe(self, req: Request) -> int:
+        """Scheduler hook: leading prompt tokens a cached prefix will cover
+        at admission (0 = cold), so admission charges the tail only."""
+        plan = self._plan_attach(req)
+        return plan[1] if plan is not None else 0
+
+    def _try_attach_prefix(self, i: int, req: Request) -> bool:
+        """Admission-time hit detection + attach. On a hit: map the shared
+        blocks into the request's table (refcounted — the tail the
+        scheduler allocated at admission stays appended after them),
+        restore the cached dense snapshot into the lane, and either emit
+        the first token straight from the cached logits (full hit: TTFT is
+        one host-side attach, no prefill pass) or resume chunked prefill at
+        the boundary (partial hit). Returns True when attached."""
+        plan = self._plan_attach(req)
+        if plan is None:
+            if self.prefix is not None:
+                self.prefix.note_miss()
+            return False
+        entry, n_attach, full = plan
+        bs = self.serve.block_size
+        nb = -(-n_attach // bs) if full else n_attach // bs
+        blocks = entry.blocks[:nb]
+        self.sched.allocator.attach_shared(req.uid, blocks)
+        self.kv.dense_restore(i, entry.stat_points[n_attach])
+        lane = self.lanes[i]
+        # Boundary snapshots up to the attach point are valid for this
+        # prompt too (same tokens): carry them so this request's completed
+        # prefill can cache a deeper entry without recapturing them.
+        lane.stat_points = {
+            p: s for p, s in entry.stat_points.items() if p <= n_attach
+        }
+        if full:
+            lane.pos = n_attach
+            lane.prefilled_tick = self._tick
+        else:
+            lane.prefill_pos = n_attach
+            lane.prefilling = True
+        self.prefix.note_hit(entry, len(blocks))
+        self.sched.mark_prefix_hit(req.uid)
+        self.telemetry.flight.record(
+            req.uid, "prefix_attach", tick=self._tick, lane=i,
+            blocks=len(blocks), tokens=n_attach,
+            mode="full" if full else "partial",
+        )
+        if self._reseed_step is not None:
+            # "recompute" attach: re-derive the streaming stats from the
+            # shared K/V instead of trusting the snapshot's (m, l, acc).
+            self._run_reseed(i, n_attach - 1)
+        if full:
+            self._emit_token(i, np.asarray(entry.logits, np.float32))
+        return True
+
+    def _run_reseed(self, i: int, last_pos: int) -> None:
+        """Dispatch the attach-reseed program for one lane (gather shared
+        blocks -> recompute every reached stats row -> commit dense)."""
+        positions = np.zeros(self.max_lanes, np.int32)
+        flags = np.zeros(self.max_lanes, bool)
+        positions[i] = last_pos
+        flags[i] = True
+        tables = self.sched.tables()
+        nb_view = self.kv.view_blocks_needed(positions, [i])
+        self.kv._storage = list(self._reseed_step(
+            self.kv._storage, jnp.asarray(tables), jnp.asarray(positions),
+            jnp.asarray(flags), nb_view,
+        ))
+
+    def _maybe_cache_prefix(self, i: int, logits: np.ndarray) -> None:
+        """Completed-prefill hook: capture the final stat point (the lane's
+        dense state at exactly ``len(prompt)`` tokens, which a full hit
+        restores) and insert the prompt into the prefix index. The entry
+        takes its own block references, so retirement's ``free(uid)`` keeps
+        the blocks resident for future hits. No-op when every boundary is
+        already cached (first entry wins)."""
+        lane = self.lanes[i]
+        req = lane.req
+        if (self.prefix is None or req is None
+                or len(req.prompt) < self.serve.block_size):
+            return
+        lane.stat_points[len(req.prompt)] = self.kv.dense_snapshot(i)
+        self.prefix.insert(
+            req.prompt, self.sched.allocator.tables.get(req.uid, []),
+            stat_points=lane.stat_points, logits=logits,
+        )
 
     def _retire(self, i: int) -> None:
         lane = self.lanes[i]
@@ -660,6 +851,8 @@ class ServeEngine:
                 lane.prefill_pos = parked["prefill_pos"]
                 lane.chunk_idx = parked["chunk_idx"]
                 lane.prefilling = True
+            elif self._prefix_enabled and self._try_attach_prefix(i, req):
+                pass  # lane state set by the attach (full or partial hit)
             else:
                 self.kv.zero_lane_dense(i)
                 if req.prompt:
@@ -716,6 +909,14 @@ class ServeEngine:
                 lane.pos = len(req.prompt)
                 lane.prefilled_tick = self._tick
                 pending_first.append((i, lg, cv))
+            elif self._prefix_enabled and lane.prefill_pos % bs == 0:
+                # Block-aligned chunk boundary: snapshot the carried dense
+                # state as a partial-hit resume point. The host copy forces
+                # a device sync mid-tick — the documented cost of building
+                # cache entries, paid only while a prefill runs with the
+                # prefix cache on (the final boundary rides the sample-
+                # boundary sync instead).
+                lane.stat_points[lane.prefill_pos] = self.kv.dense_snapshot(i)
 
         # ---- ONE sync at the sample boundary -----------------------------
         logits = None
@@ -748,6 +949,11 @@ class ServeEngine:
                 )
                 self._emit_token(i, logits[i, : self.cfg.vocab_size])
             for i, lg in firsts:
+                if self._prefix_enabled:
+                    # Cache the completed prefill BEFORE emitting (the emit
+                    # may retire the lane; the entry's own block references
+                    # keep the prefix resident past release).
+                    self._maybe_cache_prefix(i, lg)
                 self._emit_token(i, lg)
 
         if self._frozen_rebase:
@@ -853,6 +1059,8 @@ class ServeEngine:
         st["decode_impl"] = self.decode_impl
         if self._frozen_rebase:
             st["rebases"] = self._rebases
+        if self.prefix is not None:
+            st["prefix"] = self.prefix.stats()
         if self.telemetry.enabled:
             st["telemetry"] = self.telemetry.tracer.summary()
             st["flight"] = self.telemetry.flight.summary()
@@ -860,6 +1068,6 @@ class ServeEngine:
                 st["xla_compiles"] = {
                     p: self._acct.compiles(p)
                     for p in ("prefill", "prefill_chunk", "decode_tick",
-                              "rebase")
+                              "rebase", "prefix_attach")
                 }
         return st

@@ -17,6 +17,16 @@ lower them abstractly and the sharding rules apply uniformly:
   leaves. Ignored (carried through untouched) by the legacy
   ``decode_streaming="recompute"`` path and by ``full`` decode attention.
 * ssm/hybrid states: mLSTM (C, n, m), mamba (h, conv tail) per layer.
+
+The ``cache_seq`` axis doubles as the SHARING boundary for prefix caching
+(serve/paged.py ``PrefixCache``): only seq-shaped leaves live in the block
+pool and can be mapped into multiple requests' block tables; every other
+leaf here is lane-dense and position-dependent, so a cached prefix carries
+them as a ``dense_snapshot`` host copy per block-aligned boundary (its
+"stat points") that attach restores — the same mechanism parked-resume
+uses. The snapshots are only meaningful at the segmentation they were
+captured under; see decode_state.resegment_sums for the cross-segmentation
+contract.
 """
 from __future__ import annotations
 

@@ -44,6 +44,7 @@ working set, not ``max_lanes * max_seq``. Two decode-tick programs exist:
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Any, Optional
 
 import jax
@@ -89,6 +90,16 @@ class BlockAllocator:
         # the ones most likely still resident in cache). Block 0 excluded.
         self._free: list[int] = list(range(num_blocks - 1, 0, -1))
         self.tables: dict[int, list[int]] = {}  # request uid -> block ids
+        # Reference count per non-free block: one per block table holding
+        # it plus one per PrefixCache entry retaining it. Invariant: every
+        # id in 1..num_blocks-1 is either on the free list (absent here) or
+        # present with count >= 1 — a block re-enters the free list only
+        # when its count drops to zero, never while still referenced.
+        self.refcounts: dict[int, int] = {}
+        # Optional PrefixCache hook: when an allocation comes up short, LRU
+        # cached prefixes whose blocks are otherwise unreferenced are
+        # evicted to make room before the allocation fails.
+        self.prefix_cache: Optional["PrefixCache"] = None
 
     # -- queries ------------------------------------------------------------
     @property
@@ -103,7 +114,13 @@ class BlockAllocator:
         return -(-n_tokens // self.block_size)
 
     def can_alloc(self, n_blocks: int) -> bool:
-        return n_blocks <= self.num_free
+        avail = self.num_free
+        if self.prefix_cache is not None:
+            avail += self.prefix_cache.evictable_blocks()
+        return n_blocks <= avail
+
+    def refcount(self, block: int) -> int:
+        return self.refcounts.get(block, 0)
 
     def fragmentation(self) -> float:
         """Free-list fragmentation in [0, 1]: 1 minus the longest
@@ -125,41 +142,339 @@ class BlockAllocator:
             "num_blocks": usable,
             "blocks_used": self.num_used,
             "blocks_free": self.num_free,
+            "blocks_shared": sum(
+                1 for rc in self.refcounts.values() if rc > 1
+            ),
             "utilization": self.num_used / max(usable, 1),
             "fragmentation": self.fragmentation(),
             "requests": len(self.tables),
         }
 
     # -- mutation -----------------------------------------------------------
+    def _take_free(self, n_blocks: int) -> Optional[list[int]]:
+        """Pop ``n_blocks`` off the free list at refcount 1, LRU-evicting
+        reclaimable prefix-cache entries to cover a shortfall. Returns None
+        (no state change beyond evictions) if still short."""
+        while n_blocks > self.num_free:
+            if self.prefix_cache is None or not self.prefix_cache.evict_one(
+                reclaim_only=True
+            ):
+                return None
+        got = [self._free.pop() for _ in range(n_blocks)]
+        for b in got:
+            self.refcounts[b] = 1
+        return got
+
     def alloc(self, uid: int, n_blocks: int) -> Optional[list[int]]:
         """Append ``n_blocks`` fresh blocks to ``uid``'s table. Returns the
         new block ids, or None (no state change) if the pool is short."""
-        if n_blocks > self.num_free:
+        got = self._take_free(n_blocks)
+        if got is None:
             return None
-        got = [self._free.pop() for _ in range(n_blocks)]
         self.tables.setdefault(uid, []).extend(got)
         return got
 
     def free(self, uid: int) -> list[int]:
-        """Release every block owned by ``uid``; returns the freed ids."""
+        """Drop ``uid``'s reference on every block in its table. Blocks
+        whose refcount hits zero go back to the free list; blocks still
+        retained elsewhere (a cached prefix, another table) stay resident.
+        Returns the ids actually freed."""
         blocks = self.tables.pop(uid, [])
-        self._free.extend(reversed(blocks))
-        return blocks
+        freed = []
+        for b in reversed(blocks):
+            rc = self.refcounts[b] - 1
+            if rc:
+                self.refcounts[b] = rc
+            else:
+                del self.refcounts[b]
+                self._free.append(b)
+                freed.append(b)
+        return freed
+
+    def take_ref(self, block: int) -> None:
+        """Add a reference to an already-resident block (PrefixCache
+        retention, shared-prefix attach). Never valid on a free block."""
+        if block not in self.refcounts:
+            raise ValueError(f"take_ref on free block {block}")
+        self.refcounts[block] += 1
+
+    def release_ref(self, block: int) -> bool:
+        """Drop one reference; returns True if the block was freed."""
+        rc = self.refcounts[block] - 1
+        if rc:
+            self.refcounts[block] = rc
+            return False
+        del self.refcounts[block]
+        self._free.append(block)
+        return True
+
+    def attach_shared(self, uid: int, blocks: list[int]) -> None:
+        """Map already-resident blocks (a matched cached prefix) into the
+        FRONT of ``uid``'s table, taking a reference on each — the prefix
+        occupies table positions 0..len(blocks)-1 and is released through
+        the normal ``free(uid)`` path. The blocks are charged against the
+        budget exactly once pool-wide: admission only allocates the tail."""
+        for b in blocks:
+            self.take_ref(b)
+        self.tables.setdefault(uid, [])[:0] = list(blocks)
+
+    def cow(self, uid: int, slot: int) -> Optional[tuple[int, int]]:
+        """Copy-on-write: break the sharing of ``uid``'s table ``slot``.
+        Allocates a fresh block, points the table at it and drops one
+        reference on the shared original (which stays resident for its
+        other holders). Returns ``(old, new)`` so the caller can copy the
+        device rows (``PagedKVCache.copy_block``), or None if the pool is
+        short (caller falls back to its reclaim/preempt loop)."""
+        old = self.tables[uid][slot]
+        got = self._take_free(1)
+        if got is None:
+            return None
+        new = got[0]
+        self.tables[uid][slot] = new
+        self.refcounts[old] -= 1  # > 1 before the call, so never frees
+        return old, new
 
     def defragment(self) -> dict[int, int]:
-        """Compact live blocks onto the lowest ids. Returns the {old: new}
-        mapping (identity entries omitted); the caller must permute device
-        storage with the same mapping (``PagedKVCache.apply_mapping``)."""
-        live = sorted(b for blocks in self.tables.values() for b in blocks)
+        """Compact movable live blocks onto the lowest ids. Blocks with
+        refcount > 1 (shared between tables and/or a cached prefix) are
+        PINNED in place — moving one would have to rewrite every holder's
+        view mid-flight, so the compactor refuses and packs around them.
+        Returns the {old: new} mapping (identity entries omitted); the
+        caller must permute device storage with the same mapping
+        (``PagedKVCache.apply_mapping``). Singly-referenced prefix-cache
+        blocks DO move; their index entries are remapped here."""
+        pinned = {b for b, rc in self.refcounts.items() if rc > 1}
+        movable = sorted(b for b, rc in self.refcounts.items() if rc == 1)
+        targets, cand = [], 1
+        while len(targets) < len(movable):
+            if cand not in pinned:
+                targets.append(cand)
+            cand += 1
         mapping = {
-            old: new for new, old in enumerate(live, start=1) if old != new
+            old: new for old, new in zip(movable, targets) if old != new
         }
         if mapping:
             for blocks in self.tables.values():
                 blocks[:] = [mapping.get(b, b) for b in blocks]
-            n_live = len(live)
-            self._free = list(range(self.num_blocks - 1, n_live, -1))
+            self.refcounts = {
+                mapping.get(b, b): rc for b, rc in self.refcounts.items()
+            }
+            if self.prefix_cache is not None:
+                self.prefix_cache.remap(mapping)
+            occupied = set(self.refcounts)
+            self._free = [
+                b for b in range(self.num_blocks - 1, 0, -1)
+                if b not in occupied
+            ]
         return mapping
+
+
+# ==========================================================================
+# Content-hash prefix index
+# ==========================================================================
+@dataclasses.dataclass
+class PrefixEntry:
+    """One cached prompt. ``blocks`` are the physical pool blocks covering
+    ``n_tokens`` (``ceil(n_tokens / block_size)`` of them — the last one may
+    be partial, shared via copy-on-write). ``stat_points`` maps block-aligned
+    token boundaries to ``PagedKVCache.dense_snapshot`` host copies of the
+    lane-dense landmark/streaming state captured at that boundary under the
+    canonical (engine-horizon) segmentation; ``logits`` is the next-token
+    logits row after the full prompt, enabling a zero-compute full hit."""
+
+    blocks: list[int]
+    n_tokens: int
+    tail: list[int]             # prompt tokens past the last full block
+    hashes: list[bytes]         # chained digest after each full block
+    stat_points: dict[int, list]
+    logits: Optional[np.ndarray]
+    last_used: int = 0
+
+
+class PrefixCache:
+    """Content-hash index of cached prompt prefixes over the block pool.
+
+    Hash scheme — chained, block-granular: digest ``i`` is
+    ``sha1(digest[i-1] || int32-LE tokens of block i)`` with
+    ``digest[-1] = b""``. Chaining makes digest ``i`` a fingerprint of
+    tokens ``[0, (i+1)*block_size)``, so matching a prompt is one dict
+    lookup per block boundary, longest first — no trie needed. Only full
+    blocks are hashed; a ragged prompt tail is compared verbatim (an
+    exact-full-prompt hit additionally shares the partial last block, which
+    divergent decode writes then copy-on-write).
+
+    The index holds one key per block boundary of each entry, first-wins on
+    collision (an existing key's backing blocks stay authoritative; a later
+    identical prefix simply isn't re-cached). Eviction is LRU by last use;
+    ``reclaim_only`` eviction considers only entries whose every block has
+    refcount 1 (cache-only), because those are the ones whose eviction
+    actually grows the free list. Entry blocks carry one allocator
+    reference for the cache itself, so a shared prefix never re-enters the
+    free list while a live request still maps it — the allocator invariant
+    the defragmenter and ``reclaim_parked`` rely on."""
+
+    def __init__(self, allocator: BlockAllocator, max_blocks: int = 0,
+                 registry=None):
+        from repro.telemetry.metrics import MetricsRegistry, TICK_BUCKETS
+
+        self.allocator = allocator
+        self.block_size = allocator.block_size
+        self.max_blocks = max_blocks
+        self._index: dict[bytes, tuple[PrefixEntry, int]] = {}
+        self._entries: list[PrefixEntry] = []
+        self._clock = 0
+        self.registry = registry if registry is not None else MetricsRegistry()
+        r = self.registry
+        self._hits = r.counter(
+            "prefix_cache_hits_total",
+            help="admissions attached to a cached prefix")
+        self._misses = r.counter(
+            "prefix_cache_misses_total",
+            help="admissions that found no usable cached prefix")
+        self._evictions = r.counter(
+            "prefix_cache_evictions_total",
+            help="cached prefixes dropped (LRU cap or pool pressure)")
+        self._hit_blocks = r.histogram(
+            "prefix_hit_blocks", help="shared blocks mapped per cache hit",
+            buckets=TICK_BUCKETS)
+        allocator.prefix_cache = self
+
+    # -- hashing -------------------------------------------------------------
+    @staticmethod
+    def block_hashes(prompt, block_size: int) -> list[bytes]:
+        """Chained digest after each FULL block of ``prompt``."""
+        out: list[bytes] = []
+        d = b""
+        for i in range(len(prompt) // block_size):
+            blk = np.asarray(
+                prompt[i * block_size:(i + 1) * block_size], np.int32
+            ).tobytes()
+            d = hashlib.sha1(d + blk).digest()
+            out.append(d)
+        return out
+
+    # -- lookup --------------------------------------------------------------
+    def match(self, prompt) -> Optional[tuple[PrefixEntry, int]]:
+        """Longest cached prefix of ``prompt``: ``(entry, k)`` with ``k``
+        matched full blocks, or None. Pure lookup — the caller decides
+        whether the match is usable and accounts hit/miss accordingly."""
+        hashes = self.block_hashes(prompt, self.block_size)
+        for i in range(len(hashes) - 1, -1, -1):
+            got = self._index.get(hashes[i])
+            if got is not None and got[1] >= i + 1:
+                return got[0], i + 1
+        return None
+
+    def is_full_hit(self, entry: PrefixEntry, prompt, k: int) -> bool:
+        """True when ``(entry, k)`` covers ``prompt`` exactly: every full
+        block matched, the ragged tails agree verbatim, and the entry
+        carries the post-prompt logits row for the zero-compute emit."""
+        bs = self.block_size
+        return (
+            k == len(prompt) // bs
+            and entry.n_tokens == len(prompt)
+            and entry.tail == list(prompt[k * bs:])
+            and entry.logits is not None
+        )
+
+    def note_hit(self, entry: PrefixEntry, n_blocks: int) -> None:
+        self._clock += 1
+        entry.last_used = self._clock
+        self._hits.inc()
+        self._hit_blocks.observe(n_blocks)
+
+    def note_miss(self) -> None:
+        self._misses.inc()
+
+    # -- insertion / eviction -------------------------------------------------
+    def insert(self, prompt, blocks, stat_points=None,
+               logits=None) -> Optional[PrefixEntry]:
+        """Cache a finished prefill: take a reference on the blocks covering
+        the prompt and register the boundary digests. Returns the entry, or
+        None when nothing was cached (sub-block prompt, or every boundary
+        already indexed by an earlier entry — first wins)."""
+        bs = self.block_size
+        hashes = self.block_hashes(prompt, bs)
+        if not hashes:
+            return None
+        nb = -(-len(prompt) // bs)
+        blocks = list(blocks[:nb])
+        if len(blocks) < nb:
+            return None
+        self._clock += 1
+        entry = PrefixEntry(
+            blocks=blocks, n_tokens=len(prompt),
+            tail=list(prompt[len(hashes) * bs:]), hashes=hashes,
+            stat_points=dict(stat_points or {}),
+            logits=None if logits is None else np.asarray(logits),
+            last_used=self._clock,
+        )
+        registered = False
+        for i, d in enumerate(hashes):
+            if d not in self._index:
+                self._index[d] = (entry, i + 1)
+                registered = True
+        if not registered:
+            return None
+        for b in blocks:
+            self.allocator.take_ref(b)
+        self._entries.append(entry)
+        while (
+            self.max_blocks > 0 and self.block_count() > self.max_blocks
+            and self.evict_one()
+        ):
+            pass
+        return entry
+
+    def _reclaimable(self, entry: PrefixEntry) -> bool:
+        return all(self.allocator.refcount(b) == 1 for b in entry.blocks)
+
+    def evictable_blocks(self) -> int:
+        """Blocks an eviction sweep could return to the free list right
+        now (entries no live table still references)."""
+        return sum(
+            len(e.blocks) for e in self._entries if self._reclaimable(e)
+        )
+
+    def evict_one(self, reclaim_only: bool = False) -> bool:
+        """Drop the LRU entry. ``reclaim_only`` restricts candidates to
+        entries whose blocks all free immediately (allocator shortfall
+        path, where progress requires the free list to grow)."""
+        cands = [
+            e for e in self._entries
+            if not reclaim_only or self._reclaimable(e)
+        ]
+        if not cands:
+            return False
+        victim = min(cands, key=lambda e: e.last_used)
+        for d in victim.hashes:
+            got = self._index.get(d)
+            if got is not None and got[0] is victim:
+                del self._index[d]
+        self._entries.remove(victim)
+        for b in victim.blocks:
+            self.allocator.release_ref(b)
+        self._evictions.inc()
+        return True
+
+    def remap(self, mapping: dict[int, int]) -> None:
+        """Follow a defragmentation: entry block ids move with the pool.
+        (Digests are content-addressed and don't change.)"""
+        for e in self._entries:
+            e.blocks = [mapping.get(b, b) for b in e.blocks]
+
+    def block_count(self) -> int:
+        return sum(len(e.blocks) for e in self._entries)
+
+    def stats(self) -> dict:
+        return {
+            "entries": len(self._entries),
+            "blocks": self.block_count(),
+            "index_keys": len(self._index),
+            "hits": int(self._hits.value),
+            "misses": int(self._misses.value),
+            "evictions": int(self._evictions.value),
+        }
 
 
 # ==========================================================================
@@ -616,6 +931,20 @@ class PagedKVCache:
             self._storage[idx] = self._storage[idx].at[lane].set(
                 jnp.zeros_like(self._storage[idx][lane])
             )
+
+    def copy_block(self, src: int, dst: int) -> None:
+        """Copy one pool block's token rows in every pooled leaf — the
+        device half of copy-on-write, run once when a shared block gets its
+        first divergent write (``BlockAllocator.cow`` does the host half)."""
+        if not self.paged:
+            return
+        for idx, info in enumerate(self.infos):
+            j = info.seq_axis
+            if j is None:
+                continue
+            arr = self._storage[idx]
+            pre = (slice(None),) * j
+            self._storage[idx] = arr.at[(*pre, dst)].set(arr[(*pre, src)])
 
     def apply_mapping(self, mapping: dict[int, int]) -> None:
         """Permute pool storage after ``BlockAllocator.defragment``."""

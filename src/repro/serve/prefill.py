@@ -44,6 +44,15 @@ callers).
 Supported for the attention-cache families (dense / moe / vlm, GQA or MLA).
 Hybrid and SSM stacks keep token replay (their recurrent state is inherently
 sequential); the engine falls back automatically.
+
+Prefix caching (serve/paged.py) rides on the chunked variant of this path:
+a partial hit attaches the shared blocks plus the dense snapshot captured
+at the deepest block-aligned chunk boundary, then *resumes* chunked prefill
+from that boundary — chunk starts are always block-aligned, so a resumed
+prefill runs the exact same chunk programs a cold prefill would have run
+from that offset, and the resulting cache is bitwise the cold one. A full
+hit skips this module entirely (first-token logits come from the cache
+entry).
 """
 from __future__ import annotations
 

@@ -104,6 +104,18 @@ class Scheduler:
         self.flight = flight
         # set by the engine: lane index -> Request to requeue on preemption
         self.requeue_cb = None
+        # Prefix-caching hooks (engine-set, both optional):
+        # prefix_probe(req) -> int returns how many leading prompt tokens a
+        # cached prefix will cover at admission, so _blocks_for_prompt
+        # charges the pool for the TAIL only (the shared blocks are already
+        # resident and accounted once, under the cache's reference);
+        # cow_cb(old, new) performs the device-side block copy when
+        # ensure_block breaks the sharing of a refcounted block.
+        self.prefix_probe = None
+        self.cow_cb = None
+        # uids whose admission attached a cached prefix: their first token
+        # lands in the warm-TTFT histogram as well as the regular one
+        self._warm_uids: set = set()
         self.lane_uid: list[Optional[int]] = [None] * max_lanes
         self.admit_order: dict[int, int] = {}  # uid -> admission tick
         self.timing: dict[int, RequestTiming] = {}
@@ -142,6 +154,15 @@ class Scheduler:
             help="wall seconds from requeue to the first post-resume token "
                  "(kept out of both ttft and itl)",
             buckets=LATENCY_BUCKETS)
+        self._warm_ttft_s = r.histogram(
+            "serve_ttft_warm_seconds",
+            help="wall seconds from arrival to first token for requests "
+                 "admitted onto a cached prefix (also counted in "
+                 "serve_ttft_seconds)",
+            buckets=LATENCY_BUCKETS)
+        self._cow_copies = r.counter(
+            "prefix_cow_copies_total",
+            help="shared blocks copied on first divergent write")
 
     # Aggregate counters as attributes, for backward compatibility.
     @property
@@ -190,6 +211,19 @@ class Scheduler:
         if req.uid in self.parked:
             return 0  # resume: its committed-chunk blocks are still held
         n = max(len(req.prompt), 1)
+        if self.prefix_probe is not None:
+            # Shared-prefix admission: the cached blocks are already
+            # resident (held by the prefix cache's reference), so they are
+            # charged against the pool exactly once — admission only
+            # allocates the uncached tail. A full hit needs zero blocks.
+            shared = int(self.prefix_probe(req))
+            if shared >= len(req.prompt):
+                return 0
+            if shared:
+                tail = len(req.prompt) - shared
+                if self.chunk_tokens > 0:
+                    tail = min(tail, self.chunk_tokens)
+                return self.allocator.blocks_for_tokens(tail)
         if self.chunk_tokens > 0:
             # chunked admission only needs the first chunk resident; later
             # chunks grow via ensure_prefill_blocks
@@ -251,6 +285,32 @@ class Scheduler:
             # A parked victim freed nothing (it keeps its blocks) — the
             # next iteration's reclaim_parked() takes them, so the loop
             # still makes progress every pass.
+        # The covering block exists. If it is SHARED (refcount > 1: the
+        # partial last block of an attached cached prefix), this lane's
+        # write would corrupt every other holder's view — break the
+        # sharing first: allocate a fresh block, copy the device rows
+        # (cow_cb), drop one reference on the original. First divergent
+        # write only; the fresh block is private from then on.
+        block = self.allocator.tables[uid][need_idx]
+        while self.allocator.refcount(block) > 1:
+            got = self.allocator.cow(uid, need_idx)
+            if got is not None:
+                if self.cow_cb is not None:
+                    self.cow_cb(*got)
+                self._cow_copies.inc()
+                self.flight.record(uid, "cow", tick=self.tick_now,
+                                   src=got[0], dst=got[1])
+                break
+            # Pool short for the private copy: same pressure ladder as
+            # decode growth (reclaim parked, then preempt the youngest).
+            if self.reclaim_parked():
+                continue
+            victim = self._youngest_lane()
+            if victim is None:
+                return False
+            self.preempt(victim)
+            if victim == lane:
+                return False
         return True
 
     def ensure_prefill_blocks(self, lane: int, n_tokens: int) -> bool:
@@ -348,6 +408,12 @@ class Scheduler:
                            tokens=t.new_tokens,
                            latency_ticks=t.finished - t.arrived)
 
+    def mark_prefix_hit(self, uid: int) -> None:
+        """Flag an admission that attached a cached prefix: its first token
+        is additionally observed in ``serve_ttft_warm_seconds`` (warm vs
+        cold TTFT is the prefix cache's headline win)."""
+        self._warm_uids.add(uid)
+
     def note_token(self, uid: int) -> None:
         t = self.timing[uid]
         now = time.perf_counter()
@@ -365,6 +431,10 @@ class Scheduler:
             self._ttft_ticks.observe(t.first_token - t.arrived)
             if t.arrived_s is not None:
                 self._ttft_s.observe(now - t.arrived_s)
+                if uid in self._warm_uids:
+                    self._warm_ttft_s.observe(now - t.arrived_s)
+        if uid in self._warm_uids and t.first_token >= 0:
+            self._warm_uids.discard(uid)
         elif t.last_token_s is not None:
             self._itl_s.observe(now - t.last_token_s)
         t.last_token_s = now
@@ -402,6 +472,9 @@ class Scheduler:
             "itl_s_p99": self._itl_s.percentile(99),
             "resume_ttft_s_p50": self._resume_ttft_s.percentile(50),
             "resume_ttft_s_p99": self._resume_ttft_s.percentile(99),
+            "ttft_warm_s_p50": self._warm_ttft_s.percentile(50),
+            "ttft_warm_s_p99": self._warm_ttft_s.percentile(99),
+            "cow_copies": int(self._cow_copies.value),
             "parked": len(self.parked),
         }
         if self.allocator is not None:

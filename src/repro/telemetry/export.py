@@ -133,6 +133,18 @@ def _lifeline_events(line, out) -> None:
                            {"tick0": ev.get("tick0"), "tick1": ev.get("tick1"),
                             "pos0": ev.get("pos0"), "pos1": ev.get("pos1"),
                             "ticks": ev.get("n")}))
+        elif kind == "prefix_attach":
+            # Prefix-cache hit at admission: the shared span never prefills,
+            # so the lifeline shows an instant (full hit: first token comes
+            # straight from cached logits; partial: chunked prefill resumes
+            # at the attach boundary, its chunks render as usual).
+            close(t)
+            instants.append(("prefix_attach", t, {
+                "lane": ev.get("lane"), "blocks": ev.get("blocks"),
+                "tokens": ev.get("tokens"), "mode": ev.get("mode")}))
+        elif kind == "cow":
+            instants.append(("cow", t, {"src": ev.get("src"),
+                                        "dst": ev.get("dst")}))
         elif kind == "preempt":
             close(t)
             instants.append(("preempt", t, {"lane": ev.get("lane"),

@@ -24,6 +24,11 @@ small, bounded record of every lifecycle event of each request —
     preempt / requeue
                     victim eviction and head-of-queue requeue
     rebase          frozen-mode boundary rebase touched this lane
+    prefix_attach   admission attached a cached prefix (shared block and
+                    token counts + "full"/"partial" mode) — the shared
+                    span never prefills, so no prefill slice precedes it
+    cow             copy-on-write broke the sharing of one block before a
+                    divergent decode write (src/dst block ids)
     finish          retirement (+ generated token count)
 
 Bounds make it safe to leave on in production:

@@ -345,6 +345,12 @@ class TestRegressGate:
         assert not metric_policy("xla_cost_bytes").wall
         assert metric_policy("drift_err").direction == "lower"
         assert metric_policy("finished") is None  # informational
+        # prefix-cache cells: warm TTFT gates like a latency, the speedup
+        # rule still wins for ratios, and the hit rate is pinned
+        assert metric_policy("ttft_warm_s") == Policy(
+            "lower", DEFAULT_WALL_TOL, 2e-3, wall=True)
+        assert metric_policy("ttft_warm_speedup").direction == "higher"
+        assert metric_policy("prefix_hit_rate") == Policy("both", 0.01, 0.01)
 
     def test_identical_cells_pass(self):
         violations, compared = compare_cells(

@@ -1,0 +1,350 @@
+"""Prefix caching: content-hash index + refcounted copy-on-write block
+sharing (serve/paged.py PrefixCache), landmark-stat re-segmentation
+(decode_state.resegment_sums), and the engine-level attach paths — full
+hit, partial hit, COW divergence — against cold-prefill references."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ServeConfig, reduced
+from repro.configs.registry import get_config
+from repro.models.model import model_specs
+from repro.models.params import init_params
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.paged import ZERO_BLOCK, BlockAllocator, PrefixCache
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = dataclasses.replace(
+        reduced(get_config("qwen2-7b")), capacity_factor=100.0
+    )
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+BASE = ServeConfig(max_lanes=2, max_seq=64, block_size=8)
+# Small chunks so multi-chunk prefills leave intermediate stat points for
+# partial-hit resume to land on.
+PREFIX = dataclasses.replace(BASE, prefix_cache=True, prefill_chunk_tokens=16)
+# Cold reference running the SAME chunked-prefill programs, no cache.
+COLD = dataclasses.replace(PREFIX, prefix_cache=False, chunked_prefill=True)
+
+
+def _prompt(cfg, n, seed):
+    rng = np.random.default_rng(seed)
+    return rng.integers(3, cfg.vocab_size, n).tolist()
+
+
+def _serve_seq(cfg, params, serve, prompts, max_new=8):
+    """One engine; each prompt runs to completion before the next is
+    submitted, so later prompts can hit earlier prompts' cached prefixes."""
+    eng = ServeEngine(cfg, params, serve=serve)
+    out = {}
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid, list(p), max_new_tokens=max_new))
+        out.update(eng.run())
+    return out, eng
+
+
+# ==========================================================================
+# Allocator refcount invariants
+# ==========================================================================
+def _check_invariant(a: BlockAllocator):
+    """Every non-zero block is exactly one of: free, or held at rc >= 1."""
+    free, held = set(a._free), set(a.refcounts)
+    assert not (free & held), "block simultaneously free and referenced"
+    assert len(a._free) == len(free), "duplicate id on the free list"
+    assert free | held | {ZERO_BLOCK} == set(range(a.num_blocks))
+    assert all(rc >= 1 for rc in a.refcounts.values())
+
+
+class TestRefcountedAllocator:
+    def test_shared_block_survives_free(self):
+        a = BlockAllocator(9, 8)
+        got = a.alloc(1, 3)
+        a.take_ref(got[1])  # simulate cache retention
+        freed = a.free(1)
+        assert got[1] not in freed and got[1] not in a._free
+        assert a.refcount(got[1]) == 1
+        _check_invariant(a)
+        assert a.release_ref(got[1]) is True  # last holder frees it
+        assert a.num_free == 8
+        _check_invariant(a)
+
+    def test_take_ref_on_free_block_raises(self):
+        a = BlockAllocator(9, 8)
+        with pytest.raises(ValueError):
+            a.take_ref(3)
+
+    def test_attach_shared_prepends_and_cow_breaks_sharing(self):
+        a = BlockAllocator(17, 8)
+        owner = a.alloc(1, 3)
+        a.attach_shared(2, owner)
+        assert a.tables[2] == owner
+        assert [a.refcount(b) for b in owner] == [2, 2, 2]
+        a.alloc(2, 1)  # tail grows past the shared span
+        assert a.tables[2][:3] == owner and len(a.tables[2]) == 4
+        old, new = a.cow(2, 1)
+        assert (old, new) == (owner[1], a.tables[2][1])
+        assert new != old and a.refcount(old) == 1 and a.refcount(new) == 1
+        assert a.tables[1] == owner  # the other holder's view is untouched
+        _check_invariant(a)
+        a.free(2)
+        a.free(1)
+        assert a.num_free == 16
+        _check_invariant(a)
+
+    def test_defragment_pins_shared_blocks(self):
+        a = BlockAllocator(17, 8)
+        a.alloc(1, 3)  # blocks 1..3
+        a.alloc(2, 4)  # blocks 4..7
+        pinned = a.tables[2][3]  # block 7
+        a.take_ref(pinned)  # rc 2: shared -> must not move
+        a.free(1)  # hole at 1..3
+        mapping = a.defragment()
+        assert pinned not in mapping and pinned not in mapping.values()
+        assert a.tables[2] == [1, 2, 3, pinned]
+        assert a.refcount(pinned) == 2
+        _check_invariant(a)
+
+    def test_pool_pressure_evicts_cache_only_entries(self):
+        a = BlockAllocator(9, 4)  # 8 usable
+        pc = PrefixCache(a)
+        a.alloc(0, 4)
+        pc.insert(list(range(16)), a.tables[0], logits=np.zeros(4))
+        # owner still maps the blocks (rc 2): not reclaimable, no progress
+        assert a.alloc(1, 5) is None
+        assert pc.stats()["evictions"] == 0 and a.num_free == 4
+        a.free(0)  # cache becomes sole holder (rc 1): reclaimable
+        assert a.can_alloc(6)
+        got = a.alloc(1, 6)  # shortfall LRU-evicts the entry mid-alloc
+        assert got is not None and len(got) == 6
+        st = pc.stats()
+        assert st["evictions"] == 1 and st["entries"] == 0
+        _check_invariant(a)
+
+
+# ==========================================================================
+# Content hashing + index
+# ==========================================================================
+class TestPrefixHashing:
+    def test_chained_digests_fingerprint_whole_prefix(self):
+        p = list(range(100, 120))  # 5 full blocks of 4
+        h = PrefixCache.block_hashes(p, 4)
+        assert len(h) == 5
+        for i in range(5):
+            assert h[i] == PrefixCache.block_hashes(p[: 4 * (i + 1)], 4)[-1]
+        # flip one token in block 0: EVERY downstream digest changes
+        p2 = [999] + p[1:]
+        h2 = PrefixCache.block_hashes(p2, 4)
+        assert all(x != y for x, y in zip(h, h2))
+        assert PrefixCache.block_hashes(p[:3], 4) == []  # sub-block prompt
+
+    def test_match_longest_and_full_hit(self):
+        a = BlockAllocator(33, 4)
+        pc = PrefixCache(a)
+        p1 = list(range(100, 114))  # 14 tokens: 3 full blocks + tail of 2
+        a.alloc(0, 4)
+        e = pc.insert(p1, a.tables[0], stat_points={14: []},
+                      logits=np.zeros(8))
+        assert e is not None and [a.refcount(b) for b in e.blocks] == [2] * 4
+        got = pc.match(p1[:12] + [7, 7, 7, 7])  # diverges after block 3
+        assert got is not None and got[1] == 3
+        assert not pc.is_full_hit(got[0], p1[:12] + [7, 7, 7, 7], 3)
+        got = pc.match(p1)
+        assert got[1] == 3 and pc.is_full_hit(got[0], p1, 3)
+        assert pc.match([7] * 14) is None
+
+    def test_insert_first_wins_without_ref_leak(self):
+        a = BlockAllocator(33, 4)
+        pc = PrefixCache(a)
+        p = list(range(12))
+        a.alloc(0, 3)
+        e = pc.insert(p, a.tables[0])
+        assert e is not None
+        a.alloc(1, 3)
+        # identical prompt from another request: every boundary already
+        # indexed -> refused BEFORE taking any references
+        assert pc.insert(p, a.tables[1]) is None
+        assert [a.refcount(b) for b in a.tables[1]] == [1, 1, 1]
+        assert pc.stats()["entries"] == 1
+
+    def test_max_blocks_cap_evicts_lru(self):
+        a = BlockAllocator(33, 4)
+        pc = PrefixCache(a, max_blocks=4)
+        a.alloc(0, 3)
+        pc.insert(list(range(12)), a.tables[0])
+        a.alloc(1, 3)
+        pc.insert(list(range(50, 62)), a.tables[1])
+        st = pc.stats()
+        assert st["evictions"] == 1 and st["blocks"] <= 4
+        _check_invariant(a)
+
+
+# ==========================================================================
+# Landmark-sum re-segmentation
+# ==========================================================================
+class TestResegmentSums:
+    def test_fine_to_coarse_matches_direct_sums(self):
+        from repro.serve.decode_state import resegment_sums
+
+        rng = np.random.default_rng(60)
+        B, H, c, d = 1, 2, 8, 4
+        sums = jnp.asarray(rng.normal(size=(B, H, c, d)), jnp.float32)
+        out = np.asarray(resegment_sums(sums, 2, 4))  # m=2 fine rows per row
+        ref = np.zeros_like(out)
+        ref[..., : c // 2, :] = np.asarray(sums).reshape(
+            B, H, c // 2, 2, d).sum(3)
+        np.testing.assert_allclose(out, ref, atol=1e-6, rtol=1e-6)
+
+    def test_token_level_oracle(self):
+        """Re-segmenting per-segment token sums == summing the tokens under
+        the coarse segmentation directly."""
+        from repro.serve.decode_state import resegment_sums
+
+        rng = np.random.default_rng(61)
+        c, d, seg_f, seg_c = 8, 4, 2, 8
+        n = c * seg_f  # tokens fill every fine segment
+        toks = rng.normal(size=(n, d)).astype(np.float32)
+        fine = np.stack([toks[j * seg_f:(j + 1) * seg_f].sum(0)
+                         for j in range(c)])
+        coarse = np.zeros((c, d), np.float32)
+        for j in range(-(-n // seg_c)):
+            coarse[j] = toks[j * seg_c:(j + 1) * seg_c].sum(0)
+        got = np.asarray(resegment_sums(
+            jnp.asarray(fine)[None, None], seg_f, seg_c))[0, 0]
+        np.testing.assert_allclose(got, coarse, atol=1e-5, rtol=1e-5)
+
+    def test_identity_and_divisibility(self):
+        from repro.serve.decode_state import resegment_sums
+
+        sums = jnp.ones((1, 1, 4, 2))
+        assert resegment_sums(sums, 4, 4) is sums
+        with pytest.raises(ValueError):
+            resegment_sums(sums, 3, 4)
+
+
+# ==========================================================================
+# Engine: attach paths vs cold prefill
+# ==========================================================================
+class TestEnginePrefixCache:
+    def test_full_hit_aligned_token_identical(self, qwen):
+        """Block-aligned full hit: warm request skips prefill entirely
+        (first token from cached logits) and stays greedy-identical."""
+        cfg, params = qwen
+        p = _prompt(cfg, 40, seed=50)  # 5 full blocks, no partial tail
+        ref, _ = _serve_seq(cfg, params, COLD, [p, p])
+        out, eng = _serve_seq(cfg, params, PREFIX, [p, p])
+        assert out == ref and out[0] == out[1]
+        st = eng.stats()
+        assert st["prefix"]["hits"] == 1 and st["prefix"]["misses"] == 1
+        assert st["cow_copies"] == 0  # no shared partial block to break
+
+    def test_full_hit_unaligned_cow_divergence(self, qwen):
+        """Unaligned full hit shares the partial last block; both the owner
+        and the warm request copy-on-write it before their first divergent
+        decode write — outputs stay identical to cold."""
+        cfg, params = qwen
+        p = _prompt(cfg, 37, seed=51)  # 37 % 8 != 0: shared partial block
+        ref, _ = _serve_seq(cfg, params, COLD, [p, p])
+        out, eng = _serve_seq(cfg, params, PREFIX, [p, p])
+        assert out == ref
+        st = eng.stats()
+        assert st["prefix"]["hits"] == 1
+        assert st["cow_copies"] > 0
+
+    def test_partial_hit_resumes_chunked_prefill(self, qwen):
+        """Shared 40-token prefix, distinct tails: the warm request attaches
+        the shared blocks + the deepest stat point and resumes chunked
+        prefill over its tail only — token-identical to cold."""
+        cfg, params = qwen
+        shared = _prompt(cfg, 40, seed=52)
+        pa = shared + _prompt(cfg, 13, seed=53)
+        pb = shared + _prompt(cfg, 13, seed=54)
+        ref, _ = _serve_seq(cfg, params, COLD, [pa, pb])
+        out, eng = _serve_seq(cfg, params, PREFIX, [pa, pb])
+        assert out == ref
+        st = eng.stats()
+        assert st["prefix"]["hits"] == 1
+        assert st["prefix"]["entries"] == 2  # deeper prompt re-cached too
+
+    def test_dense_engine_ignores_prefix_flag(self, qwen):
+        """No paged leaves -> the flag is inert, outputs match the plain
+        dense engine, no prefix stats are surfaced."""
+        cfg, params = qwen
+        dense = dataclasses.replace(
+            PREFIX, paged=False, chunked_prefill=True)
+        p = _prompt(cfg, 24, seed=55)
+        ref, _ = _serve_seq(
+            cfg, params, dataclasses.replace(COLD, paged=False), [p, p])
+        out, eng = _serve_seq(cfg, params, dense, [p, p])
+        assert out == ref
+        assert "prefix" not in eng.stats()
+
+    @pytest.mark.parametrize("attach", ["reseg", "recompute"])
+    def test_streaming_modes_warm_equals_cold(self, qwen, attach):
+        """Both attach strategies, exact + frozen streaming: a warm full
+        hit reproduces the cold run's greedy tokens."""
+        cfg, params = qwen
+        p = _prompt(cfg, 37, seed=56)
+        for mode in ("exact", "frozen"):
+            mcfg = dataclasses.replace(cfg, decode_streaming=mode)
+            serve = dataclasses.replace(PREFIX, prefix_attach=attach)
+            ref, _ = _serve_seq(mcfg, params, COLD, [p, p])
+            out, eng = _serve_seq(mcfg, params, serve, [p, p])
+            assert out == ref, f"warm != cold under {mode}/{attach}"
+            assert eng.stats()["prefix"]["hits"] == 1
+
+    def test_preempt_requeue_prefix_stays_cached(self, qwen):
+        """Pool pressure preempts a lane mid-decode; the shared prefix
+        entry is held by the other lanes' tables (not reclaimable), so the
+        requeued request re-attaches it instead of re-prefilling — and all
+        outputs match the dense reference."""
+        cfg, params = qwen
+        p = _prompt(cfg, 20, seed=57)
+        reqs = [Request(u, list(p), max_new_tokens=30) for u in range(4)]
+        dense = dataclasses.replace(
+            BASE, paged=False, batched_prefill=False, max_lanes=3)
+        eng_d = ServeEngine(cfg, params, serve=dense)
+        for r in reqs:
+            eng_d.submit(Request(r.uid, list(p), r.max_new_tokens))
+        ref = eng_d.run()
+        serve = dataclasses.replace(
+            PREFIX, max_lanes=3, num_blocks=12)
+        eng = ServeEngine(cfg, params, serve=serve)
+        for r in reqs:
+            eng.submit(Request(r.uid, list(p), r.max_new_tokens))
+        out = eng.run()
+        st = eng.stats()
+        assert st["preemptions"] > 0, "pool should have forced preemption"
+        assert st["finished"] == 4
+        assert st["prefix"]["hits"] >= 1  # incl. the post-preempt re-attach
+        assert out == ref
+
+    def test_telemetry_counters_and_trace(self, qwen):
+        """Flight recorder carries prefix_attach + cow lifeline events and
+        the Perfetto export renders them on a structurally valid trace."""
+        from repro.telemetry.export import chrome_trace, validate_trace
+
+        cfg, params = qwen
+        serve = dataclasses.replace(PREFIX, telemetry=True)
+        p = _prompt(cfg, 37, seed=58)  # unaligned: exercises cow events too
+        _, eng = _serve_seq(cfg, params, serve, [p, p])
+        st = eng.stats()
+        assert st["prefix"]["hits"] == 1 and st["prefix"]["misses"] == 1
+        assert st["cow_copies"] > 0
+        kinds = eng.telemetry.flight.lifeline(1).kinds()
+        assert "prefix_attach" in kinds and "cow" in kinds
+        assert "prefill_start" not in kinds  # full hit: no prefill at all
+        trace = chrome_trace(eng.telemetry)
+        assert validate_trace(trace) == []
+        names = {e.get("name") for e in trace["traceEvents"]}
+        assert "prefix_attach" in names and "cow" in names
+        # attach is accounted as its own XLA program family
+        assert "prefix_attach" in st.get("xla_compiles", {})
