@@ -218,6 +218,9 @@ class ServeEngine:
             )
             self.sched.prefix_probe = self._prefix_probe
             self.sched.cow_cb = self.kv.copy_block
+            # uid -> entry soft-pinned at probe time, released on attach
+            # (see _prefix_probe); at most one pin per waiting request
+            self._probe_pins: dict[int, object] = {}
         if self.telemetry.enabled:
             reg = self.telemetry.metrics
             self._ticks_total = reg.counter(
@@ -515,8 +518,27 @@ class ServeEngine:
 
     def _prefix_probe(self, req: Request) -> int:
         """Scheduler hook: leading prompt tokens a cached prefix will cover
-        at admission (0 = cold), so admission charges the tail only."""
+        at admission (0 = cold), so admission charges the tail only.
+
+        The matched entry is soft-pinned (LRU-bumped, last in eviction
+        order) until ``_try_attach_prefix`` releases it: between probe and
+        attach the entry is still cache-only (no table references it yet),
+        so this admission's own tail alloc — or a later admission's in the
+        same tick — could otherwise reclaim it, silently turning the
+        tail-only-charged hit into a cold miss. The pin rides across ticks
+        while the request waits at the queue head and is re-pointed if a
+        re-probe matches a different entry."""
         plan = self._plan_attach(req)
+        entry = plan[0] if plan is not None else None
+        prev = self._probe_pins.pop(req.uid, None)
+        if prev is not None and prev is not entry:
+            self.prefix.unpin(prev)
+        if entry is not None:
+            if prev is entry:
+                self.prefix.touch(entry)
+            else:
+                self.prefix.pin(entry)
+            self._probe_pins[req.uid] = entry
         return plan[1] if plan is not None else 0
 
     def _try_attach_prefix(self, i: int, req: Request) -> bool:
@@ -527,6 +549,12 @@ class ServeEngine:
         the first token straight from the cached logits (full hit: TTFT is
         one host-side attach, no prefill pass) or resume chunked prefill at
         the boundary (partial hit). Returns True when attached."""
+        pinned = self._probe_pins.pop(req.uid, None)
+        if pinned is not None:
+            # The admission window is over; nothing can evict the entry
+            # between here and attach_shared (pure host code, no allocs),
+            # and the attach itself adds a table reference.
+            self.prefix.unpin(pinned)
         plan = self._plan_attach(req)
         if plan is None:
             if self.prefix is not None:
@@ -871,52 +899,81 @@ class ServeEngine:
         pending_first: list[tuple[int, object, int]] = []
         launched = 0
         bs = self.serve.block_size
-        for i in prefilling:
-            if launched >= max_chunks:
-                break
-            lane = self.lanes[i]
-            req = lane.req
-            start = lane.prefill_pos
-            cv = min(self._chunk, len(req.prompt) - start)
-            if not self.sched.ensure_prefill_blocks(i, start + cv):
-                continue  # pool dry: the chunk stalls, never evicts a decoder
-            ctoks = np.zeros((1, self._chunk), np.int32)
-            ctoks[0, :cv] = req.prompt[start:start + cv]
-            from repro.serve.paged import bucket_view_slots
+        dispatching = True
+        while dispatching:
+            dispatching = False
+            for i in prefilling:
+                if launched >= max_chunks:
+                    break
+                if self.lanes[i].free:
+                    continue  # preempted by a deadlock break this tick
+                lane = self.lanes[i]
+                req = lane.req
+                start = lane.prefill_pos
+                cv = min(self._chunk, len(req.prompt) - start)
+                if not self.sched.ensure_prefill_blocks(i, start + cv):
+                    # pool dry: the chunk stalls, never evicts a decoder
+                    continue
+                ctoks = np.zeros((1, self._chunk), np.int32)
+                ctoks[0, :cv] = req.prompt[start:start + cv]
+                from repro.serve.paged import bucket_view_slots
 
-            # the sliced row must span the committed prefix AND the chunk's
-            # destination slots (the commit scatter reads its block ids from
-            # this row; the wrapper's ZERO_BLOCK padding is overrun guard
-            # only, not real slots)
-            nbv = bucket_view_slots(
-                start // bs + self._chunk // bs, self.serve.blocks_per_lane
-            )
-            row = self.sched.table_row(i)[:nbv] if self.kv.paged else None
-            with tel.span("prefill_chunk", lane=i, chunk=lane.chunk_idx):
-                lg, new_storage = self._chunk_step(
-                    self.kv._storage, row, ctoks, i, start, cv
+                # the sliced row must span the committed prefix AND the
+                # chunk's destination slots (the commit scatter reads its
+                # block ids from this row; the wrapper's ZERO_BLOCK padding
+                # is overrun guard only, not real slots)
+                nbv = bucket_view_slots(
+                    start // bs + self._chunk // bs, self.serve.blocks_per_lane
                 )
-                self.kv._storage = list(new_storage)
-            tel.flight.record(
-                req.uid, "prefill_chunk", tick=self._tick,
-                chunk=lane.chunk_idx, tok0=start, tok1=start + cv, lane=i,
-            )
-            lane.prefill_pos = start + cv
-            lane.chunk_idx += 1
-            launched += 1
-            if lane.prefill_pos >= len(req.prompt):
-                lane.prefilling = False
-                lane.pos = len(req.prompt)
-                lane.prefilled_tick = self._tick
-                pending_first.append((i, lg, cv))
-            elif self._prefix_enabled and lane.prefill_pos % bs == 0:
-                # Block-aligned chunk boundary: snapshot the carried dense
-                # state as a partial-hit resume point. The host copy forces
-                # a device sync mid-tick — the documented cost of building
-                # cache entries, paid only while a prefill runs with the
-                # prefix cache on (the final boundary rides the sample-
-                # boundary sync instead).
-                lane.stat_points[lane.prefill_pos] = self.kv.dense_snapshot(i)
+                row = self.sched.table_row(i)[:nbv] if self.kv.paged else None
+                with tel.span("prefill_chunk", lane=i, chunk=lane.chunk_idx):
+                    lg, new_storage = self._chunk_step(
+                        self.kv._storage, row, ctoks, i, start, cv
+                    )
+                    self.kv._storage = list(new_storage)
+                tel.flight.record(
+                    req.uid, "prefill_chunk", tick=self._tick,
+                    chunk=lane.chunk_idx, tok0=start, tok1=start + cv, lane=i,
+                )
+                lane.prefill_pos = start + cv
+                lane.chunk_idx += 1
+                launched += 1
+                if lane.prefill_pos >= len(req.prompt):
+                    lane.prefilling = False
+                    lane.pos = len(req.prompt)
+                    lane.prefilled_tick = self._tick
+                    pending_first.append((i, lg, cv))
+                elif self._prefix_enabled and lane.prefill_pos % bs == 0:
+                    # Block-aligned chunk boundary: snapshot the carried
+                    # dense state as a partial-hit resume point. The host
+                    # copy forces a device sync mid-tick — the documented
+                    # cost of building cache entries, paid only while a
+                    # prefill runs with the prefix cache on (the final
+                    # boundary rides the sample-boundary sync instead).
+                    lane.stat_points[lane.prefill_pos] = self.kv.dense_snapshot(i)
+
+            # ---- all-prefill deadlock breaker ----------------------------
+            # Every held lane stalled mid-prefill on a dry pool with no
+            # decode lane left whose retirement could free blocks: the
+            # chunk-stall rule ("a chunk never evicts a decoder") would
+            # livelock here, because the stalled prefills hold each other's
+            # growth room. Preempt the YOUNGEST stalled prefill and retry
+            # dispatch WITHIN this tick, so the FCFS head's
+            # ensure_prefill_blocks reclaims the victim's parked blocks
+            # before the victim can re-admit (it requeues at the queue
+            # front and would otherwise re-take the blocks next tick,
+            # thrashing forever). Cascades at most one lane per pass until
+            # the head launches. A single stalled lane is left alone: with
+            # the whole pool to itself the stall is a sizing error, and
+            # self-preemption would thrash instead of progress.
+            if not launched:
+                stalled = [i for i in prefilling if not self.lanes[i].free]
+                decoding = any(
+                    not l.free and not l.prefilling for l in self.lanes
+                )
+                if len(stalled) > 1 and not decoding and not self.sched.parked:
+                    self.sched.preempt(stalled[-1])
+                    dispatching = True
 
         # ---- ONE sync at the sample boundary -----------------------------
         logits = None

@@ -289,6 +289,7 @@ class PrefixEntry:
     stat_points: dict[int, list]
     logits: Optional[np.ndarray]
     last_used: int = 0
+    pins: int = 0  # in-flight admissions between probe and attach
 
 
 class PrefixCache:
@@ -305,13 +306,21 @@ class PrefixCache:
 
     The index holds one key per block boundary of each entry, first-wins on
     collision (an existing key's backing blocks stay authoritative; a later
-    identical prefix simply isn't re-cached). Eviction is LRU by last use;
-    ``reclaim_only`` eviction considers only entries whose every block has
-    refcount 1 (cache-only), because those are the ones whose eviction
-    actually grows the free list. Entry blocks carry one allocator
-    reference for the cache itself, so a shared prefix never re-enters the
-    free list while a live request still maps it — the allocator invariant
-    the defragmenter and ``reclaim_parked`` rely on."""
+    identical prefix simply isn't re-cached). Entries may OVERLAP: a
+    partial-hit completion inserts a longer entry whose leading blocks are
+    an earlier entry's — each entry takes its own allocator reference per
+    block, tracked here in ``_cache_refs`` so eviction can tell cache-held
+    references apart from live block tables. Eviction is LRU by last use;
+    ``reclaim_only`` eviction considers entries no live table references
+    (allocator refcount fully accounted for by cache entries), evicting
+    overlapping chains in cascade — any single eviction may free nothing
+    (its blocks still held by a longer entry), but each removes an entry,
+    so the allocator's shortfall loop keeps making progress until the
+    chain's blocks actually reach the free list. Entry blocks carry one
+    allocator reference per holding entry, so a shared prefix never
+    re-enters the free list while a live request still maps it — the
+    allocator invariant the defragmenter and ``reclaim_parked`` rely
+    on."""
 
     def __init__(self, allocator: BlockAllocator, max_blocks: int = 0,
                  registry=None):
@@ -322,6 +331,9 @@ class PrefixCache:
         self.max_blocks = max_blocks
         self._index: dict[bytes, tuple[PrefixEntry, int]] = {}
         self._entries: list[PrefixEntry] = []
+        # block id -> number of cache entries holding a reference on it
+        # (overlapping entries share blocks; see the class docstring)
+        self._cache_refs: dict[int, int] = {}
         self._clock = 0
         self.registry = registry if registry is not None else MetricsRegistry()
         r = self.registry
@@ -386,6 +398,24 @@ class PrefixCache:
     def note_miss(self) -> None:
         self._misses.inc()
 
+    def pin(self, entry: PrefixEntry) -> None:
+        """Soft-pin an entry across an admission window (probe -> attach),
+        bumping its LRU stamp: pinned entries are the LAST reclaim
+        candidates rather than excluded outright — a hard pin could
+        deadlock admission when the pinned entry's own blocks are the only
+        reclaimable room left, whereas evicting it merely downgrades the
+        accounted hit to a cold miss (which the attach path re-detects)."""
+        self.touch(entry)
+        entry.pins += 1
+
+    def unpin(self, entry: PrefixEntry) -> None:
+        entry.pins = max(entry.pins - 1, 0)
+
+    def touch(self, entry: PrefixEntry) -> None:
+        """LRU-bump without pinning (re-probe of an already-pinned entry)."""
+        self._clock += 1
+        entry.last_used = self._clock
+
     # -- insertion / eviction -------------------------------------------------
     def insert(self, prompt, blocks, stat_points=None,
                logits=None) -> Optional[PrefixEntry]:
@@ -418,6 +448,7 @@ class PrefixCache:
             return None
         for b in blocks:
             self.allocator.take_ref(b)
+            self._cache_refs[b] = self._cache_refs.get(b, 0) + 1
         self._entries.append(entry)
         while (
             self.max_blocks > 0 and self.block_count() > self.max_blocks
@@ -427,32 +458,54 @@ class PrefixCache:
         return entry
 
     def _reclaimable(self, entry: PrefixEntry) -> bool:
-        return all(self.allocator.refcount(b) == 1 for b in entry.blocks)
+        """No live block table references any of the entry's blocks: the
+        allocator refcount is fully accounted for by cache entries. Such
+        entries are safe eviction fodder even when overlapping entries
+        keep some blocks resident — the sweep cascades down the chain."""
+        return all(
+            self.allocator.refcount(b) == self._cache_refs.get(b, 0)
+            for b in entry.blocks
+        )
 
     def evictable_blocks(self) -> int:
-        """Blocks an eviction sweep could return to the free list right
-        now (entries no live table still references)."""
-        return sum(
-            len(e.blocks) for e in self._entries if self._reclaimable(e)
-        )
+        """Distinct blocks a full reclaim-only eviction sweep would return
+        to the free list right now: blocks of cache-only entries, minus
+        any also held by an entry some live table still references (those
+        survive the sweep). Exact — ``can_alloc`` promises on it."""
+        freeable: set[int] = set()
+        held: set[int] = set()
+        for e in self._entries:
+            (freeable if self._reclaimable(e) else held).update(e.blocks)
+        return len(freeable - held)
 
     def evict_one(self, reclaim_only: bool = False) -> bool:
         """Drop the LRU entry. ``reclaim_only`` restricts candidates to
-        entries whose blocks all free immediately (allocator shortfall
-        path, where progress requires the free list to grow)."""
+        entries no live table references (allocator shortfall path):
+        evicting those in LRU order cascades overlapping prefix chains —
+        one eviction may free nothing (its blocks still held by a longer
+        entry), but each removes an entry, so the shortfall loop either
+        reaches the free list or runs out of candidates. Soft-pinned
+        entries (an admission in flight between probe and attach) are
+        taken only when no unpinned candidate remains."""
         cands = [
             e for e in self._entries
             if not reclaim_only or self._reclaimable(e)
         ]
         if not cands:
             return False
-        victim = min(cands, key=lambda e: e.last_used)
+        unpinned = [e for e in cands if not e.pins]
+        victim = min(unpinned or cands, key=lambda e: e.last_used)
         for d in victim.hashes:
             got = self._index.get(d)
             if got is not None and got[0] is victim:
                 del self._index[d]
         self._entries.remove(victim)
         for b in victim.blocks:
+            rc = self._cache_refs[b] - 1
+            if rc:
+                self._cache_refs[b] = rc
+            else:
+                del self._cache_refs[b]
             self.allocator.release_ref(b)
         self._evictions.inc()
         return True
@@ -462,6 +515,9 @@ class PrefixCache:
         (Digests are content-addressed and don't change.)"""
         for e in self._entries:
             e.blocks = [mapping.get(b, b) for b in e.blocks]
+        self._cache_refs = {
+            mapping.get(b, b): rc for b, rc in self._cache_refs.items()
+        }
 
     def block_count(self) -> int:
         return sum(len(e.blocks) for e in self._entries)

@@ -433,10 +433,13 @@ class Scheduler:
                 self._ttft_s.observe(now - t.arrived_s)
                 if uid in self._warm_uids:
                     self._warm_ttft_s.observe(now - t.arrived_s)
-        if uid in self._warm_uids and t.first_token >= 0:
-            self._warm_uids.discard(uid)
         elif t.last_token_s is not None:
             self._itl_s.observe(now - t.last_token_s)
+        # Warm marking is one-shot: every branch above leaves first_token
+        # set, so the flag is spent once any token has been observed. A
+        # standalone statement — folding it into the if-chain above would
+        # detach the ITL elif from the requeue/first-token branches.
+        self._warm_uids.discard(uid)
         t.last_token_s = now
         t.new_tokens += 1
         self._tokens.inc()

@@ -136,6 +136,33 @@ class TestChunkedPreemption:
         ref, _ = _outputs(cfg, params, _base(), prompts, max_new=10)
         assert out == ref
 
+    def test_all_prefill_deadlock_breaks(self, qwen):
+        """Back-to-back admissions can leave EVERY lane stalled mid-prefill
+        on a dry pool with no decode lane whose retirement could free
+        blocks — the chunk-stall rule alone would livelock (stalled
+        prefills hold each other's growth room, and the requeued victim
+        re-admits for its parked blocks before the head can take them).
+        The in-tick breaker preempts the youngest stalled prefill and
+        retries dispatch in the same tick so the FCFS head reclaims the
+        blocks first; the batch must drain with outputs identical to an
+        uncontended pool."""
+        cfg, params = qwen
+        prompts = _prompts(cfg, lens=(40, 40, 40, 40), seed=2)
+
+        def cfg4(**kw):
+            return ServeConfig(
+                max_lanes=4, max_seq=64, block_size=8, paged=True,
+                batched_prefill=True, chunked_prefill=True,
+                prefill_chunk_tokens=16, **kw,
+            )
+
+        out, eng = _outputs(cfg, params, cfg4(num_blocks=10), prompts)
+        st = eng.stats()
+        assert len(out) == 4          # nothing starved at the tick cap
+        assert st["preemptions"] >= 1  # the breaker had to fire
+        ref, _ = _outputs(cfg, params, cfg4(), prompts)
+        assert out == ref
+
     def test_resume_ttft_histogram_routing(self):
         """The first post-resume token lands in serve_resume_ttft_seconds —
         never in ttft (already observed) and never in itl (the gap is

@@ -129,6 +129,76 @@ class TestRefcountedAllocator:
         assert st["evictions"] == 1 and st["entries"] == 0
         _check_invariant(a)
 
+    def test_overlapping_entries_cascade_evict_under_pressure(self):
+        """Partial-hit completion inserts a longer entry whose leading
+        blocks are an earlier entry's (rc 2 from the cache alone). Once no
+        live table maps the chain it must still be reclaimable — evicting
+        in cascade — or the blocks leak into frozen entries until
+        admissions stall."""
+        a = BlockAllocator(9, 4)  # 8 usable
+        pc = PrefixCache(a)
+        p = list(range(8))  # 2 full blocks
+        a.alloc(0, 2)
+        e1 = pc.insert(p, a.tables[0], logits=np.zeros(4))
+        # uid 1 attaches the cached prefix, extends 2 blocks, completes
+        a.attach_shared(1, e1.blocks)
+        a.alloc(1, 2)
+        e2 = pc.insert(p + list(range(50, 58)), a.tables[1],
+                       logits=np.zeros(4))
+        assert e2 is not None and e2.blocks[:2] == e1.blocks
+        a.free(0)
+        a.free(1)
+        # cache-only chain: shared blocks rc 2 (two entries), tails rc 1
+        assert [a.refcount(b) for b in e1.blocks] == [2, 2]
+        assert pc.evictable_blocks() == 4  # distinct, not double-counted
+        assert a.can_alloc(8)
+        got = a.alloc(2, 8)  # shortfall cascades through both entries
+        assert got is not None and len(got) == 8
+        st = pc.stats()
+        assert st["entries"] == 0 and st["evictions"] == 2
+        assert pc._cache_refs == {}
+        _check_invariant(a)
+
+    def test_cascade_respects_live_extension_holder(self):
+        """A live table mapping the longer entry keeps the WHOLE chain
+        non-reclaimable: pressure must not free anything the table still
+        reads, and the shortfall reports failure instead."""
+        a = BlockAllocator(9, 4)
+        pc = PrefixCache(a)
+        p = list(range(8))
+        a.alloc(0, 2)
+        e1 = pc.insert(p, a.tables[0], logits=np.zeros(4))
+        a.attach_shared(1, e1.blocks)
+        a.alloc(1, 2)
+        pc.insert(p + list(range(50, 58)), a.tables[1], logits=np.zeros(4))
+        a.free(0)  # uid 1 still live and maps all four blocks
+        assert pc.evictable_blocks() == 0
+        assert a.alloc(2, 5) is None
+        assert set(a.tables[1]).isdisjoint(a._free)
+        assert pc.stats()["evictions"] == 0
+        _check_invariant(a)
+
+    def test_probe_pin_is_soft_and_deprioritized(self):
+        """A soft-pinned entry (admission in flight between probe and
+        attach) is evicted only after every unpinned candidate — but IS
+        evicted when it is the only room left, so admission can't
+        deadlock on its own pin."""
+        a = BlockAllocator(9, 4)
+        pc = PrefixCache(a)
+        a.alloc(0, 2)
+        e1 = pc.insert(list(range(8)), a.tables[0], logits=np.zeros(4))
+        a.alloc(1, 2)
+        e2 = pc.insert(list(range(50, 58)), a.tables[1], logits=np.zeros(4))
+        a.free(0)
+        a.free(1)
+        pc.pin(e1)
+        pc.touch(e2)  # e2 is now MRU: plain LRU would pick e1 first
+        assert a.alloc(2, 6) is not None  # needs 2 evicted blocks
+        assert e1 in pc._entries and e2 not in pc._entries
+        assert a.alloc(3, 2) is not None  # only the pinned entry remains
+        assert pc.stats()["entries"] == 0
+        _check_invariant(a)
+
 
 # ==========================================================================
 # Content hashing + index
@@ -348,3 +418,31 @@ class TestEnginePrefixCache:
         assert "prefix_attach" in names and "cow" in names
         # attach is accounted as its own XLA program family
         assert "prefix_attach" in st.get("xla_compiles", {})
+
+    def test_warm_flag_never_detaches_itl_chain(self):
+        """``mark_prefix_hit``'s one-shot warm flag is consumed by a
+        standalone discard: the ITL elif stays chained to the requeue /
+        first-token branches, so a post-requeue resume token lands in
+        resume_ttft only — never additionally in itl."""
+        from repro.serve.scheduler import Scheduler
+
+        alloc = BlockAllocator(17, 8)
+        sched = Scheduler(alloc, max_lanes=1, blocks_per_lane=8)
+        req = Request(0, list(range(10)), max_new_tokens=4)
+        sched.requeue_cb = lambda lane: req
+        sched.submit(req)
+        assert sched.admit()
+        sched.mark_prefix_hit(0)
+        sched.note_token(0)  # warm first token
+        assert sched._ttft_s.count == 1 and sched._warm_ttft_s.count == 1
+        assert 0 not in sched._warm_uids  # one-shot: spent at first token
+        sched.note_token(0)
+        assert sched._itl_s.count == 1
+        sched.preempt(0)
+        assert sched.admit()
+        sched.note_token(0)  # resume token: resume_ttft only
+        assert sched._resume_ttft_s.count == 1
+        assert sched._itl_s.count == 1  # requeue gap never counted as ITL
+        sched.note_token(0)  # steady cadence resumes
+        assert sched._itl_s.count == 2
+        assert sched._warm_ttft_s.count == 1
