@@ -31,6 +31,12 @@ logits with zero prefill compute) and sweeps a seeded shared-prefix
 request stream for the hit rate; warm outputs are asserted
 greedy-identical to cold in-line.
 
+The chaos cell replays the Poisson trace once more under a fixed
+performance-fault plan (``repro.serve.chaos``: dropped samples, allocation
+failures, scrambled free lists) and reports the degraded ITL tail plus the
+goodput fraction surviving relative to the fault-free run — outputs are
+asserted token-identical, so the delta is pure recovery overhead.
+
     PYTHONPATH=src python -m benchmarks.run --only serve
     REPRO_BENCH_SMOKE=1 ... (one prompt length, fewer reps, for CI)
 """
@@ -298,6 +304,65 @@ def _prefix_cell(cfg, params, csv_rows: list[str]) -> None:
           f"({pst['hits']}/{pst['hits'] + pst['misses']})")
 
 
+def _chaos_cell(cfg, params, csv_rows: list[str]) -> None:
+    """Graceful degradation under injected faults: the SAME seeded Poisson
+    trace replayed fault-free and under a fixed performance-fault plan
+    (dropped device samples, allocation failures, scrambled free lists) on
+    the chunked-prefill engine with the watchdog armed.
+
+    These fault sites cost ticks, never tokens — the timed requests'
+    outputs are asserted greedy-identical to the fault-free run in-line —
+    so the cell measures pure serving resilience: how much goodput
+    survives (``goodput_frac``) and how far the ITL tail stretches while
+    the engine retries allocations and re-samples dropped tokens."""
+    from repro.serve.chaos import FaultPlan, FaultRule
+
+    serve = dataclasses.replace(
+        _serve_cfg(True, 2), chunked_prefill=True,
+        prefill_chunk_tokens=32, prefill_token_budget=32,
+        watchdog_ticks=64,
+    )
+    plan = FaultPlan(seed=POISSON_SEED, rules=(
+        FaultRule("drop_sample", rate=0.05),
+        FaultRule("alloc_fail", rate=0.05),
+        FaultRule("fragment", rate=0.25),
+    ))
+    out: dict[str, dict] = {}
+    engines: dict[str, ServeEngine] = {}
+    for name, chaos in (("clean", None), ("chaos", plan)):
+        eng = ServeEngine(cfg, params, serve=serve, chaos=chaos)
+        replay_trace(eng, poisson_trace(
+            seed=POISSON_SEED, uid_offset=10_000,
+            vocab_size=cfg.vocab_size, **POISSON))  # warm: compile everything
+        t0 = time.perf_counter()
+        stamps = replay_trace(eng, poisson_trace(
+            seed=POISSON_SEED, vocab_size=cfg.vocab_size, **POISSON))
+        dt = time.perf_counter() - t0
+        toks = sum(len(v) for u, v in eng.finished.items()
+                   if u < 10_000 and eng.outcomes.get(u) == "finished")
+        out[name] = {"goodput": toks / dt, **latency_metrics(stamps)}
+        engines[name] = eng
+    for u in range(POISSON["n_requests"]):
+        assert engines["clean"].finished.get(u) == \
+            engines["chaos"].finished.get(u), \
+            f"chaos changed tokens for uid {u} — faults must cost ticks only"
+    frac = out["chaos"]["goodput"] / max(out["clean"]["goodput"], 1e-9)
+    injections = engines["chaos"].chaos.injections
+    cell = "paged|chaos|degraded"
+    _record(cell, "itl_p99_s", out["chaos"]["itl_p99_s"])
+    _record(cell, "goodput_tok_per_s", out["chaos"]["goodput"])
+    _record(cell, "goodput_frac", frac)
+    _record(cell, "chaos_injections", injections)
+    csv_rows.append(f"serve,chaos,itl_p99_s,{out['chaos']['itl_p99_s']:.4f}")
+    csv_rows.append(
+        f"serve,chaos,goodput_tok_per_s,{out['chaos']['goodput']:.1f}")
+    csv_rows.append(f"serve,chaos,goodput_frac,{frac:.3f}")
+    csv_rows.append(f"serve,chaos,chaos_injections,{injections}")
+    print(f"[bench_serve] chaos: goodput {out['chaos']['goodput']:.1f} tok/s "
+          f"({frac:.2f}x clean), itl p99 {out['chaos']['itl_p99_s']:.4f}s, "
+          f"{injections} injections")
+
+
 def write_json() -> None:
     from benchmarks.run import write_bench  # lazy: avoids an import cycle
 
@@ -360,6 +425,7 @@ def run(csv_rows: list[str]) -> None:
         trace_path=os.environ.get("REPRO_TRACE_JSON", TRACE_PATH),
     )
     _prefix_cell(cfg, params, csv_rows)
+    _chaos_cell(cfg, params, csv_rows)
     write_json()
 
 

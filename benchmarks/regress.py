@@ -27,7 +27,11 @@ Tolerance policy (see ``metric_policy``): metrics are classified by name —
   modulo seeding, so a band this tight catches real approximation changes;
 * prefix-cache metrics: ``ttft_warm_*`` is wall-clock lower-better (the
   cached-hit latency contract), ``*hit_rate*`` is pinned ±1% (the request
-  stream is seeded, so the rate is a scheduling fact, not a measurement).
+  stream is seeded, so the rate is a scheduling fact, not a measurement);
+* chaos-harness counters (``*injection*``, ``*quarantine*``,
+  ``*demotion*``, ``*watchdog*``) are pinned ±1% — the fault schedule is
+  seeded, so a moved count is a behaviour change, not noise; the surviving
+  ``goodput_frac`` is higher-better with the wall band.
 
 Cells/metrics present on only one side are skipped (smoke runs produce a
 subset of the committed full grid; new cells have no baseline yet). A
@@ -67,9 +71,21 @@ def metric_policy(metric: str, wall_tol: float = DEFAULT_WALL_TOL) -> Optional[P
     m = metric.lower()
     if m.endswith(("_bytes", "_ticks", "_blocks", "_flops")) or "cost_bytes" in m:
         return Policy("both", 0.01, 0.5)
+    # chaos-harness counters are facts of the seeded fault schedule (each
+    # firing derives from (seed, site, tick, ordinal)): pinned like
+    # structural metrics — drift means the injection points moved, not
+    # that the machine got slower
+    if ("injection" in m or "quarantine" in m or "demotion" in m
+            or "watchdog" in m):
+        return Policy("both", 0.01, 0.5)
     # throughput before the wall-clock suffix rule: "tok_per_s" ends in
     # "_s" but is higher-is-better, not a latency
     if "per_s" in m or "throughput" in m or "speedup" in m:
+        return Policy("higher", wall_tol, 0.0, wall=True)
+    # goodput surviving chaos, as a fraction of the fault-free run: a
+    # ratio of two walls on the same host, higher-better with the wall
+    # band (absolute goodput_tok_per_s hits the *per_s* rule above)
+    if "goodput_frac" in m:
         return Policy("higher", wall_tol, 0.0, wall=True)
     # prefix-cache cells: warm TTFT is the contract the cache exists for —
     # same lower-better wall band as any latency, but named explicitly so

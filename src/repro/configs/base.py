@@ -258,6 +258,46 @@ class ServeConfig:
                                    # off. Each probe forces a host sync, so
                                    # this is a cadence, not a boolean.
                                    # Requires telemetry=True to count.
+    max_queue: int = 0            # admission-queue bound: a submit() that
+                                  # would grow the waiting queue past this
+                                  # is REJECTED (engine.submit returns
+                                  # False, serve_rejected_total counts it,
+                                  # the flight "reject" event carries a
+                                  # retry_after_ticks hint). 0 = unbounded
+                                  # (the pre-backpressure behavior).
+    watchdog_ticks: int = 0       # no-progress watchdog: after N
+                                  # consecutive ticks with work pending but
+                                  # zero progress (no token, no chunk, no
+                                  # prefill, no admission) the engine walks
+                                  # the escalation ladder — reclaim parked
+                                  # blocks, preempt the youngest lane, and
+                                  # only as the last rung raise a
+                                  # structured EngineStalled. 0 = off. A
+                                  # healthy run never trips it, so any
+                                  # value is output-identical to 0.
+    numerics_guard: bool = False  # online non-finite defense for the
+                                  # streaming decode state: after every
+                                  # decode dispatch, check each active
+                                  # lane's logits row and landmark
+                                  # (m, l, acc) stats on the host;
+                                  # corrupted stats under finite logits
+                                  # quarantine the lane and rebuild its
+                                  # stats exactly from cached K/V (the
+                                  # prefix-attach reseed program);
+                                  # corrupted logits replay-preempt the
+                                  # lane (full recompute). Forces a host
+                                  # sync per tick — a correctness posture,
+                                  # not a fast path. Works without
+                                  # telemetry (counters live on the
+                                  # scheduler's always-real registry).
+    numerics_demote_after: int = 2  # guard trips per request before a
+                                    # frozen-mode lane is demoted to
+                                    # decode_streaming="exact" for the rest
+                                    # of its life (numerics_demotions_total
+                                    # counts it); exact mode recomputes the
+                                    # active row per tick, so a stats
+                                    # corruptor can't keep re-poisoning the
+                                    # drift window.
 
     @property
     def blocks_per_lane(self) -> int:
@@ -315,6 +355,19 @@ class ServeConfig:
             raise ValueError(
                 "prefix_cache=True requires batched_prefill=True (partial "
                 "hits resume through chunked batched prefill)"
+            )
+        if self.max_queue < 0:
+            raise ValueError(
+                f"max_queue must be >= 0, got {self.max_queue}"
+            )
+        if self.watchdog_ticks < 0:
+            raise ValueError(
+                f"watchdog_ticks must be >= 0, got {self.watchdog_ticks}"
+            )
+        if self.numerics_demote_after < 1:
+            raise ValueError(
+                f"numerics_demote_after must be >= 1, "
+                f"got {self.numerics_demote_after}"
             )
 
 

@@ -74,6 +74,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from collections import deque
 from typing import Optional
 
@@ -82,10 +83,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ServeConfig
+from repro.serve.chaos import ChaosInjector, EngineStalled, FaultPlan
 from repro.serve.decode import decode_step
 from repro.serve.paged import BlockAllocator, PagedKVCache
 from repro.serve.prefill import make_prefill_fn, prefill_supported
 from repro.serve.scheduler import Scheduler
+from repro.telemetry.metrics import TICK_BUCKETS
 
 
 @dataclasses.dataclass
@@ -98,6 +101,10 @@ class Request:
     # sampled (inside the tick, right after the sample boundary) instead of
     # the caller polling ``finished`` after drain
     on_token: Optional[object] = None
+    # tick budget from submission: past it the request is terminated with
+    # outcome "deadline_expired" wherever it is (queued, parked, decoding)
+    # and every resource it holds is released. 0 = no deadline.
+    deadline_ticks: int = 0
 
 
 @dataclasses.dataclass
@@ -134,6 +141,7 @@ class ServeEngine:
         seed: Optional[int] = None,
         serve: Optional[ServeConfig] = None,
         telemetry=None,
+        chaos: Optional[FaultPlan] = None,
     ):
         serve = serve or ServeConfig()
         overrides = {
@@ -196,6 +204,7 @@ class ServeEngine:
             registry=self.telemetry.metrics if self.telemetry.enabled else None,
             flight=self.telemetry.flight if self.telemetry.enabled else None,
             chunk_tokens=self._chunk if self._chunked else 0,
+            max_queue=serve.max_queue,
         )
         self.sched.requeue_cb = self._on_preempt
         if self._chunked:
@@ -221,6 +230,52 @@ class ServeEngine:
             # uid -> entry soft-pinned at probe time, released on attach
             # (see _prefix_probe); at most one pin per waiting request
             self._probe_pins: dict[int, object] = {}
+
+        # Terminal-outcome ledger: every submitted uid ends in exactly ONE
+        # of finished / cancelled / rejected / deadline_expired — the chaos
+        # soak's core invariant. Numerics-guard and watchdog state rides
+        # next to it; counters live on the scheduler's always-real registry
+        # so the recovery ladder is observable without telemetry.
+        self.outcomes: dict[int, str] = {}
+        self._deadlines: dict[int, int] = {}       # uid -> expiry tick
+        self._guard_trips: dict[int, int] = {}     # uid -> guard hits
+        self._demoted: set[int] = set()            # uids pinned to exact mode
+        self._exact_step = None                    # lazy exact-mode program
+        self._guard = serve.numerics_guard
+        self._progress = True
+        self._stall_ticks = 0
+        self._wd_interventions = 0
+        self._wd_fired_tick: Optional[int] = None
+        reg = self.sched.registry
+        self._quarantines = reg.counter(
+            "numerics_quarantines_total",
+            help="lanes quarantined by the numerics guard (streaming stats "
+                 "rebuilt in place from cached K/V)")
+        self._demotions = reg.counter(
+            "numerics_demotions_total",
+            help="frozen-mode lanes demoted to the exact decode program "
+                 "after repeated numerics-guard trips")
+        self._wd_fires = reg.counter(
+            "serve_watchdog_fires_total",
+            help="no-progress watchdog escalations")
+        self._recovery_h = reg.histogram(
+            "serve_recovery_ticks",
+            help="ticks from the first watchdog intervention to restored "
+                 "progress",
+            buckets=TICK_BUCKETS)
+
+        # Chaos harness (serve/chaos.py): one injector shared by every hook
+        # point, so per-tick ordinals — and therefore the whole injection
+        # schedule — replay exactly from (plan.seed, tick).
+        self.chaos = None
+        if chaos is not None:
+            self.chaos = ChaosInjector(chaos, flight=self.sched.flight,
+                                       registry=self.sched.registry)
+            self.sched.chaos = self.chaos
+            if alloc is not None:
+                alloc.chaos = self.chaos
+            if self.prefix is not None:
+                self.prefix.chaos = self.chaos
         if self.telemetry.enabled:
             reg = self.telemetry.metrics
             self._ticks_total = reg.counter(
@@ -304,12 +359,13 @@ class ServeEngine:
         # K/V blocks through the rebase-step plumbing (the correctness
         # fallback, token-identity-tested against cold prefill).
         self._reseed_step = None
-        if (
-            self._prefix_enabled and serve.prefix_attach == "recompute"
-            and cfg.decode_attention_impl == "spectral_shift"
+        self._can_reseed = (
+            cfg.decode_attention_impl == "spectral_shift"
             and cfg.decode_streaming in ("exact", "frozen")
             and cfg.family != "ssm"
-        ):
+        )
+        if (self._prefix_enabled and serve.prefix_attach == "recompute"
+                and self._can_reseed):
             from repro.serve.decode_state import make_reseed_fn
 
             self._reseed_step = self.kv.make_rebase_step(
@@ -320,25 +376,26 @@ class ServeEngine:
         # streaming-stat leaves in the flat storage once, then per-rebase
         # drift probes (pre/post leaf snapshot, O(c*d) host math) and a
         # landmark-mass spectrum EMA observed at rebases and retirements.
+        # _stream_idx is needed beyond telemetry now: the numerics guard
+        # scans (and the chaos nan_stats site poisons) the streaming-stat
+        # leaves whenever the decode state streams; the monitors themselves
+        # stay telemetry-gated.
         self._stream_idx = None
         self._drift_mon = self._spectrum_mon = None
-        streams_stats = (
-            cfg.decode_attention_impl == "spectral_shift"
-            and cfg.decode_streaming in ("exact", "frozen")
-            and cfg.family != "ssm"
-        )
-        if self.telemetry.enabled and streams_stats:
+        if self._can_reseed:  # exact/frozen spectral shift: stats stream
             from repro.serve.kv_cache import stream_leaf_indices
-            from repro.telemetry import DriftMonitor, SpectrumMonitor
 
             idx = stream_leaf_indices(cfg, self.max_seq)
             if idx["bv_m"]:
                 self._stream_idx = list(
                     zip(idx["bv_m"], idx["bv_l"], idx["bv_acc"])
                 )
-                self._spectrum_mon = SpectrumMonitor(self.telemetry.metrics)
-                if self._frozen_rebase:
-                    self._drift_mon = DriftMonitor(self.telemetry.metrics)
+        if self.telemetry.enabled and self._stream_idx:
+            from repro.telemetry import DriftMonitor, SpectrumMonitor
+
+            self._spectrum_mon = SpectrumMonitor(self.telemetry.metrics)
+            if self._frozen_rebase:
+                self._drift_mon = DriftMonitor(self.telemetry.metrics)
 
         # Warm the dispatch registry for the serving shapes: the decode key
         # family (n=1 step against the max_seq cache horizon) plus, for
@@ -435,12 +492,71 @@ class ServeEngine:
             self._acct = None
 
     # -- public API ----------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Queue a request. Returns False when the ``ServeConfig.max_queue``
+        admission bound rejects it (outcome "rejected"; the flight event
+        carries a retry-after hint) — callers without backpressure
+        handling can ignore the return value, as max_queue=0 never
+        rejects."""
         if len(req.prompt) >= self.max_seq:
             raise ValueError(
                 f"prompt len {len(req.prompt)} >= max_seq {self.max_seq}"
             )
-        self.sched.submit(req)
+        if not self.sched.submit(req):
+            self.outcomes[req.uid] = "rejected"
+            return False
+        self.outcomes.pop(req.uid, None)  # resubmit sheds a stale outcome
+        if req.deadline_ticks > 0:
+            self._deadlines[req.uid] = self._tick + req.deadline_ticks
+        return True
+
+    def cancel(self, uid: int) -> bool:
+        """Client cancellation: terminate ``uid`` wherever it is — queued,
+        parked mid-prefill, or decoding — releasing its blocks, prefix
+        pins, and parked snapshots. Returns False for an unknown or
+        already-terminal uid."""
+        return self._terminalize(uid, "cancelled")
+
+    def _expire_deadlines(self) -> None:
+        if not self._deadlines:
+            return
+        expired = [u for u, d in self._deadlines.items() if self._tick > d]
+        for uid in expired:
+            self._terminalize(uid, "deadline_expired")
+
+    def _terminalize(self, uid: int, outcome: str) -> bool:
+        """Shared cancel/deadline exit path. Every resource class a request
+        can hold is released here: waiting-queue slot, scheduler parked
+        entry + allocator blocks (parked uids sit in BOTH — preemption
+        parks the blocks and requeues the Request), engine parked snapshot,
+        prefix probe pin, guard state, lane seat."""
+        self._deadlines.pop(uid, None)
+        if uid in self.outcomes or uid in self.finished:
+            return False
+        req = self.sched.remove_waiting(uid)
+        if req is not None:
+            self.sched.parked.pop(uid, None)
+            self._parked.pop(uid, None)
+            if self.sched.allocator is not None:
+                self.sched.allocator.free(uid)
+            if self.prefix is not None:
+                pinned = self._probe_pins.pop(uid, None)
+                if pinned is not None:
+                    self.prefix.unpin(pinned)
+            self.sched.mark_terminal(uid, outcome)
+        else:
+            seat = next(
+                (i for i, l in enumerate(self.lanes)
+                 if l.req is not None and l.req.uid == uid), None,
+            )
+            if seat is None:
+                return False
+            self.sched.discard(seat, outcome)
+            self.lanes[seat] = _Lane()
+        self.outcomes[uid] = outcome
+        self._guard_trips.pop(uid, None)
+        self._demoted.discard(uid)
+        return True
 
     def run(self, max_ticks: int = 10_000) -> dict[int, list[int]]:
         """Drive until queue + lanes drain (or tick budget). Returns outputs."""
@@ -637,7 +753,12 @@ class ServeEngine:
                 np.stack([g[1] for g in stats]),
                 min((lane.pos - 1) // self._seg + 1, self.cfg.num_landmarks),
             )
-        self.finished[lane.req.uid] = list(lane.generated)
+        uid = lane.req.uid
+        self.finished[uid] = list(lane.generated)
+        self.outcomes[uid] = "finished"
+        self._deadlines.pop(uid, None)
+        self._guard_trips.pop(uid, None)
+        self._demoted.discard(uid)
         self.sched.release(i)
         self.lanes[i] = _Lane()
 
@@ -682,9 +803,12 @@ class ServeEngine:
         lane = self.lanes[i]
         tok = self._sample(lane, lg)
         lane.generated.append(tok)
+        self._progress = True
         self.sched.note_token(lane.req.uid)
         if lane.req.on_token is not None:
             lane.req.on_token(lane.req.uid, tok)
+            if self.lanes[i] is not lane:
+                return  # the callback cancelled this very request
         done = (
             tok == self.eos_id
             or len(lane.generated) >= lane.req.max_new_tokens
@@ -695,16 +819,285 @@ class ServeEngine:
         else:
             lane.next_token = tok
 
+    # -- decode dispatch (normal + demoted lanes) ------------------------------
+    def _dispatch_decode(self, active: list[int]) -> list[tuple]:
+        """Launch the decode program(s) for ``active`` without syncing.
+        Lanes demoted by the numerics guard run on the lazily built
+        exact-mode program as a second dispatch over the same (donated)
+        storage; with no demotions this is exactly the single legacy call.
+        Returns ``[(device_logits, lanes)]`` for ``_merge_logits``."""
+        tables = self.sched.tables()
+        if self._demoted:
+            normal = [i for i in active
+                      if self.lanes[i].req.uid not in self._demoted]
+            demoted = [i for i in active
+                       if self.lanes[i].req.uid in self._demoted]
+        else:
+            normal, demoted = active, []
+        groups = [(self._fused_step, normal)]
+        if demoted:
+            self._ensure_exact_step()
+            groups.append((self._exact_step, demoted))
+        parts = []
+        for step_fn, group in groups:
+            if not group:
+                continue
+            tokens = np.zeros((self.max_lanes, 1, 1), np.int32)
+            positions = np.zeros(self.max_lanes, np.int32)
+            mask = np.zeros(self.max_lanes, bool)
+            for i in group:
+                tokens[i, 0, 0] = self.lanes[i].next_token
+                positions[i] = self.lanes[i].pos
+                mask[i] = True
+            nb_view = self.kv.view_blocks_needed(
+                positions, group, quantum=self._view_quantum
+            )
+            dev, new_storage = step_fn(
+                self.kv._storage, jnp.asarray(tables), jnp.asarray(tokens),
+                jnp.asarray(positions), jnp.asarray(mask), nb_view,
+            )
+            self.kv._storage = list(new_storage)
+            parts.append((dev, group))
+        return parts
+
+    def _merge_logits(self, parts: list[tuple]) -> Optional[np.ndarray]:
+        """Sync the dispatched decode parts to one (max_lanes, vocab) host
+        array (the single-part fast path is byte-identical to the legacy
+        sync). None when nothing decoded this tick."""
+        if not parts:
+            return None
+        if len(parts) == 1:
+            return np.asarray(parts[0][0][:, 0, 0], np.float32)
+        out = None
+        for dev, group in parts:
+            host = np.asarray(dev[:, 0, 0], np.float32)
+            if out is None:
+                out = np.zeros_like(host)
+            out[group] = host[group]
+        return out
+
+    def _ensure_exact_step(self) -> None:
+        """Build the exact-mode decode program for demoted lanes. The
+        storage layout is shared (exact and frozen stream the same (m, l,
+        acc) leaves; exact recomputes the active row per tick instead of
+        drifting it), so demoted and normal lanes ride the same pools."""
+        if self._exact_step is not None:
+            return
+        cfg_e = dataclasses.replace(self.cfg, decode_streaming="exact")
+        step = functools.partial(
+            decode_step, self.params, cfg_e, seq_max=self.max_seq
+        )
+        if self.decode_impl == "paged":
+            pstep = functools.partial(
+                step,
+                paged_meta=(self.serve.block_size, cfg_e.kernels_interpret),
+            )
+            fn = self.kv.make_paged_step(
+                lambda cache, tokens, table: pstep(
+                    cache, tokens, paged_table=table
+                )
+            )
+        else:
+            fn = self.kv.make_fused_step(jax.vmap(step))
+        if self._acct is not None:
+            fn = self._acct.wrap(fn, "decode_exact")
+        self._exact_step = fn
+
+    def _ensure_reseed_step(self) -> bool:
+        """Lazily build the stats-reseed program for the numerics guard
+        (shared with the prefix_attach="recompute" path when that already
+        built it)."""
+        if self._reseed_step is not None:
+            return True
+        if not self._can_reseed:
+            return False
+        from repro.serve.decode_state import make_reseed_fn
+
+        fn = self.kv.make_rebase_step(
+            jax.vmap(make_reseed_fn(self.cfg, self.max_seq))
+        )
+        if self._acct is not None:
+            fn = self._acct.wrap(fn, "prefix_attach")
+        self._reseed_step = fn
+        return True
+
+    # -- chaos application & numerics-guard escalation -------------------------
+    def _apply_tick_chaos(self) -> None:
+        """Tick-scoped chaos sites, evaluated once per tick at the top."""
+        ch = self.chaos
+        rule = ch.fire("tick_delay")
+        if rule is not None:
+            time.sleep(rule.param or 1e-3)
+        rule = ch.fire("fragment")
+        if rule is not None and self.sched.allocator is not None:
+            self.sched.allocator.scramble_free(ch.plan.seed + self._tick)
+        rule = ch.fire("evict_storm")
+        if rule is not None and self.prefix is not None:
+            for _ in range(int(rule.param) or 4):
+                if not self.prefix.evict_one():
+                    break
+
+    def _apply_decode_chaos(self, active: list[int],
+                            logits: np.ndarray) -> None:
+        """Post-step corruption sites: poison a lane's streaming stats on
+        device and/or its host logits row. Runs before the guard scan, so
+        the same tick detects what it injected."""
+        ch = self.chaos
+        for i in active:
+            if self.lanes[i].free:
+                continue
+            if (self._stream_idx
+                    and ch.fire("nan_stats", lane=i) is not None):
+                s = self.kv._storage
+                for im, il, ia in self._stream_idx:
+                    s[im] = s[im].at[i].set(jnp.nan)
+                    s[il] = s[il].at[i].set(jnp.nan)
+                    s[ia] = s[ia].at[i].set(jnp.nan)
+            if ch.fire("nan_logits", lane=i) is not None:
+                logits[i, : self.cfg.vocab_size] = np.nan
+
+    def _post_decode_checks(self, active: list[int],
+                            logits: Optional[np.ndarray]):
+        """Post-sync, pre-emit: numerics probe cadence, chaos corruption
+        injection, numerics-guard escalation. Returns the (possibly
+        copied-for-writability) logits."""
+        probe_every = self.serve.numerics_probe_every
+        if (probe_every > 0 and self._tick % probe_every == 0
+                and self.telemetry.enabled):
+            if logits is not None:
+                self._numerics.check("decode_logits", logits)
+            if self._stream_idx:
+                for i in active:
+                    for m, l, _ in self._lane_stream_stats(i):
+                        self._numerics.check("landmark_m", m)
+                        self._numerics.check("landmark_l", l)
+        if logits is None:
+            return None
+        if self.chaos is not None:
+            if not logits.flags.writeable:
+                logits = logits.copy()
+            self._apply_decode_chaos(active, logits)
+        if self._guard:
+            self._guard_scan(active, logits)
+        return logits
+
+    def _guard_scan(self, active: list[int], logits: np.ndarray) -> None:
+        """Numerics-guard escalation ladder (ServeConfig.numerics_guard).
+
+        Detection is host-side and NaN-keyed for the stats (the online-
+        softmax ``m`` legitimately holds -inf for unreached landmark rows);
+        logits must be fully finite. Recovery: stats-only corruption (K/V
+        and this tick's logits intact) quarantines the lane — every (m, l,
+        acc) row is rebuilt exactly from cached K/V via the reseed program
+        — and the emit proceeds; corrupted logits replay-preempt the lane
+        (the per-tick landmark-sum updates make an in-place retry unsound,
+        so recompute is the only exact recovery). After
+        ``numerics_demote_after`` trips a frozen-mode request is demoted to
+        the exact-mode decode program for the rest of its life."""
+        for i in active:
+            lane = self.lanes[i]
+            if lane.free:
+                continue
+            uid = lane.req.uid
+            row = logits[i, : self.cfg.vocab_size]
+            bad_logits = not bool(np.isfinite(row).all())
+            bad_stats = False
+            if not bad_logits and self._stream_idx:
+                for m, l, acc in self._lane_stream_stats(i):
+                    if (np.isnan(m).any() or np.isnan(l).any()
+                            or np.isnan(acc).any()):
+                        bad_stats = True
+                        break
+            if not (bad_logits or bad_stats):
+                continue
+            trips = self._guard_trips.get(uid, 0) + 1
+            self._guard_trips[uid] = trips
+            if bad_stats and self._ensure_reseed_step():
+                self._quarantines.inc()
+                self.sched.flight.record(uid, "quarantine", tick=self._tick,
+                                         lane=i, trips=trips)
+                # lane.pos is still the position this tick's step wrote
+                # (the emit loop increments it after the guard).
+                self._run_reseed(i, lane.pos)
+            else:
+                self.sched.preempt(i)
+            if (trips >= self.serve.numerics_demote_after
+                    and self.cfg.decode_streaming == "frozen"
+                    and uid not in self._demoted):
+                self._demoted.add(uid)
+                self._demotions.inc()
+                self.sched.flight.record(uid, "demote", tick=self._tick,
+                                         trips=trips)
+
+    # -- no-progress watchdog --------------------------------------------------
+    def _watchdog_check(self) -> None:
+        """Generalized livelock defense (ServeConfig.watchdog_ticks): after
+        N consecutive ticks with work pending but zero progress (no token,
+        no chunk, no admission), escalate one rung per tick — reclaim
+        parked blocks, then preempt the youngest lane (a parked victim's
+        blocks fall to the next rung) — and raise a structured
+        EngineStalled only when the ladder is exhausted."""
+        wd = self.serve.watchdog_ticks
+        if wd <= 0:
+            return
+        if self._progress or self.sched.idle:
+            if self._wd_fired_tick is not None:
+                self._recovery_h.observe(self._tick - self._wd_fired_tick)
+                self._wd_fired_tick = None
+            self._stall_ticks = 0
+            self._wd_interventions = 0
+            return
+        self._stall_ticks += 1
+        if self._stall_ticks < wd:
+            return
+        self._wd_fires.inc()
+        self.sched.flight.record(-1, "watchdog", tick=self._tick,
+                                 stall_ticks=self._stall_ticks,
+                                 rung=self._wd_interventions)
+        if self._wd_fired_tick is None:
+            self._wd_fired_tick = self._tick
+        self._wd_interventions += 1
+        # Interventions are bounded: each one either frees blocks or
+        # empties a lane, so needing more than one full sweep of both
+        # ladders means the stall is structural — stop escalating and
+        # report.
+        if self._wd_interventions <= 2 * (self.max_lanes + 1):
+            if self.sched.reclaim_parked():
+                return
+            victim = self.sched._youngest_lane()
+            if victim is not None:
+                self.sched.preempt(victim)
+                return
+        alloc = self.sched.allocator
+        raise EngineStalled(
+            tick=self._tick, stall_ticks=self._stall_ticks,
+            waiting=len(self.sched.waiting),
+            active_lanes=sum(u is not None for u in self.sched.lane_uid),
+            parked=len(self.sched.parked),
+            pool={} if alloc is None else alloc.stats(),
+        )
+
     # -- one engine tick -------------------------------------------------------
     def tick(self) -> None:
         with self.telemetry.span("serve_tick"):
+            self._progress = False
             self._tick_inner()
+            self._watchdog_check()
+
+    def _begin_tick(self) -> None:
+        """Shared tick preamble: advance the clock, evaluate the tick-
+        scoped chaos sites, expire deadlines."""
+        self._tick += 1
+        self.sched.tick_now = self._tick
+        if self.chaos is not None:
+            self.chaos.begin_tick(self._tick)
+            self._apply_tick_chaos()
+        self._expire_deadlines()
 
     def _tick_inner(self) -> None:
         if self._chunked:
             return self._tick_chunked()
-        self._tick += 1
-        self.sched.tick_now = self._tick
+        self._begin_tick()
         tel = self.telemetry
         if tel.enabled:
             self._ticks_total.inc()
@@ -719,6 +1112,8 @@ class ServeEngine:
 
         with tel.span("admit"):
             admissions = self.sched.admit()
+        if admissions:
+            self._progress = True
         for i, req in admissions:
             lane = self.lanes[i] = _Lane(req=req)
             if self.batched and req.prompt:
@@ -753,42 +1148,29 @@ class ServeEngine:
         if not active:
             return
 
-        tables = self.sched.tables()
-        tokens = np.zeros((self.max_lanes, 1, 1), np.int32)
-        positions = np.zeros(self.max_lanes, np.int32)
-        mask = np.zeros(self.max_lanes, bool)
-        for i in active:
-            tokens[i, 0, 0] = self.lanes[i].next_token
-            positions[i] = self.lanes[i].pos
-            mask[i] = True
-        nb_view = self.kv.view_blocks_needed(
-            positions, active, quantum=self._view_quantum
-        )
         # The tick is ONE donated XLA program (gather -> step -> commit), so
         # host spans can only split dispatch from the device sync the logits
         # transfer forces; use Tracer(annotate=True) + jax.profiler for
         # phase-level device timing.
         with tel.span("decode_dispatch", lanes=len(active)):
-            logits, new_storage = self._fused_step(
-                self.kv._storage, jnp.asarray(tables), jnp.asarray(tokens),
-                jnp.asarray(positions), jnp.asarray(mask), nb_view,
-            )
-            self.kv._storage = list(new_storage)
+            parts = self._dispatch_decode(active)
         with tel.span("device_sync"):
-            logits = np.asarray(logits[:, 0, 0], np.float32)
+            logits = self._merge_logits(parts)
 
-        probe_every = self.serve.numerics_probe_every
-        if probe_every > 0 and self._tick % probe_every == 0:
-            self._numerics.check("decode_logits", logits)
-            if self._stream_idx:
-                for i in active:
-                    for m, l, _ in self._lane_stream_stats(i):
-                        self._numerics.check("landmark_m", m)
-                        self._numerics.check("landmark_l", l)
+        logits = self._post_decode_checks(active, logits)
 
         with tel.span("sample_emit"):
             for i in active:
                 lane = self.lanes[i]
+                if lane.free:  # guard replay-preempted it after the sync
+                    continue
+                if (self.chaos is not None and
+                        self.chaos.fire("drop_sample", lane=i) is not None):
+                    # The sampled token is lost pre-commit; per-tick
+                    # landmark-sum updates make an in-place retry unsound,
+                    # so recovery is a full replay (recompute preemption).
+                    self.sched.preempt(i)
+                    continue
                 lane.pos += 1
                 tel.flight.record(
                     lane.req.uid, "decode", tick=self._tick, pos=lane.pos
@@ -801,10 +1183,13 @@ class ServeEngine:
         if self._frozen_rebase:
             # Lanes whose just-written position starts a new landmark
             # segment: rebase the newly-frozen row exactly and found the
-            # new active row over the horizon (skips lanes retired above).
+            # new active row over the horizon (skips lanes retired above
+            # and lanes demoted to the exact program, which has no drifting
+            # active row to rebase).
             hits = [
                 i for i in active
                 if not self.lanes[i].free
+                and self.lanes[i].req.uid not in self._demoted
                 and (self.lanes[i].pos - 1) > 0
                 and (self.lanes[i].pos - 1) % self._seg == 0
             ]
@@ -821,8 +1206,7 @@ class ServeEngine:
         no matter how much prefill is pending (the never-starve invariant);
         prefill bandwidth is capped by ``prefill_token_budget`` per tick
         (0 = one chunk), so ITL stays flat under a long-prompt flood."""
-        self._tick += 1
-        self.sched.tick_now = self._tick
+        self._begin_tick()
         tel = self.telemetry
         if tel.enabled:
             self._ticks_total.inc()
@@ -847,30 +1231,16 @@ class ServeEngine:
                 continue
             active.append(i)
         active = [i for i in active if not self.lanes[i].free]
-        dev_logits = None
+        parts: list = []
         if active:
-            tables = self.sched.tables()
-            tokens = np.zeros((self.max_lanes, 1, 1), np.int32)
-            positions = np.zeros(self.max_lanes, np.int32)
-            mask = np.zeros(self.max_lanes, bool)
-            for i in active:
-                tokens[i, 0, 0] = self.lanes[i].next_token
-                positions[i] = self.lanes[i].pos
-                mask[i] = True
-            nb_view = self.kv.view_blocks_needed(
-                positions, active, quantum=self._view_quantum
-            )
             with tel.span("decode_dispatch", lanes=len(active)):
-                dev_logits, new_storage = self._fused_step(
-                    self.kv._storage, jnp.asarray(tables),
-                    jnp.asarray(tokens), jnp.asarray(positions),
-                    jnp.asarray(mask), nb_view,
-                )
-                self.kv._storage = list(new_storage)
+                parts = self._dispatch_decode(active)
 
         # ---- admissions: parked requests resume at their chunk boundary --
         with tel.span("admit"):
             admissions = self.sched.admit()
+        if admissions:
+            self._progress = True
         for i, req in admissions:
             lane = self.lanes[i] = _Lane(req=req)
             parked = self._parked.pop(req.uid, None)
@@ -975,11 +1345,12 @@ class ServeEngine:
                     self.sched.preempt(stalled[-1])
                     dispatching = True
 
+        if launched:
+            self._progress = True
+
         # ---- ONE sync at the sample boundary -----------------------------
-        logits = None
         with tel.span("device_sync"):
-            if dev_logits is not None:
-                logits = np.asarray(dev_logits[:, 0, 0], np.float32)
+            logits = self._merge_logits(parts)
             firsts = [
                 (i, np.asarray(
                     lg[0, cv - 1, : self.cfg.vocab_size], np.float32
@@ -987,25 +1358,25 @@ class ServeEngine:
                 for i, lg, cv in pending_first
             ]
 
-        probe_every = self.serve.numerics_probe_every
-        if probe_every > 0 and self._tick % probe_every == 0:
-            if logits is not None:
-                self._numerics.check("decode_logits", logits)
-            if self._stream_idx:
-                for i in active:
-                    for m, l, _ in self._lane_stream_stats(i):
-                        self._numerics.check("landmark_m", m)
-                        self._numerics.check("landmark_l", l)
+        logits = self._post_decode_checks(active, logits)
 
         with tel.span("sample_emit"):
             for i in active:
                 lane = self.lanes[i]
+                if lane.free:  # guard replay-preempted it after the sync
+                    continue
+                if (self.chaos is not None and
+                        self.chaos.fire("drop_sample", lane=i) is not None):
+                    self.sched.preempt(i)
+                    continue
                 lane.pos += 1
                 tel.flight.record(
                     lane.req.uid, "decode", tick=self._tick, pos=lane.pos
                 )
                 self._emit_token(i, logits[i, : self.cfg.vocab_size])
             for i, lg in firsts:
+                if self.lanes[i].free:  # cancelled mid-tick
+                    continue
                 if self._prefix_enabled:
                     # Cache the completed prefill BEFORE emitting (the emit
                     # may retire the lane; the entry's own block references
@@ -1017,6 +1388,7 @@ class ServeEngine:
             hits = [
                 i for i in active
                 if not self.lanes[i].free
+                and self.lanes[i].req.uid not in self._demoted
                 and (self.lanes[i].pos - 1) > 0
                 and (self.lanes[i].pos - 1) % self._seg == 0
             ]
@@ -1116,6 +1488,11 @@ class ServeEngine:
         st["decode_impl"] = self.decode_impl
         if self._frozen_rebase:
             st["rebases"] = self._rebases
+        st["quarantines"] = int(self._quarantines.value)
+        st["demotions"] = int(self._demotions.value)
+        st["watchdog_fires"] = int(self._wd_fires.value)
+        if self.chaos is not None:
+            st["chaos_injections"] = self.chaos.injections
         if self.prefix is not None:
             st["prefix"] = self.prefix.stats()
         if self.telemetry.enabled:
@@ -1125,6 +1502,6 @@ class ServeEngine:
                 st["xla_compiles"] = {
                     p: self._acct.compiles(p)
                     for p in ("prefill", "prefill_chunk", "decode_tick",
-                              "rebase", "prefix_attach")
+                              "rebase", "prefix_attach", "decode_exact")
                 }
         return st

@@ -100,6 +100,9 @@ class BlockAllocator:
         # cached prefixes whose blocks are otherwise unreferenced are
         # evicted to make room before the allocation fails.
         self.prefix_cache: Optional["PrefixCache"] = None
+        # Optional ChaosInjector (serve/chaos.py): "alloc_fail" makes
+        # _take_free report a shortfall even when blocks are free.
+        self.chaos = None
 
     # -- queries ------------------------------------------------------------
     @property
@@ -155,6 +158,8 @@ class BlockAllocator:
         """Pop ``n_blocks`` off the free list at refcount 1, LRU-evicting
         reclaimable prefix-cache entries to cover a shortfall. Returns None
         (no state change beyond evictions) if still short."""
+        if self.chaos is not None and self.chaos.fire("alloc_fail"):
+            return None
         while n_blocks > self.num_free:
             if self.prefix_cache is None or not self.prefix_cache.evict_one(
                 reclaim_only=True
@@ -233,6 +238,15 @@ class BlockAllocator:
         self.tables[uid][slot] = new
         self.refcounts[old] -= 1  # > 1 before the call, so never frees
         return old, new
+
+    def scramble_free(self, key: int) -> None:
+        """Deterministically shuffle the free list (chaos "fragment" site):
+        destroys the LIFO locality so subsequent allocations land on
+        scattered block ids — the regime ``defragment()`` exists for.
+        Pure reordering; allocator accounting is untouched."""
+        rng = np.random.default_rng(key if key >= 0 else -key)
+        perm = rng.permutation(len(self._free))
+        self._free = [self._free[i] for i in perm]
 
     def defragment(self) -> dict[int, int]:
         """Compact movable live blocks onto the lowest ids. Blocks with
@@ -349,6 +363,9 @@ class PrefixCache:
         self._hit_blocks = r.histogram(
             "prefix_hit_blocks", help="shared blocks mapped per cache hit",
             buckets=TICK_BUCKETS)
+        # Optional ChaosInjector: "hash_collision" perturbs lookup digests
+        # so a warm prompt cold-misses (see match()).
+        self.chaos = None
         allocator.prefix_cache = self
 
     # -- hashing -------------------------------------------------------------
@@ -371,6 +388,13 @@ class PrefixCache:
         matched full blocks, or None. Pure lookup — the caller decides
         whether the match is usable and accounts hit/miss accordingly."""
         hashes = self.block_hashes(prompt, self.block_size)
+        if self.chaos is not None and self.chaos.fire("hash_collision"):
+            # An injected "collision" perturbs the lookup digests so the
+            # probe cold-misses. (Delivering WRONG blocks — a true
+            # collision — would be undetectable by construction; the
+            # injectable failure mode is the conservative one: lost reuse,
+            # never lost correctness.)
+            hashes = [hashlib.sha1(b"chaos" + d).digest() for d in hashes]
         for i in range(len(hashes) - 1, -1, -1):
             got = self._index.get(hashes[i])
             if got is not None and got[1] >= i + 1:

@@ -77,13 +77,20 @@ class Scheduler:
     def __init__(self, allocator: Optional[BlockAllocator], max_lanes: int,
                  blocks_per_lane: int,
                  registry: Optional[MetricsRegistry] = None,
-                 flight=None, chunk_tokens: int = 0):
+                 flight=None, chunk_tokens: int = 0, max_queue: int = 0):
         self.allocator = allocator  # None => model has no paged state
         self.max_lanes = max_lanes
         self.blocks_per_lane = blocks_per_lane
         # chunked-prefill admission: > 0 means a request only needs its
         # first chunk's blocks to get a lane (continuous batching)
         self.chunk_tokens = chunk_tokens
+        # admission-queue bound: submit() beyond it is rejected with a
+        # retry-after hint instead of growing the queue (and the per-uid
+        # timing table) without limit. 0 = unbounded.
+        self.max_queue = max_queue
+        # Optional ChaosInjector (serve/chaos.py): "admission_stall" makes
+        # admit() a no-op for the tick.
+        self.chaos = None
         self.waiting: deque = deque()
         # uids preempted mid-chunked-prefill whose blocks stay allocated
         # (insertion-ordered: oldest parked is reclaimed first)
@@ -163,6 +170,15 @@ class Scheduler:
         self._cow_copies = r.counter(
             "prefix_cow_copies_total",
             help="shared blocks copied on first divergent write")
+        self._rejected = r.counter(
+            "serve_rejected_total",
+            help="submissions refused by the max_queue admission bound")
+        self._cancelled = r.counter(
+            "serve_cancelled_total",
+            help="requests terminated by client cancellation")
+        self._deadline_expired = r.counter(
+            "serve_deadline_expired_total",
+            help="requests terminated by their deadline_ticks budget")
 
     # Aggregate counters as attributes, for backward compatibility.
     @property
@@ -195,7 +211,18 @@ class Scheduler:
         ])
 
     # -- queue ---------------------------------------------------------------
-    def submit(self, req) -> None:
+    def submit(self, req) -> bool:
+        """Queue a request. Returns False (recording nothing but the
+        rejection) when the ``max_queue`` bound is hit — backpressure is
+        explicit: the flight event carries a ``retry_after_ticks`` hint
+        proportional to the backlog, and no RequestTiming entry is created
+        (a rejected uid never reaches the latency histograms)."""
+        if self.max_queue > 0 and len(self.waiting) >= self.max_queue:
+            self._rejected.inc()
+            self.flight.record(req.uid, "reject", tick=self.tick_now,
+                               queue_depth=len(self.waiting),
+                               retry_after_ticks=max(1, len(self.waiting)))
+            return False
         self.waiting.append(req)
         t = self.timing.setdefault(req.uid, RequestTiming())
         if t.arrived < 0:
@@ -204,6 +231,7 @@ class Scheduler:
             self.flight.record(req.uid, "submit",
                                prompt_len=len(req.prompt),
                                tick=self.tick_now)
+        return True
 
     def _blocks_for_prompt(self, req) -> int:
         if self.allocator is None:
@@ -232,6 +260,8 @@ class Scheduler:
 
     def admit(self) -> list[tuple[int, object]]:
         """Admit FCFS while lanes and blocks allow. Returns [(lane, req)]."""
+        if self.chaos is not None and self.chaos.fire("admission_stall"):
+            return []
         admissions = []
         for lane in range(self.max_lanes):
             if self.lane_uid[lane] is not None or not self.waiting:
@@ -241,8 +271,12 @@ class Scheduler:
             if self.allocator is not None:
                 if not self.allocator.can_alloc(need):
                     break  # FCFS: don't let short requests starve the head
-                if need:
-                    self.allocator.alloc(req.uid, need)
+                if need and self.allocator.alloc(req.uid, need) is None:
+                    # can_alloc promised room but the allocation still came
+                    # up short (injected alloc_fail, or an eviction sweep
+                    # that freed less than promised) — stall the admission
+                    # for this tick rather than seat a block-less lane.
+                    break
             self.parked.pop(req.uid, None)
             self.waiting.popleft()
             self.lane_uid[lane] = req.uid
@@ -408,6 +442,45 @@ class Scheduler:
                            tokens=t.new_tokens,
                            latency_ticks=t.finished - t.arrived)
 
+    # -- early termination (cancel / deadline) --------------------------------
+    def remove_waiting(self, uid: int):
+        """Pull a queued (not yet admitted) request out of the waiting
+        queue. Returns the Request, or None if ``uid`` isn't queued."""
+        for req in self.waiting:
+            if req.uid == uid:
+                self.waiting.remove(req)
+                return req
+        return None
+
+    def discard(self, lane: int, outcome: str) -> None:
+        """Terminate a seated lane WITHOUT the normal-finish accounting:
+        free its blocks, clear the seat, and record the terminal outcome
+        (``cancelled`` / ``deadline_expired``). The request does NOT land
+        in serve_finished_total or the latency histograms — an aborted
+        request's latency measures the abort policy, not the engine."""
+        uid = self.lane_uid[lane]
+        if uid is None:
+            return
+        if self.allocator is not None:
+            self.allocator.free(uid)
+        self.lane_uid[lane] = None
+        self.admit_order.pop(uid, None)
+        self.mark_terminal(uid, outcome)
+
+    def mark_terminal(self, uid: int, outcome: str) -> None:
+        """Stamp a cancel/deadline terminal state for ``uid`` (counted in
+        its own counter, flight-recorded; timing.finished set so drain
+        logic treats the uid as done)."""
+        t = self.timing.get(uid)
+        if t is not None:
+            t.finished = self.tick_now
+        if outcome == "cancelled":
+            self._cancelled.inc()
+            self.flight.record(uid, "cancel", tick=self.tick_now)
+        elif outcome == "deadline_expired":
+            self._deadline_expired.inc()
+            self.flight.record(uid, "deadline", tick=self.tick_now)
+
     def mark_prefix_hit(self, uid: int) -> None:
         """Flag an admission that attached a cached prefix: its first token
         is additionally observed in ``serve_ttft_warm_seconds`` (warm vs
@@ -479,6 +552,9 @@ class Scheduler:
             "ttft_warm_s_p99": self._warm_ttft_s.percentile(99),
             "cow_copies": int(self._cow_copies.value),
             "parked": len(self.parked),
+            "rejected": int(self._rejected.value),
+            "cancelled": int(self._cancelled.value),
+            "deadline_expired": int(self._deadline_expired.value),
         }
         if self.allocator is not None:
             out["kv"] = self.allocator.stats()

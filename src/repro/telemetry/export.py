@@ -156,6 +156,25 @@ def _lifeline_events(line, out) -> None:
             open_name, open_t0, open_args = "queued", t, {"requeue": True}
         elif kind == "rebase":
             instants.append(("rebase", t, None))
+        elif kind == "reject":
+            # Bounded-queue backpressure: the uid never entered the engine.
+            instants.append(("reject", t, {
+                "queue_depth": ev.get("queue_depth"),
+                "retry_after_ticks": ev.get("retry_after_ticks")}))
+        elif kind in ("cancel", "deadline"):
+            close(t)
+            instants.append((kind, t, {"tick": ev.get("tick")}))
+        elif kind == "quarantine":
+            # Numerics guard: stats rebuilt in place from cached K/V.
+            instants.append(("quarantine", t, {
+                "lane": ev.get("lane"), "trips": ev.get("trips")}))
+        elif kind == "demote":
+            instants.append(("demote", t, {"trips": ev.get("trips")}))
+        elif kind in ("chaos", "watchdog"):
+            # Engine-scoped events (uid -1): chaos injections carry their
+            # site, watchdog fires their escalation rung.
+            instants.append((kind, t, {
+                k: v for k, v in ev.items() if k not in ("kind", "t", "t1")}))
         elif kind == "finish":
             close(t)
             instants.append(

@@ -28,7 +28,12 @@ import subprocess
 
 @functools.lru_cache(maxsize=1)
 def git_sha() -> str:
-    """HEAD commit of the repo containing this file (cached per process)."""
+    """HEAD commit of the repo containing this file (cached per process).
+
+    A hung/slow git (TimeoutExpired — named explicitly even though it is a
+    SubprocessError subclass, since a timeout here once looked like it
+    could kill a bench envelope write) degrades to ``$GITHUB_SHA`` and
+    then ``"unknown"``, like every other failure mode."""
     here = os.path.dirname(os.path.abspath(__file__))
     try:
         out = subprocess.run(
@@ -37,7 +42,7 @@ def git_sha() -> str:
         )
         if out.returncode == 0 and out.stdout.strip():
             return out.stdout.strip()
-    except (OSError, subprocess.SubprocessError):
+    except (OSError, subprocess.TimeoutExpired, subprocess.SubprocessError):
         pass
     return os.environ.get("GITHUB_SHA", "unknown")
 

@@ -1,0 +1,473 @@
+"""Serving chaos harness: deterministic fault injection, recovery policies
+(deadlines, cancellation, numerics-guard escalation, no-progress watchdog)
+and the multi-seed soak.
+
+The soak's core invariants:
+
+* every submitted uid ends in EXACTLY one terminal outcome
+  (finished / cancelled / rejected / deadline_expired);
+* zero leaked blocks — after drain the allocator's free list plus the
+  refcounted set partitions the pool, and every surviving refcount is
+  fully accounted for by prefix-cache entries;
+* no livelock — the engine drains within the tick budget (and the
+  watchdog is armed, so a structural wedge raises EngineStalled);
+* the injected faults in the soak plans are all *performance* faults
+  (lost allocations, stalls, dropped samples, cache misses), so greedy
+  outputs must be TOKEN-IDENTICAL to the fault-free run on the same
+  arrival trace.
+
+On an invariant failure the failing run's Perfetto trace is written to
+``results/`` so CI can upload it as an artifact and the seed replays
+locally (the whole injection schedule derives from ``(plan.seed, tick)``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ServeConfig, reduced
+from repro.configs.registry import get_config
+from repro.models.model import model_specs
+from repro.models.params import init_params
+from repro.serve.chaos import ChaosInjector, EngineStalled, FaultPlan, FaultRule
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.workload import poisson_trace, replay_trace
+from repro.telemetry.export import write_chrome_trace
+from repro.telemetry.flight import FlightRecorder
+from repro.telemetry.metrics import MetricsRegistry
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results"
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = dataclasses.replace(
+        reduced(get_config("qwen2-7b")), capacity_factor=100.0
+    )
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+BASE = ServeConfig(max_lanes=2, max_seq=64, block_size=8)
+GUARD = dataclasses.replace(BASE, numerics_guard=True, numerics_demote_after=2)
+
+_PROMPT = list(range(7, 7 + 11))  # fixed prompt for the guard-ladder tests
+
+
+def _assert_no_leaks(eng):
+    """Pool accounting after drain: free list ⊎ refcounted ids == the whole
+    usable pool, no double-frees, and every surviving reference is a
+    prefix-cache retention (or none survive at all)."""
+    alloc = eng.sched.allocator
+    if alloc is None:
+        return
+    assert alloc.tables == {}, f"leaked tables: {alloc.tables}"
+    free = alloc._free
+    assert len(free) == len(set(free)), "free-list duplicates"
+    refed = set(alloc.refcounts)
+    assert refed.isdisjoint(free), "block both free and referenced"
+    assert refed | set(free) == set(range(1, alloc.num_blocks))
+    if eng.prefix is not None:
+        cache_refs = eng.prefix._cache_refs
+        for b in refed:
+            assert alloc.refcounts[b] == cache_refs.get(b, 0), (
+                f"block {b}: refcount {alloc.refcounts[b]} not accounted "
+                f"for by cache refs {cache_refs.get(b, 0)}"
+            )
+    else:
+        assert alloc.num_used == 0
+
+
+def _assert_outcomes(eng, uids, expect="finished"):
+    for uid in uids:
+        assert eng.outcomes.get(uid) == expect, (
+            uid, eng.outcomes.get(uid))
+        assert (uid in eng.finished) == (expect == "finished")
+
+
+# ==========================================================================
+# ChaosInjector unit behaviour (no engine builds)
+# ==========================================================================
+class TestInjector:
+    def test_rule_validation(self):
+        with pytest.raises(ValueError, match="unknown chaos site"):
+            FaultRule("explode")
+        with pytest.raises(ValueError, match="rate"):
+            FaultRule("alloc_fail", rate=1.5)
+
+    def test_window_and_lane_filters(self):
+        plan = FaultPlan(rules=(
+            FaultRule("drop_sample", start_tick=5, end_tick=7, lane=1),
+        ))
+        inj = ChaosInjector(plan)
+        fired = []
+        for tick in range(1, 10):
+            inj.begin_tick(tick)
+            for lane in (0, 1):
+                if inj.fire("drop_sample", lane=lane):
+                    fired.append((tick, lane))
+        assert fired == [(5, 1), (6, 1), (7, 1)]
+        assert inj.injections == 3
+
+    def test_rate_is_deterministic_per_seed(self):
+        plan = FaultPlan(seed=11, rules=(FaultRule("alloc_fail", rate=0.4),))
+
+        def schedule():
+            inj = ChaosInjector(plan)
+            out = []
+            for tick in range(1, 40):
+                inj.begin_tick(tick)
+                # two opportunities per tick: distinct ordinals, so the
+                # rate applies per call but the schedule still replays
+                out.append((inj.fire("alloc_fail") is not None,
+                            inj.fire("alloc_fail") is not None))
+            return out
+
+        a, b = schedule(), schedule()
+        assert a == b
+        flat = [x for pair in a for x in pair]
+        assert any(flat) and not all(flat)  # rate < 1 actually gates
+        # a different seed yields a different schedule
+        other = ChaosInjector(dataclasses.replace(plan, seed=12))
+        diff = []
+        for tick in range(1, 40):
+            other.begin_tick(tick)
+            diff.append((other.fire("alloc_fail") is not None,
+                         other.fire("alloc_fail") is not None))
+        assert diff != a
+
+    def test_counts_and_flight_events(self):
+        reg = MetricsRegistry()
+        fl = FlightRecorder()
+        plan = FaultPlan(rules=(FaultRule("tick_delay"),))
+        inj = ChaosInjector(plan, flight=fl, registry=reg)
+        inj.begin_tick(3)
+        rule = inj.fire("tick_delay")
+        assert rule is not None and rule.site == "tick_delay"
+        assert inj.fire("fragment") is None  # no rule for the site
+        line = next(l for l in fl.lifelines() if l.uid == -1)
+        ev = line.events[0]
+        assert ev["kind"] == "chaos" and ev["site"] == "tick_delay"
+        assert ev["tick"] == 3
+
+    def test_engine_stalled_structure(self):
+        err = EngineStalled(tick=9, stall_ticks=4, waiting=2,
+                            active_lanes=0, parked=1,
+                            pool={"blocks_free": 0})
+        assert err.tick == 9 and err.waiting == 2
+        assert "no progress for 4 ticks" in str(err)
+
+
+# ==========================================================================
+# Recovery policies: rejection / cancellation / deadlines / watchdog
+# ==========================================================================
+def _mk_reqs(cfg, n, max_new=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(u, rng.integers(
+            3, cfg.vocab_size, int(rng.integers(5, 20))).tolist(),
+            max_new_tokens=max_new)
+        for u in range(n)
+    ]
+
+
+def test_bounded_queue_rejects_and_recovers(qwen):
+    cfg, params = qwen
+    eng = ServeEngine(cfg, params,
+                      serve=dataclasses.replace(BASE, max_queue=2))
+    reqs = _mk_reqs(cfg, 4)
+    accepted = [eng.submit(r) for r in reqs]
+    assert accepted == [True, True, False, False]
+    _assert_outcomes(eng, [2, 3], "rejected")
+    eng.run()
+    _assert_outcomes(eng, [0, 1], "finished")
+    assert eng.stats()["rejected"] == 2
+    # backpressure is advisory, not terminal: a resubmit after the queue
+    # drains is accepted and sheds the stale "rejected" outcome
+    assert eng.submit(Request(2, list(reqs[2].prompt), max_new_tokens=4))
+    eng.run()
+    _assert_outcomes(eng, [0, 1, 2], "finished")
+    _assert_no_leaks(eng)
+
+
+def test_cancel_queued_and_active(qwen):
+    cfg, params = qwen
+    eng = ServeEngine(cfg, params, serve=BASE)
+    for r in _mk_reqs(cfg, 3, max_new=8):
+        eng.submit(r)
+    # queued cancellation: uid 2 never reaches a lane
+    assert eng.cancel(2)
+    assert eng.outcomes[2] == "cancelled"
+    eng.tick()
+    eng.tick()
+    # active cancellation: uid 0 is mid-decode on a lane
+    assert any(l.req is not None and l.req.uid == 0 for l in eng.lanes)
+    assert eng.cancel(0)
+    assert all(l.req is None or l.req.uid != 0 for l in eng.lanes)
+    # unknown and already-terminal uids refuse
+    assert not eng.cancel(99)
+    assert not eng.cancel(0)
+    eng.run()
+    assert eng.outcomes == {0: "cancelled", 2: "cancelled", 1: "finished"}
+    st = eng.stats()
+    assert st["cancelled"] == 2 and st["finished"] == 1
+    _assert_no_leaks(eng)
+
+
+def test_cancel_from_on_token_callback(qwen):
+    """A client cancelling its own request from the token callback must not
+    crash the emit path (the lane is gone when the callback returns)."""
+    cfg, params = qwen
+    eng = ServeEngine(cfg, params, serve=BASE)
+    seen = []
+
+    def bail(uid, tok):
+        seen.append(tok)
+        eng.cancel(uid)
+
+    eng.submit(Request(0, _PROMPT, max_new_tokens=16, on_token=bail))
+    eng.run()
+    assert len(seen) == 1  # first token streamed, then the cancel landed
+    assert eng.outcomes == {0: "cancelled"}
+    assert 0 not in eng.finished
+    _assert_no_leaks(eng)
+
+
+def test_deadlines_expire_queued_and_seated(qwen):
+    cfg, params = qwen
+    eng = ServeEngine(cfg, params,
+                      serve=dataclasses.replace(BASE, max_lanes=1))
+    # uid 0 monopolizes the single lane; uid 1's deadline expires in the
+    # queue (waiting-branch cleanup); uid 2's budget is generous enough to
+    # outlast the backlog and finish normally.
+    eng.submit(Request(0, _PROMPT, max_new_tokens=16))
+    eng.submit(Request(1, list(_PROMPT), max_new_tokens=4, deadline_ticks=2))
+    eng.submit(Request(2, list(_PROMPT), max_new_tokens=4, deadline_ticks=60))
+    eng.run()
+    assert eng.outcomes == {
+        0: "finished", 1: "deadline_expired", 2: "finished"}
+    st = eng.stats()
+    assert st["deadline_expired"] == 1 and st["finished"] == 2
+    _assert_no_leaks(eng)
+
+
+def test_deadline_expires_mid_decode(qwen):
+    cfg, params = qwen
+    eng = ServeEngine(cfg, params, serve=BASE)
+    eng.submit(Request(0, _PROMPT, max_new_tokens=32, deadline_ticks=4))
+    eng.submit(Request(1, list(_PROMPT), max_new_tokens=4))
+    eng.run()
+    assert eng.outcomes == {0: "deadline_expired", 1: "finished"}
+    assert 0 not in eng.finished
+    assert eng.finished[1]  # the survivor is untouched
+    _assert_no_leaks(eng)
+
+
+def test_watchdog_raises_engine_stalled(qwen):
+    """An open-ended admission stall with nothing on a lane is a structural
+    wedge: the ladder has no parked blocks to reclaim and no lane to
+    preempt, so the watchdog reports instead of spinning forever."""
+    cfg, params = qwen
+    plan = FaultPlan(rules=(FaultRule("admission_stall"),))
+    eng = ServeEngine(
+        cfg, params, chaos=plan,
+        serve=dataclasses.replace(BASE, watchdog_ticks=3))
+    for r in _mk_reqs(cfg, 2):
+        eng.submit(r)
+    with pytest.raises(EngineStalled) as ei:
+        eng.run(max_ticks=50)
+    assert ei.value.waiting == 2 and ei.value.active_lanes == 0
+    assert eng.stats()["watchdog_fires"] == 1
+
+
+def test_watchdog_off_by_default(qwen):
+    """watchdog_ticks=0 (the default) never raises — the same wedge just
+    burns the tick budget, exactly the pre-chaos-harness behaviour."""
+    cfg, params = qwen
+    plan = FaultPlan(rules=(FaultRule("admission_stall"),))
+    eng = ServeEngine(cfg, params, chaos=plan, serve=BASE)
+    for r in _mk_reqs(cfg, 2):
+        eng.submit(r)
+    eng.run(max_ticks=20)
+    assert not eng.finished and eng.stats()["watchdog_fires"] == 0
+
+
+# ==========================================================================
+# Numerics-guard escalation ladder
+# ==========================================================================
+@pytest.fixture(scope="module")
+def exact_clean(qwen):
+    """Fault-free exact-mode baseline for the guard identity tests."""
+    cfg, params = qwen
+    eng = ServeEngine(cfg, params, serve=BASE)
+    eng.submit(Request(0, _PROMPT, max_new_tokens=12))
+    return eng.run()
+
+
+def test_guard_quarantine_reseed_is_exact(qwen, exact_clean):
+    """Stats-only corruption (K/V intact): the guard quarantines the lane
+    and rebuilds every (m, l, acc) row from cached K/V. In exact mode the
+    rebuilt rows ARE the uncorrupted state, so the run is token-identical
+    to the fault-free baseline."""
+    cfg, params = qwen
+    plan = FaultPlan(seed=1, rules=(
+        FaultRule("nan_stats", lane=0, start_tick=3, end_tick=3),))
+    eng = ServeEngine(cfg, params, serve=GUARD, chaos=plan)
+    eng.submit(Request(0, _PROMPT, max_new_tokens=12))
+    out = eng.run()
+    assert out == exact_clean
+    st = eng.stats()
+    assert st["quarantines"] == 1
+    assert st["demotions"] == 0  # demotion is a frozen-mode rung
+    assert st["chaos_injections"] == 1
+    _assert_no_leaks(eng)
+
+
+def test_guard_nan_logits_replay_preempts(qwen, exact_clean):
+    """Corrupted logits mean the emitted token is unrecoverable in place
+    (the per-tick landmark-sum updates make retry unsound), so the guard
+    replay-preempts: recompute from scratch, token-identical output."""
+    cfg, params = qwen
+    plan = FaultPlan(seed=2, rules=(
+        FaultRule("nan_logits", lane=0, start_tick=3, end_tick=3),))
+    eng = ServeEngine(cfg, params, serve=GUARD, chaos=plan)
+    eng.submit(Request(0, _PROMPT, max_new_tokens=12))
+    out = eng.run()
+    assert out == exact_clean
+    st = eng.stats()
+    assert st["quarantines"] == 0 and st["preemptions"] >= 1
+    _assert_no_leaks(eng)
+
+
+def test_guard_escalates_frozen_lane_to_exact(qwen):
+    """Repeat-tripping frozen lane walks the full ladder: quarantine +
+    reseed on each trip, then demotion to the exact-mode decode program
+    at numerics_demote_after trips. The request still completes."""
+    cfg, params = qwen
+    fcfg = dataclasses.replace(cfg, decode_streaming="frozen")
+    plan = FaultPlan(seed=3, rules=(
+        FaultRule("nan_stats", lane=0, start_tick=3, end_tick=4),))
+    eng = ServeEngine(fcfg, params, serve=GUARD, chaos=plan)
+    eng.submit(Request(0, _PROMPT, max_new_tokens=12))
+    out = eng.run()
+    st = eng.stats()
+    assert st["quarantines"] == 2
+    assert st["demotions"] == 1
+    assert eng.outcomes == {0: "finished"}
+    assert out[0]  # the demoted lane still streams tokens to completion
+    _assert_no_leaks(eng)
+
+
+def test_guard_off_is_silent_corruption(qwen):
+    """The repro the guard exists for: with numerics_guard=False the same
+    injected NaN stats silently poison every subsequent decode step —
+    the request 'finishes' with garbage tokens."""
+    cfg, params = qwen
+    fcfg = dataclasses.replace(cfg, decode_streaming="frozen")
+    plan = FaultPlan(seed=3, rules=(
+        FaultRule("nan_stats", lane=0, start_tick=3, end_tick=4),))
+
+    def run(serve):
+        eng = ServeEngine(fcfg, params, serve=serve, chaos=plan)
+        eng.submit(Request(0, _PROMPT, max_new_tokens=12))
+        return eng.run()
+
+    poisoned = run(BASE)
+    clean = run(dataclasses.replace(BASE, numerics_guard=True))
+    # tokens sampled before the injection window agree; the tail diverges
+    assert poisoned[0][:2] == clean[0][:2]
+    assert poisoned[0] != clean[0]
+
+
+# ==========================================================================
+# Replayability of a whole chaos run
+# ==========================================================================
+def test_chaos_run_replays_bit_identical(qwen):
+    cfg, params = qwen
+    plan = FaultPlan(seed=7, rules=(FaultRule("drop_sample", rate=0.3),))
+    trace = poisson_trace(
+        seed=7, n_requests=3, mean_interarrival_ticks=2,
+        prompt_lens=(5, 12), vocab_size=cfg.vocab_size, max_new_tokens=4,
+    )
+
+    def run():
+        eng = ServeEngine(cfg, params, serve=BASE, chaos=plan)
+        replay_trace(eng, trace, max_ticks=500)
+        return eng.finished, eng.chaos.injections
+
+    (out_a, inj_a), (out_b, inj_b) = run(), run()
+    assert out_a == out_b
+    assert inj_a == inj_b and inj_a > 0
+
+
+# ==========================================================================
+# The chaos soak: seeds x fault plans
+# ==========================================================================
+SOAK = dataclasses.replace(
+    BASE, prefix_cache=True, chunked_prefill=True, watchdog_ticks=16,
+    telemetry=True,
+)
+
+PLANS = {
+    "alloc": (FaultRule("alloc_fail", rate=0.15),
+              FaultRule("fragment", rate=0.5)),
+    "stall": (FaultRule("admission_stall", start_tick=3, end_tick=10),
+              FaultRule("tick_delay", rate=0.2, param=1e-4)),
+    "drop": (FaultRule("drop_sample", rate=0.1),),
+    "cache": (FaultRule("hash_collision", rate=0.5),
+              FaultRule("evict_storm", rate=0.25, param=2)),
+}
+
+SEEDS = tuple(range(int(os.environ.get("REPRO_CHAOS_SEEDS", "3"))))
+_CLEAN: dict[int, dict] = {}  # seed -> fault-free outputs on that trace
+
+
+def _soak_trace(cfg, seed):
+    return poisson_trace(
+        seed=seed, n_requests=6, mean_interarrival_ticks=2,
+        prompt_lens=(5, 12, 21), vocab_size=cfg.vocab_size,
+        max_new_tokens=6,
+    )
+
+
+def _clean_outputs(cfg, params, seed):
+    if seed not in _CLEAN:
+        eng = ServeEngine(cfg, params, serve=SOAK)
+        replay_trace(eng, _soak_trace(cfg, seed), max_ticks=1500)
+        assert eng.sched.idle
+        _CLEAN[seed] = dict(eng.finished)
+    return _CLEAN[seed]
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("plan_name", sorted(PLANS))
+def test_chaos_soak(qwen, seed, plan_name):
+    cfg, params = qwen
+    plan = FaultPlan(seed=seed, rules=PLANS[plan_name])
+    trace = _soak_trace(cfg, seed)
+    eng = ServeEngine(cfg, params, serve=SOAK, chaos=plan)
+    replay_trace(eng, trace, max_ticks=1500)
+    try:
+        # no livelock: the engine actually drained, not just ran out budget
+        assert eng.sched.idle, "engine failed to drain within the budget"
+        # terminal-outcome partition: nothing rejected/cancelled/expired in
+        # the soak plans, so every uid must land in exactly "finished"
+        _assert_outcomes(eng, [it.uid for it in trace], "finished")
+        # zero leaked blocks
+        _assert_no_leaks(eng)
+        # performance faults never change greedy outputs
+        assert eng.finished == _clean_outputs(cfg, params, seed)
+    except AssertionError:
+        RESULTS.mkdir(exist_ok=True)
+        path = RESULTS / f"chaos_{plan_name}_seed{seed}.trace.json"
+        write_chrome_trace(
+            str(path), eng.telemetry,
+            meta={"plan": plan_name, "seed": seed,
+                  "injections": eng.chaos.injections},
+        )
+        raise

@@ -325,6 +325,27 @@ def test_provenance_stamp():
         dataclasses.replace(BASE, max_lanes=7))
 
 
+def test_git_sha_degrades_on_hung_git(monkeypatch):
+    """A git that times out (TimeoutExpired) must degrade to $GITHUB_SHA /
+    "unknown" like every other failure mode — provenance is never the
+    reason an artifact fails to write."""
+    import subprocess
+
+    def hang(*a, **k):
+        raise subprocess.TimeoutExpired(cmd=a[0], timeout=k.get("timeout", 10))
+
+    monkeypatch.setattr(subprocess, "run", hang)
+    monkeypatch.delenv("GITHUB_SHA", raising=False)
+    git_sha.cache_clear()
+    try:
+        assert git_sha() == "unknown"
+        monkeypatch.setenv("GITHUB_SHA", "f" * 40)
+        git_sha.cache_clear()
+        assert git_sha() == "f" * 40
+    finally:
+        git_sha.cache_clear()  # don't poison the per-process cache
+
+
 # ==========================================================================
 # Perf-regression gate
 # ==========================================================================
@@ -351,6 +372,14 @@ class TestRegressGate:
             "lower", DEFAULT_WALL_TOL, 2e-3, wall=True)
         assert metric_policy("ttft_warm_speedup").direction == "higher"
         assert metric_policy("prefix_hit_rate") == Policy("both", 0.01, 0.01)
+        # chaos cell: seeded-schedule counters are pinned, the surviving
+        # goodput fraction gates like a throughput
+        assert metric_policy("chaos_injections") == Policy("both", 0.01, 0.5)
+        assert metric_policy("quarantines") == Policy("both", 0.01, 0.5)
+        assert metric_policy("goodput_frac") == Policy(
+            "higher", DEFAULT_WALL_TOL, 0.0, wall=True)
+        assert metric_policy("goodput_tok_per_s").direction == "higher"
+        assert metric_policy("goodput_tok_per_s").wall
 
     def test_identical_cells_pass(self):
         violations, compared = compare_cells(

@@ -198,6 +198,141 @@ class TestLossProperties:
         assert float(loss) < 1e-3
 
 
+class TestAllocatorInvariants:
+    """Random interleavings of allocator / prefix-cache operations must
+    preserve the pool-partition invariant: every usable block id is either
+    on the free list (exactly once) or refcounted (count >= 1), and the
+    prefix cache's ``evictable_blocks`` never promises more than a full
+    reclaim sweep can actually free."""
+
+    @staticmethod
+    def _check_partition(alloc):
+        free = alloc._free
+        assert len(free) == len(set(free)), "free-list duplicates"
+        refed = set(alloc.refcounts)
+        assert refed.isdisjoint(free)
+        assert refed | set(free) == set(range(1, alloc.num_blocks))
+        assert all(rc >= 1 for rc in alloc.refcounts.values())
+
+    @_settings
+    @given(seed=st.integers(0, 200), num_blocks=st.integers(4, 40))
+    def test_alloc_free_cow_interleaving(self, seed, num_blocks):
+        from repro.serve.paged import BlockAllocator
+
+        rng = np.random.default_rng(seed)
+        a = BlockAllocator(num_blocks, 4)
+        live: list[int] = []
+        for step in range(60):
+            op = rng.integers(4)
+            if op == 0:  # alloc a few blocks for a (maybe new) uid
+                uid = int(rng.integers(8))
+                got = a.alloc(uid, int(rng.integers(1, 4)))
+                if got is not None and uid not in live:
+                    live.append(uid)
+            elif op == 1 and live:  # free a live uid
+                uid = live.pop(int(rng.integers(len(live))))
+                a.free(uid)
+            elif op == 2 and live:  # share + cow a random slot
+                uid = live[int(rng.integers(len(live)))]
+                table = a.tables.get(uid, [])
+                if table:
+                    slot = int(rng.integers(len(table)))
+                    a.take_ref(table[slot])  # simulate a cache retention
+                    got = a.cow(uid, slot)
+                    if got is None:
+                        a.release_ref(table[slot])  # undo: pool was short
+            elif op == 3:
+                a.scramble_free(int(rng.integers(1 << 30)) + 1)
+            self._check_partition(a)
+        for uid in live:
+            a.free(uid)
+        # cache-retained blocks (taken in op 2) may survive; release them
+        for b in list(a.refcounts):
+            while b in a.refcounts:
+                a.release_ref(b)
+        self._check_partition(a)
+        assert a.num_used == 0
+
+    @_settings
+    @given(seed=st.integers(0, 200))
+    def test_defragment_preserves_contents_mapping(self, seed):
+        from repro.serve.paged import ZERO_BLOCK, BlockAllocator
+
+        rng = np.random.default_rng(seed)
+        a = BlockAllocator(33, 4)
+        for uid in range(6):
+            a.alloc(uid, int(rng.integers(1, 5)))
+        before = {u: list(t) for u, t in a.tables.items()}
+        for uid in rng.permutation(6)[:3]:
+            a.free(int(uid))
+        held = {u: list(t) for u, t in a.tables.items()}
+        mapping = a.defragment()
+        assert ZERO_BLOCK not in mapping and ZERO_BLOCK not in mapping.values()
+        # tables are remapped consistently and stay disjoint
+        seen: set = set()
+        for u, t in a.tables.items():
+            assert t == [mapping.get(b, b) for b in held[u]]
+            assert seen.isdisjoint(t)
+            seen.update(t)
+        self._check_partition(a)
+        del before
+
+    @_settings
+    @given(seed=st.integers(0, 200), nb=st.integers(8, 32))
+    def test_prefix_cache_never_overpromises(self, seed, nb):
+        """evictable_blocks() is can_alloc's promise: a full reclaim-only
+        eviction sweep must free AT LEAST that many blocks, under any
+        interleaving of inserts, live-table retentions and evictions."""
+        from repro.serve.paged import BlockAllocator, PrefixCache
+
+        rng = np.random.default_rng(seed)
+        bs = 4
+        a = BlockAllocator(nb, bs)
+        cache = PrefixCache(a)
+        next_uid = 1000
+        live: list[int] = []
+        for step in range(30):
+            op = rng.integers(3)
+            if op == 0:  # insert a random prompt as a cache entry
+                uid = next_uid
+                next_uid += 1
+                n_tok = int(rng.integers(bs, 3 * bs + 1))
+                got = a.alloc(uid, a.blocks_for_tokens(n_tok))
+                if got is None:
+                    continue
+                prompt = rng.integers(3, 1 << 20, n_tok).tolist()
+                cache.insert(prompt, a.tables[uid])
+                a.free(uid)  # entry's own refs keep the blocks resident
+            elif op == 1 and cache._entries:  # live table attaches a prefix
+                e = cache._entries[int(rng.integers(len(cache._entries)))]
+                uid = next_uid
+                next_uid += 1
+                a.attach_shared(uid, e.blocks)
+                live.append(uid)
+            elif op == 2 and live:
+                a.free(live.pop(int(rng.integers(len(live)))))
+            self._check_partition(a)
+            # static bound: the promise can never exceed the blocks whose
+            # every reference is cache-held
+            cache_only = sum(
+                1 for b, rc in a.refcounts.items()
+                if rc == cache._cache_refs.get(b, 0)
+            )
+            assert cache.evictable_blocks() <= cache_only
+        # destructive check of the promise itself: a full reclaim-only
+        # sweep frees at least evictable_blocks()
+        promised = cache.evictable_blocks()
+        free0 = a.num_free
+        while cache.evict_one(reclaim_only=True):
+            pass
+        assert a.num_free - free0 >= promised, (
+            f"promised {promised}, freed {a.num_free - free0}")
+        self._check_partition(a)
+        for uid in live:
+            a.free(uid)
+        self._check_partition(a)
+
+
 class TestCheckpointProperty:
     @_settings
     @given(seed=st.integers(0, 30))
